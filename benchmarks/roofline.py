@@ -1,0 +1,79 @@
+"""Roofline report: aggregates results/dryrun/*.json into the per-cell
+three-term table (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+# v5e constants (duplicated from repro.launch.mesh to stay import-light)
+PEAK = 197e12
+HBM = 819e9
+ICI = 150e9       # 3 links x 50 GB/s
+DCN = 6.25e9      # 25 GB/s per 4-chip host
+
+
+def model_flops(result: Dict) -> float:
+    """MODEL_FLOPS per device-step: 6*N*D train, 2*N*D decode/prefill."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.configs.registry import get_config
+    cfg = get_config(result["arch"])
+    n_active = cfg.active_param_count()
+    if result["kind"] == "train":
+        tokens = {"train_4k": 256 * 4096}.get(result["shape"], 0)
+        factor = 6.0
+    elif result["kind"] == "prefill":
+        tokens = 32 * 32768
+        factor = 2.0
+    else:
+        tokens = {"decode_32k": 128, "long_500k": 1}.get(result["shape"], 1)
+        factor = 2.0
+    return factor * n_active * tokens / result["n_devices"]
+
+
+def load_rows(pattern: str = "*.json") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            r = json.load(f)
+        hc = r["hlo_cost"]
+        compute = hc["flops"] / PEAK
+        memory = hc["bytes"] / HBM
+        coll = hc["ici_collective_bytes"] / ICI + \
+            hc["dcn_collective_bytes"] / DCN
+        mf = model_flops(r)
+        r["table"] = {
+            "cell": os.path.basename(path)[:-5],
+            "compute_ms": compute * 1e3,
+            "memory_ms": memory * 1e3,
+            "collective_ms": coll * 1e3,
+            "bottleneck": max([("compute", compute), ("memory", memory),
+                               ("collective", coll)], key=lambda kv: kv[1])[0],
+            "model_flops_ratio": mf / max(hc["flops"], 1.0),
+            "mem_gib": r["memory"]["peak_live_bytes"] / 2 ** 30,
+            "roofline_frac": compute / max(compute, memory, coll),
+        }
+        rows.append(r)
+    return rows
+
+
+def main() -> None:
+    rows = load_rows()
+    hdr = (f"{'cell':46s} {'compute':>9s} {'memory':>9s} {'collect':>9s} "
+           f"{'bound':>10s} {'MF/HLO':>7s} {'mem GiB':>8s} {'roofl%':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        t = r["table"]
+        print(f"{t['cell']:46s} {t['compute_ms']:8.1f}ms {t['memory_ms']:8.1f}ms "
+              f"{t['collective_ms']:8.1f}ms {t['bottleneck']:>10s} "
+              f"{t['model_flops_ratio']:7.2f} {t['mem_gib']:8.2f} "
+              f"{t['roofline_frac']*100:6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract). The roofline
+table (EXPERIMENTS.md §Roofline) is produced separately by
+``python -m benchmarks.roofline`` from the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import paper_figures
+    print("name,us_per_call,derived")
+    for fn in paper_figures.ALL:
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: train a small LM a few steps, then serve it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_smoke_config
+from repro.serve.engine import Request, ServeSession
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    cfg = get_smoke_config("qwen3_32b")
+    print(f"arch: {cfg.name} (reduced) — {cfg.n_layers}L d={cfg.d_model}")
+
+    opt = OptConfig(total_steps=40, warmup_steps=5, peak_lr=3e-3)
+    params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    shape = ShapeConfig("demo", "train", 64, 8, num_microbatches=2, remat=True)
+    step = jax.jit(make_train_step(cfg, shape, opt))
+
+    rng = np.random.default_rng(0)
+    print("training on synthetic tokens ...")
+    for i in range(20):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (8, 64), dtype=np.int32))
+        batch = {"tokens": toks, "labels": toks}
+        params, opt_state, m = step(params, opt_state, batch)
+        if i % 5 == 0:
+            print(f"  step {i:3d}  loss={float(m['loss']):.4f}  "
+                  f"lr={float(m['lr']):.2e}")
+
+    print("serving with continuous batching ...")
+    sess = ServeSession(params, cfg, batch_slots=2, capacity=128)
+    for rid in range(4):
+        sess.submit(Request(request_id=rid,
+                            prompt=rng.integers(0, cfg.vocab, 12,
+                                                dtype=np.int32),
+                            max_new_tokens=8))
+    for req in sess.run_to_completion():
+        print(f"  request {req.request_id}: generated {req.generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""End-to-end training driver example: staged data pipeline + checkpointed,
+fault-tolerant training of a ~100M-param LM.
+
+    PYTHONPATH=src python examples/train_lm.py --preset demo --steps 30
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+The 100m preset is the deliverable configuration (a few hundred steps on
+real hardware); `demo` shrinks it for the CPU container.
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.runtime.driver import TrainDriver
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+PRESETS = {
+    # ~100M params: 12L d=768 12H (GPT-2-small-like, llama-style blocks)
+    "100m": ModelConfig(name="lm-100m", family="dense", n_layers=12,
+                        d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+                        vocab=32000, head_dim=64,
+                        param_dtype="float32", compute_dtype="float32"),
+    "demo": ModelConfig(name="lm-demo", family="dense", n_layers=4,
+                        d_model=256, n_heads=8, n_kv_heads=4, d_ff=1024,
+                        vocab=2048, head_dim=32,
+                        param_dtype="float32", compute_dtype="float32"),
+}
+
+
+def synthetic_batches(cfg, batch, seq, seed=0):
+    """Staged input pipeline stand-in: a Zipf-ish synthetic token stream."""
+    rng = np.random.default_rng(seed)
+    while True:
+        z = rng.zipf(1.5, size=(batch, seq)).astype(np.int64)
+        toks = jnp.asarray(np.minimum(z, cfg.vocab - 1), dtype=jnp.int32)
+        yield {"tokens": toks, "labels": toks}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="demo", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a node failure at this step (restart demo)")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    n_params = cfg.param_count()
+    print(f"model {cfg.name}: ~{n_params/1e6:.0f}M params")
+    opt = OptConfig(total_steps=max(args.steps, 10),
+                    warmup_steps=max(2, args.steps // 10), peak_lr=1e-3)
+    shape = ShapeConfig("train", "train", args.seq, args.batch,
+                        num_microbatches=1, remat=True)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    store = CheckpointStore(ckpt_dir)
+    batches = synthetic_batches(cfg, args.batch, args.seq)
+
+    def build_step(mesh_spec):
+        params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+        raw_step = jax.jit(make_train_step(cfg, shape, opt))
+
+        def step_fn(state):
+            params, opt_state = state
+            params, opt_state, m = raw_step(params, opt_state, next(batches))
+            return (params, opt_state), m
+        return step_fn, (params, opt_state)
+
+    schedule = {args.fail_at: "fail"} if args.fail_at else {}
+    driver = TrainDriver(store, build_step, checkpoint_every=10,
+                         failure_schedule=schedule)
+    report = driver.run(args.steps, mesh_spec={})
+    print(f"steps={report.steps_completed} restarts={report.restarts} "
+          f"checkpoints={report.checkpoints}")
+    print(f"loss: {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

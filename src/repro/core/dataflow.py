@@ -1,0 +1,98 @@
+"""Swift-style implicitly-parallel dataflow (paper §III, Figs. 4/5).
+
+Futures + deferred task graph. Building blocks:
+  * ``Dataflow.task(fn, *deps)``  -> Future (a node in the DAG)
+  * ``Dataflow.foreach(fn, xs)``  -> list of Futures (the map phase)
+  * ``Dataflow.merge_pairwise``   -> recursive pairwise reduction (Fig. 4's
+    merge(), including the no-barrier property: merges become eligible as
+    soon as their two inputs are ready, while other maps still run)
+
+Execution is delegated to the ManyTaskEngine (simulated time + optional real
+payloads), preserving dataflow ordering.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.fabric import Fabric
+from repro.core.manytask import EngineStats, ManyTaskEngine, Task
+
+
+@dataclass
+class Future:
+    """A dataflow value: closed over by downstream tasks."""
+    task_id: int
+    graph: "Dataflow"
+
+    def result(self) -> Any:
+        if not self.graph.executed:
+            raise RuntimeError("graph not executed yet")
+        return self.graph._results[self.task_id]
+
+
+class Dataflow:
+    def __init__(self, fabric: Fabric, **engine_kw):
+        self.fabric = fabric
+        self.engine_kw = engine_kw
+        self._tasks: List[Task] = []
+        self._fns: Dict[int, Callable] = {}
+        self._results: Dict[int, Any] = {}
+        self.executed = False
+
+    # -- graph construction -------------------------------------------------
+    def task(self, fn: Callable[..., Any], *args: Any,
+             duration: Optional[float] = None,
+             inputs: Sequence[str] = ()) -> Future:
+        """Add a node. `args` may contain Futures (become dependencies)."""
+        tid = len(self._tasks)
+        deps = tuple(a.task_id for a in args if isinstance(a, Future))
+
+        def thunk(tid=tid, fn=fn, args=args):
+            concrete = [self._results[a.task_id] if isinstance(a, Future)
+                        else a for a in args]
+            out = fn(*concrete)
+            self._results[tid] = out
+            return out
+
+        self._tasks.append(Task(task_id=tid, fn=thunk, duration=duration,
+                                deps=deps, inputs=tuple(inputs)))
+        return Future(tid, self)
+
+    def foreach(self, fn: Callable[[Any], Any], xs: Sequence[Any],
+                durations: Optional[Sequence[float]] = None,
+                inputs_of: Optional[Callable[[Any], Sequence[str]]] = None
+                ) -> List[Future]:
+        """Swift `foreach`: independent, concurrent, load-balanced."""
+        futs = []
+        for i, x in enumerate(xs):
+            d = durations[i] if durations is not None else None
+            ins = tuple(inputs_of(x)) if inputs_of else ()
+            futs.append(self.task(fn, x, duration=d, inputs=ins))
+        return futs
+
+    def merge_pairwise(self, merge_fn: Callable[[Any, Any], Any],
+                       futures: Sequence[Future],
+                       duration: Optional[float] = None) -> Future:
+        """Fig. 4's recursive pairwise merge — no barrier with the map phase:
+        each merge depends only on its two inputs."""
+        level = list(futures)
+        if not level:
+            raise ValueError("nothing to merge")
+        while len(level) > 1:
+            nxt = []
+            for i in range(0, len(level) - 1, 2):
+                nxt.append(self.task(merge_fn, level[i], level[i + 1],
+                                     duration=duration))
+            if len(level) % 2:
+                nxt.append(level[-1])
+            level = nxt
+        return level[0]
+
+    # -- execution -----------------------------------------------------------
+    def run(self, n_workers: Optional[int] = None) -> EngineStats:
+        engine = ManyTaskEngine(self.fabric, n_workers=n_workers,
+                                **self.engine_kw)
+        stats = engine.run(self._tasks)
+        self.executed = True
+        return stats

@@ -1,0 +1,44 @@
+"""Leader communicator (paper §IV).
+
+Exactly one I/O rank per node forms the leader group; the remaining ranks
+never touch the shared FS during staging. Metadata is resolved by the group
+root and broadcast. In the JAX runtime this maps to "one process per host"
+(jax.process_index) doing I/O; in the simulated fabric, to Host.leader_rank.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Sequence, TypeVar
+
+from repro.core.fabric import Fabric
+
+T = TypeVar("T")
+
+
+@dataclass
+class LeaderGroup:
+    """One member per host. Root = member 0 (metadata resolution)."""
+    fabric: Fabric
+
+    @property
+    def members(self) -> List[int]:
+        return [h.leader_rank() for h in self.fabric.hosts]
+
+    @property
+    def root(self) -> int:
+        return self.members[0]
+
+    def is_leader(self, rank: int) -> bool:
+        return rank in set(self.members)
+
+    def on_root(self, fn: Callable[[], T]) -> T:
+        """Run a metadata operation once (root), conceptually broadcast."""
+        return fn()
+
+    def broadcast_time(self, nbytes: int) -> float:
+        return self.fabric.net.broadcast_time(nbytes, self.fabric.n_hosts)
+
+
+def jax_leader_process(process_index: int, processes_per_host: int = 1) -> bool:
+    """JAX-runtime analogue: is this process its host's I/O leader?"""
+    return process_index % processes_per_host == 0

@@ -1,0 +1,307 @@
+"""Sharding rules: FSDP x TP x EP (+ optional SP) over the production mesh.
+
+Strategy (MaxText-flavored, adapted per architecture — see DESIGN.md §4):
+  * TP ("model" axis): attention heads / FFN hidden / experts / vocab.
+  * FSDP ("data" axis): the complementary dim of every large matrix
+    (ZeRO-3-style; XLA inserts per-layer all-gathers in forward and
+    reduce-scatters on grads). Required to fit 72B optimizer state.
+  * DP: batch over ("pod","data") — the "pod" axis carries only gradient
+    all-reduce traffic (bulk data stays on-pod: the paper's locality
+    principle applied across pods).
+  * GQA with n_kv_heads < tp: KV projections REPLICATED over tp (Megatron
+    convention); q heads sharded.
+  * RWKV6 time-mix: r/k/w replicated over tp; v / state / output sharded on
+    the VALUE dim (the recurrence is independent across value channels).
+  * Uneven dims (vocab 92553, hubert 504) fall back to replicated.
+
+``param_pspecs(cfg, params)`` walks the param tree by path and returns a
+matching tree of PartitionSpec. Rules apply to TRAILING dims; stacked layer
+params (leading n_layers dim from scan-over-layers) get None prepended.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Mesh context plumbed through model code for activation constraints."""
+    mesh: Mesh
+    dp_axes: Tuple[str, ...] = ("data",)
+    fsdp_axis: Optional[str] = "data"
+    tp_axis: Optional[str] = "model"
+    sequence_parallel: bool = False
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis] if self.tp_axis else 1
+
+    @property
+    def dp_size(self) -> int:
+        size = 1
+        for a in self.dp_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def constrain(self, x, *spec):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+
+# a rule: (path regex, spec builder). Spec entries are logical axis names
+# resolved against the ctx; "tp*" means "tp if divisible else None".
+Rule = Tuple[str, Tuple[Optional[str], ...]]
+
+RULES: Sequence[Rule] = (
+    (r"embed/table$",                ("tp*", None)),
+    (r"^head$",                      ("fsdp*", "tp*")),
+    (r"frontend/(fc1|fc2|proj)$",    ("fsdp*", "tp*")),
+    # --- attention (GQA) ---
+    (r"attn/wq$",                    ("fsdp*", "tp*")),
+    (r"attn/w[kv]$",                 ("fsdp*", "kv*")),
+    (r"attn/wo$",                    ("tp*", "fsdp*")),
+    (r"attn/bq$",                    ("tp*",)),
+    (r"attn/b[kv]$",                 ("kv*",)),
+    # --- MLA ---
+    (r"attn/w_dkv$",                 ("fsdp*", None)),
+    (r"attn/w_u[kv]$",               ("fsdp*", "tp*")),
+    # --- dense mlp ---
+    (r"mlp/w_(gate|up)$",            ("fsdp*", "tp*")),
+    (r"mlp/w_down$",                 ("tp*", "fsdp*")),
+    # --- moe ---
+    (r"moe/router$",                 ("fsdp*", None)),
+    (r"moe/w_(gate|up)$",            ("tp*", "fsdp*", None)),
+    (r"moe/w_down$",                 ("tp*", None, "fsdp*")),
+    (r"moe/shared/w_(gate|up)$",     ("fsdp*", "tp*")),
+    (r"moe/shared/w_down$",          ("tp*", "fsdp*")),
+    # --- mamba2 (split projections; see models/mamba2.py) ---
+    (r"mixer/in_[zx]$",              ("fsdp*", "tp*")),
+    (r"mixer/in_[BC]$",              ("fsdp*", None)),
+    (r"mixer/in_dt$",                ("fsdp*", "tp*")),
+    (r"mixer/conv_x$",               (None, "tp*")),
+    (r"mixer/conv_bx$",              ("tp*",)),
+    (r"mixer/conv_[BC]$",            (None, None)),
+    (r"mixer/(dt_bias|A_log|D)$",    ("tp*",)),
+    (r"mixer/norm/scale$",           ("tp*",)),
+    (r"mixer/out_proj$",             ("tp*", "fsdp*")),
+    # --- rwkv6 ---
+    (r"mixer/w[vg]$",                ("fsdp*", "tp*")),
+    (r"mixer/w[rk]$",                ("fsdp*", None)),
+    (r"mixer/wo$",                   ("tp*", "fsdp*")),
+    (r"mixer/(decay_a|mix_a|cm_r)$", ("fsdp*", None)),
+    (r"mixer/cm_k$",                 ("fsdp*", "tp*")),
+    (r"mixer/cm_v$",                 ("tp*", "fsdp*")),
+    # --- zamba site loras ---
+    (r"loras/a_[qk]$",               ("fsdp*", None)),
+    (r"loras/b_[qk]$",               (None, "tp*")),
+)
+
+
+def _tree_paths(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    """Flatten nested dicts/namedtuples to path->leaf."""
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_tree_paths(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif hasattr(tree, "_fields"):
+        for k in tree._fields:
+            v = getattr(tree, k)
+            out.update(_tree_paths(v, f"{prefix}/{k}" if prefix else str(k)))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _resolve(axis: Optional[str], dim: int, cfg: ModelConfig,
+             ctx: ShardCtx) -> Optional[str | Tuple[str, ...]]:
+    if axis is None:
+        return None
+    starred = axis.endswith("*")
+    base = axis.rstrip("*")
+    if base == "kv":
+        # GQA kv projections: shard only if kv heads divide tp
+        name = ctx.tp_axis
+        if name is None:
+            return None
+        if cfg.n_kv_heads % ctx.tp_size != 0:
+            return None
+        base, starred = "tp", True
+    name = {"tp": ctx.tp_axis, "fsdp": ctx.fsdp_axis}.get(base, base)
+    if name is None:
+        return None
+    size = ctx.mesh.shape[name]
+    if starred and dim % size != 0:
+        return None             # uneven dim -> replicate
+    return name
+
+
+def spec_for_path(path: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                  ctx: ShardCtx) -> P:
+    for pattern, logical in RULES:
+        if re.search(pattern, path):
+            n_extra = len(shape) - len(logical)
+            resolved = tuple(
+                _resolve(a, shape[n_extra + i], cfg, ctx)
+                for i, a in enumerate(logical))
+            return P(*((None,) * n_extra + resolved))
+    return P()                   # norms, scalars, biases: replicated
+
+
+def param_pspecs(cfg: ModelConfig, params: Any, ctx: ShardCtx) -> Any:
+    """Tree of PartitionSpec matching `params` (arrays or ShapeDtypeStructs)."""
+    flat = _tree_paths(params)
+    specs = {p: spec_for_path(p, v.shape, cfg, ctx) for p, v in flat.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}" if prefix else str(k))
+                    for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(*(rebuild(getattr(tree, k),
+                                        f"{prefix}/{k}" if prefix else str(k))
+                                for k in tree._fields))
+        return specs[prefix]
+    return rebuild(params)
+
+
+def param_shardings(cfg: ModelConfig, params: Any, ctx: ShardCtx) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s),
+                        param_pspecs(cfg, params, ctx),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# input/output specs per shape kind
+# ---------------------------------------------------------------------------
+
+def batch_pspec(ctx: ShardCtx) -> P:
+    return P(ctx.dp_axes)
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardCtx
+                 ) -> Dict[str, P]:
+    """PartitionSpecs for the input dict (batch over all dp axes)."""
+    b = ctx.dp_axes if shape.global_batch % ctx.dp_size == 0 else (
+        ctx.dp_axes[0] if shape.global_batch % ctx.mesh.shape[ctx.dp_axes[0]] == 0
+        else None)
+    specs: Dict[str, P] = {}
+    if cfg.frontend.kind == "audio_frames":
+        specs["features"] = P(b, None, None)
+        specs["labels"] = P(b, None)
+        return specs
+    specs["tokens"] = P(b, None)
+    if shape.kind == "train":
+        specs["labels"] = P(b, None)
+    if cfg.frontend.kind == "vision_patches":
+        specs["image_embeds"] = P(b, None, None)
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, caches: Any, ctx: ShardCtx) -> Any:
+    """Decode caches: batch dim over dp; kv-heads/value dims over tp where
+    divisible. Cache trees are stacked (leading layer dim). batch=1
+    (long_500k) leaves the batch dim unsharded — state/cap dims carry the
+    parallelism instead."""
+    def leaf_spec(path: str, l) -> P:
+        shp = l.shape
+        if path.endswith("length"):
+            return P(*((None,) * len(shp)))
+        # stacked leading layer dim + batch next
+        b_axes = ctx.dp_axes if shp[1] % ctx.dp_size == 0 else None
+        spec: list = [None, b_axes]
+        rest = len(shp) - 2
+        trailing: list = [None] * rest
+        if ctx.tp_axis is not None and rest >= 1:
+            tp = ctx.mesh.shape[ctx.tp_axis]
+            if "shared_kv" in path or "/k" in path or "/v" in path:
+                # KV cache (layers, B, cap, n_kv, hd): shard kv heads when
+                # divisible, else split-KV (cap dim) — bounds per-device
+                # cache bytes AND parallelizes decode attention over tp.
+                # Very long contexts (>=128k) ALWAYS split-KV: the cap dim is
+                # the memory, and cap/tp beats heads/tp when batch is tiny
+                # (zamba2 long_500k: 12.2 -> 0.8 GiB/device).
+                long_ctx = rest >= 2 and shp[2] >= 131072
+                if rest >= 2 and shp[3] % tp == 0 and not long_ctx:
+                    trailing[1] = ctx.tp_axis
+                elif shp[2] % tp == 0:
+                    trailing[0] = ctx.tp_axis
+            elif path.endswith("/h"):
+                # ssm state (layers,B,G,HG,P,N): shard HG
+                if shp[3] % tp == 0:
+                    trailing[1] = ctx.tp_axis
+            elif path.endswith("/s"):
+                # rwkv state (layers,B,H,Nk,Nv): shard value dim
+                if shp[-1] % tp == 0:
+                    trailing[-1] = ctx.tp_axis
+            elif path.endswith("/conv"):
+                if shp[-1] % tp == 0:
+                    trailing[-1] = ctx.tp_axis
+        return P(*(spec + trailing))
+
+    flat = _tree_paths(caches)
+    specs = {p: leaf_spec(p, l) for p, l in flat.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}" if prefix else str(k))
+                    for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(*(rebuild(getattr(tree, k),
+                                        f"{prefix}/{k}" if prefix else str(k))
+                                for k in tree._fields))
+        return specs[prefix]
+    return rebuild(caches)
+
+
+def make_ctx(mesh: Mesh, sequence_parallel: bool = False) -> ShardCtx:
+    axes = tuple(mesh.axis_names)
+    if "pod" in axes:
+        dp = ("pod", "data")
+    else:
+        dp = ("data",)
+    return ShardCtx(mesh=mesh, dp_axes=dp, fsdp_axis="data", tp_axis="model",
+                    sequence_parallel=sequence_parallel)
+
+
+# ---------------------------------------------------------------------------
+# explicit FSDP weight prefetch
+# ---------------------------------------------------------------------------
+
+def fsdp_gather(subtree: Any, cfg: ModelConfig, ctx: Optional[ShardCtx],
+                prefix: str = "") -> Any:
+    """Constrain every weight in `subtree` to its rule spec with the fsdp
+    axis REMOVED (i.e. all-gathered over data at point of use).
+
+    GSPMD's einsum handler sometimes reshards activations (hundreds of MB)
+    instead of gathering the much smaller fsdp-sharded weight; this makes the
+    ZeRO-3 prefetch explicit: weights arrive via a param-sized all-gather in
+    forward (and its transpose reduce-scatters the grads).
+    """
+    if ctx is None or ctx.fsdp_axis is None:
+        return subtree
+    no_fsdp = ShardCtx(mesh=ctx.mesh, dp_axes=ctx.dp_axes, fsdp_axis=None,
+                       tp_axis=ctx.tp_axis,
+                       sequence_parallel=ctx.sequence_parallel)
+
+    def walk(tree, pfx):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{pfx}/{k}" if pfx else str(k))
+                    for k, v in tree.items()}
+        if hasattr(tree, "_fields"):
+            return type(tree)(*(walk(getattr(tree, k),
+                                     f"{pfx}/{k}" if pfx else str(k))
+                                for k in tree._fields))
+        if getattr(tree, "ndim", 0) >= 2:
+            spec = spec_for_path(pfx, tree.shape, cfg, no_fsdp)
+            return jax.lax.with_sharding_constraint(
+                tree, NamedSharding(ctx.mesh, spec))
+        return tree
+    return walk(subtree, prefix)

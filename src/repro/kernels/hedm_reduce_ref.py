@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the HEDM stage-1 reduction kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _neighborhood(img):
+    H, W = img.shape
+    padded = jnp.pad(img, 1, mode="edge")
+    return jnp.stack([jax.lax.dynamic_slice(padded, (di, dj), (H, W))
+                      for di in range(3) for dj in range(3)])
+
+
+def reference(frames, dark, threshold: float = 100.0):
+    """frames: (F,H,W); dark: (H,W). Returns (mask uint8, counts int32)."""
+    def one(img):
+        img = jnp.maximum(img.astype(jnp.float32) - dark.astype(jnp.float32),
+                          0.0)
+        med = jnp.median(_neighborhood(img), axis=0)
+        n = _neighborhood(med)
+        lap = 8.0 * n[4] - (n[0] + n[1] + n[2] + n[3] + n[5] + n[6] + n[7]
+                            + n[8])
+        mask = (lap > threshold) & (med > threshold * 0.5)
+        return mask.astype(jnp.uint8), jnp.sum(mask.astype(jnp.int32))
+
+    masks, counts = jax.vmap(one)(frames)
+    return masks, counts

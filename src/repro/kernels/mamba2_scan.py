@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the chunked Mamba2 SSD scan.
+
+Grid: (B*H, num_chunks) — the chunk axis is the minor (sequential) grid
+dimension, so the per-head SSM state lives in a VMEM scratch that persists
+across chunk iterations (TPU grid revisiting semantics); it is reset at
+chunk 0 and written out at the last chunk.
+
+Per program (head h of batch b, chunk c):
+  VMEM tiles: x (Q,P), dt (Q,), B/C (Q,N), state (P,N) f32.
+  intra-chunk: masked decay-weighted (Q x Q) matmul (MXU);
+  inter-chunk:  y += exp(cum) * (C @ h^T); h = exp(cum_Q) h + x^T @ (B.dt.decay)
+
+Defaults Q=128, N=64, P=64: tiles are MXU-aligned (128x64, 64x64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, h_out_ref, h_scratch,
+            *, nc: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0].astype(jnp.float32)                     # (Q,P)
+    dt = dt_ref[0].astype(jnp.float32)                   # (Q,)
+    A = a_ref[0].astype(jnp.float32)                     # (1,) scalar
+    Bm = b_ref[0].astype(jnp.float32)                    # (Q,N)
+    Cm = c_ref[0].astype(jnp.float32)                    # (Q,N)
+    Q = x.shape[0]
+
+    a = dt * A                                           # (Q,) log-decay
+    cum = jnp.cumsum(a)
+    diff = cum[:, None] - cum[None, :]                   # (Q,Q)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    lmat = jnp.where(mask, jnp.exp(diff), 0.0)
+    gmat = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (Q,Q)
+    m = gmat * lmat * dt[None, :]
+    y = jax.lax.dot_general(m, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)     # (Q,P)
+    # carried-state contribution: (Q,N) @ (N,P)
+    h = h_scratch[...]
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # state update: h' = exp(cum_Q) h + x^T @ (B * dt * decay_to_end)
+    decay_end = jnp.exp(cum[-1] - cum) * dt              # (Q,)
+    bw = Bm * decay_end[:, None]                         # (Q,N)
+    upd = jax.lax.dot_general(x, bw, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)   # (P,N)
+    h_scratch[...] = h * jnp.exp(cum[-1]) + upd
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    @pl.when(c_idx == nc - 1)
+    def _fin():
+        h_out_ref[0] = h_scratch[...]
+
+
+def mamba2_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int = 128, interpret: bool = True):
+    """x: (B,L,H,P); dt: (B,L,H); A: (H,); Bm/Cm: (B,L,G,N) with G|H.
+    Returns (y (B,L,H,P), h_final (B,H,P,N))."""
+    B, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    HG = H // G
+    Q = min(chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, L, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, L)
+    af = jnp.tile(A, B).reshape(B * H, 1)
+    bf = Bm.transpose(0, 2, 1, 3).reshape(B * G, L, N)
+    cf = Cm.transpose(0, 2, 1, 3).reshape(B * G, L, N)
+
+    def bc_map(bh, c):
+        return ((bh // H) * G + (bh % H) // HG, c, 0)
+
+    y, h_final = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        out_shape=(jax.ShapeDtypeStruct((B * H, L, P), x.dtype),
+                   jax.ShapeDtypeStruct((B * H, P, N), jnp.float32)),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, Q), lambda bh, c: (bh, c)),
+            pl.BlockSpec((1, 1), lambda bh, c: (bh, 0)),
+            pl.BlockSpec((1, Q, N), bc_map),
+            pl.BlockSpec((1, Q, N), bc_map),
+        ],
+        out_specs=(pl.BlockSpec((1, Q, P), lambda bh, c: (bh, c, 0)),
+                   pl.BlockSpec((1, P, N), lambda bh, c: (bh, 0, 0))),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+    return (y.reshape(B, H, L, P).transpose(0, 2, 1, 3),
+            h_final.reshape(B, H, P, N))

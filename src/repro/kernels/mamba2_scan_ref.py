@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Mamba2 SSD kernel (naive recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference(x, dt, A, Bm, Cm):
+    """x: (B,L,H,P); dt: (B,L,H); A: (H,); Bm/Cm: (B,L,G,N).
+    Returns (y, h_final (B,H,P,N))."""
+    B, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    HG = H // G
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    group = jnp.arange(H) // HG
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                    # (B,H,P),(B,H),(B,G,N)x2
+        bt_h = bt[:, group]                      # (B,H,N)
+        ct_h = ct[:, group]
+        da = jnp.exp(dtt * A)                    # (B,H)
+        h = h * da[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt_h)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct_h)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

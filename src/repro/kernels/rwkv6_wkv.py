@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for the chunked RWKV6 WKV recurrence.
+
+Grid: (B*H, num_chunks) with the chunk axis sequential; the (N,N) per-head
+state is a VMEM f32 scratch carried across chunks (reset at chunk 0,
+emitted at the last chunk).
+
+Per program: r/k/v/w chunk tiles (Q,N) in VMEM. The intra-chunk pairwise
+decay tensor (Q,Q,N) is materialized per chunk only (Q=32, N=64 -> 256 KB),
+exactly the tile the XLA fallback streams (models/rwkv6.wkv_chunked).
+Decay stays in log space until the final exp (stability: all exponents <=0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref, s_scratch,
+            *, nc: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        s_scratch[...] = jnp.zeros_like(s_scratch)
+
+    r = r_ref[0].astype(jnp.float32)                     # (Q,N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                     # (N,)
+    Q, N = r.shape
+
+    lw = jnp.log(jnp.maximum(w, 1e-20))
+    lcum = jnp.cumsum(lw, axis=0)                        # (Q,N) inclusive
+    lprev = lcum - lw                                    # exclusive
+
+    # intra-chunk: pair[q,j,i] = exp(lprev_q - lcum_j)_i for j < q (<=0: safe)
+    diff = lprev[:, None, :] - lcum[None, :, :]          # (Q,Q,N)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    pair = jnp.where(mask[..., None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("qi,qji,ji->qj", r, pair, k,
+                        preferred_element_type=jnp.float32)
+    o = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)     # (Q,N)
+    # current-step bonus
+    bonus = jnp.sum(r * u[None, :] * k, axis=1)          # (Q,)
+    o = o + bonus[:, None] * v
+    # carried state: o += (r * exp(lprev)) @ S
+    s = s_scratch[...]
+    o = o + jax.lax.dot_general(r * jnp.exp(lprev), s,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # state update: S' = diag(exp(lcum_Q)) S + (k * decay_to_end)^T @ v
+    decay_end = jnp.exp(lcum[-1][None, :] - lcum)        # (Q,N)
+    upd = jax.lax.dot_general(k * decay_end, v, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)   # (N,N)
+    s_scratch[...] = s * jnp.exp(lcum[-1])[:, None] + upd
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    @pl.when(c_idx == nc - 1)
+    def _fin():
+        s_out_ref[0] = s_scratch[...]
+
+
+def rwkv6_wkv(r, k, v, w, u, chunk: int = 32, interpret: bool = True):
+    """r/k/v/w: (B,L,H,N); u: (H,N). Returns (out (B,L,H,N), s (B,H,N,N))."""
+    B, L, H, N = r.shape
+    Q = min(chunk, L)
+    while L % Q:
+        Q -= 1
+    nc = L // Q
+    flat = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, L, N)
+    uf = jnp.tile(u, (B, 1)).reshape(B * H, N)
+
+    out, s_final = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        out_shape=(jax.ShapeDtypeStruct((B * H, L, N), r.dtype),
+                   jax.ShapeDtypeStruct((B * H, N, N), jnp.float32)),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, N), lambda bh, c: (bh, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, Q, N), lambda bh, c: (bh, c, 0)),
+                   pl.BlockSpec((1, N, N), lambda bh, c: (bh, 0, 0))),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(flat(r), flat(k), flat(v), flat(w), uf)
+    return (out.reshape(B, H, L, N).transpose(0, 2, 1, 3),
+            s_final.reshape(B, H, N, N))

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the WKV6 kernel (naive per-step recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference(r, k, v, w, u):
+    """r/k/v/w: (B,L,H,N); u: (H,N). Returns (out, s_final (B,H,N,N))."""
+    B, L, H, N = r.shape
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        o = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+               for t in (r, k, v, w))
+    s, os_ = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(os_, 0, 1).astype(r.dtype), s

@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh ((16,16) and/or (2,16,16)),
+  2. eval_shape's params / optimizer / caches (ShapeDtypeStruct — nothing is
+     allocated),
+  3. jits the real step function (train_step / prefill_step / decode_step)
+     with the FSDPxTPxEP shardings from repro.distributed.sharding,
+  4. .lower().compile() — any sharding mismatch, OOM-at-compile, or
+     unsupported collective fails here,
+  5. records memory_analysis() + HLO-derived cost terms (FLOPs, HBM bytes,
+     ICI/DCN collective bytes — scan bodies scaled by trip count) into
+     results/dryrun/<cell>.json for the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.configs.registry import (ARCH_IDS, all_cells, canonical,
+                                    get_config, supported_shapes)
+from repro.distributed import hlo_cost
+from repro.distributed.sharding import (ShardCtx, cache_pspecs, input_pspecs,
+                                        make_ctx, param_pspecs)
+from repro.launch import mesh as mesh_mod
+from repro.models import model as M
+from repro.serve import engine as serve_engine
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# grad-accumulation microbatches per arch for train_4k (fits 16 GB HBM)
+ARCH_MICROBATCH = {
+    "qwen2_72b": 16,
+    "qwen3_32b": 8,
+    "internlm2_20b": 4,
+    "zamba2_7b": 4,
+    "qwen3_moe_30b_a3b": 4,
+    "deepseek_v2_lite_16b": 4,
+    "h2o_danube3_4b": 2,
+    "internvl2_2b": 2,
+    "hubert_xlarge": 2,
+    "rwkv6_3b": 4,
+}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    specs: Dict[str, Any] = {}
+    fe = cfg.frontend
+    if fe.kind == "audio_frames":
+        specs["features"] = jax.ShapeDtypeStruct((B, S, fe.feature_dim),
+                                                 jnp.bfloat16)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return specs
+    if fe.kind == "vision_patches":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S - fe.num_prefix_tokens),
+                                               i32)
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, fe.num_prefix_tokens, fe.feature_dim), jnp.bfloat16)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct(
+                (B, S - fe.num_prefix_tokens), i32)
+        return specs
+    specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return specs
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               sequence_parallel: bool = False,
+               compress_dcn: bool = False):
+    """Build and lower one cell. Returns (lowered, meta dict)."""
+    arch = canonical(arch)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        shape = ShapeConfig(shape.name, shape.kind, shape.seq_len,
+                            shape.global_batch,
+                            num_microbatches=ARCH_MICROBATCH.get(arch, 1),
+                            remat=True)
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh, sequence_parallel=sequence_parallel)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    params_shape = jax.eval_shape(
+        functools.partial(M.init_model, cfg=cfg), jax.random.PRNGKey(0))
+    pspecs = param_pspecs(cfg, params_shape, ctx)
+    param_sh = _shardings(pspecs, mesh)
+    ins = input_specs(cfg, shape)
+    in_specs = input_pspecs(cfg, shape, ctx)
+
+    if shape.kind == "train":
+        opt = OptConfig()
+        opt_shape = jax.eval_shape(init_opt_state, params_shape)
+        opt_pspecs = {"step": P(), "master": pspecs, "m": pspecs, "v": pspecs}
+        if compress_dcn:
+            opt_shape["dcn_error"] = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                params_shape)
+            opt_pspecs["dcn_error"] = pspecs
+        opt_sh = _shardings(opt_pspecs, mesh)
+        step = make_train_step(cfg, shape, opt, ctx=ctx,
+                               compress_dcn=compress_dcn)
+        jitted = jax.jit(
+            step,
+            in_shardings=(param_sh, opt_sh, _shardings(in_specs, mesh)),
+            donate_argnums=(0, 1))
+        lowered = jitted.lower(params_shape, opt_shape, ins)
+    elif shape.kind == "prefill":
+        def pf(params, inputs):
+            return serve_engine.prefill_step(params, cfg, inputs,
+                                             capacity=shape.seq_len, ctx=ctx)
+        jitted = jax.jit(pf, in_shardings=(param_sh,
+                                           _shardings(in_specs, mesh)))
+        lowered = jitted.lower(params_shape, ins)
+    else:  # decode
+        caches_shape = jax.eval_shape(
+            functools.partial(M.init_decode_state, cfg,
+                              shape.global_batch, shape.seq_len))
+        c_pspecs = cache_pspecs(cfg, caches_shape, ctx)
+        tok_spec = in_specs["tokens"]
+
+        def dc(params, tokens, caches):
+            return M.decode_step(params, cfg, tokens, caches)
+        jitted = jax.jit(
+            dc,
+            in_shardings=(param_sh,
+                          NamedSharding(mesh, tok_spec),
+                          _shardings(c_pspecs, mesh)),
+            donate_argnums=(2,))
+        lowered = jitted.lower(params_shape, ins["tokens"], caches_shape)
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "multi_pod": multi_pod, "n_devices": int(np.prod(list(
+            mesh.shape.values()))),
+        "num_microbatches": shape.num_microbatches,
+        "sequence_parallel": sequence_parallel,
+        "compress_dcn": compress_dcn,
+    }
+    return lowered, meta
+
+
+def analyze(lowered, meta: Dict) -> Dict:
+    """compile() + collect memory/cost/collective accounting."""
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    txt = compiled.as_text()
+    cost = hlo_cost.analyze_hlo_text(
+        txt, meta["n_devices"], n_pods=2 if meta["multi_pod"] else 1)
+    out = dict(meta)
+    out.update({
+        "compile_seconds": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_live_bytes": (mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                - mem.alias_size_in_bytes),
+        },
+        "xla_cost": {"flops": ca.get("flops", 0.0),
+                     "bytes": ca.get("bytes accessed", 0.0)},
+        "hlo_cost": {
+            "flops": cost.flops,
+            "bytes": cost.bytes,
+            "ici_collective_bytes": cost.ici_collective_bytes,
+            "dcn_collective_bytes": cost.dcn_collective_bytes,
+            "collectives": dict(cost.collective_breakdown),
+        },
+    })
+    return out
+
+
+def roofline_terms(result: Dict) -> Dict:
+    """The three roofline terms (seconds) for one compiled cell."""
+    hc = result["hlo_cost"]
+    compute = hc["flops"] / mesh_mod.PEAK_FLOPS_BF16
+    memory = hc["bytes"] / mesh_mod.HBM_BW
+    ici = hc["ici_collective_bytes"] / (mesh_mod.ICI_BW_PER_LINK
+                                        * mesh_mod.ICI_LINKS)
+    dcn = hc["dcn_collective_bytes"] / (mesh_mod.DCN_BW_PER_HOST / 4)
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": ici + dcn, "ici_s": ici, "dcn_s": dcn,
+            "bottleneck": max(
+                [("compute", compute), ("memory", memory),
+                 ("collective", ici + dcn)], key=lambda kv: kv[1])[0]}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, **kw) -> Dict:
+    arch = canonical(arch)
+    tag = f"{arch}.{shape_name}.{'multipod' if multi_pod else 'pod'}"
+    for flag in ("sequence_parallel", "compress_dcn"):
+        if kw.get(flag):
+            tag += f".{flag}"
+    print(f"=== {tag} ===", flush=True)
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod, **kw)
+    print(f"  lowered in {time.time()-t0:.1f}s", flush=True)
+    result = analyze(lowered, meta)
+    result["roofline"] = roofline_terms(result)
+    mem_gb = result["memory"]["peak_live_bytes"] / 2**30
+    r = result["roofline"]
+    print(f"  compiled in {result['compile_seconds']}s | "
+          f"mem/device={mem_gb:.2f} GiB | "
+          f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+          f"collective={r['collective_s']*1e3:.2f}ms -> {r['bottleneck']}",
+          flush=True)
+    if mem_gb > mesh_mod.HBM_PER_CHIP / 2**30:
+        print(f"  WARNING: exceeds {mesh_mod.HBM_PER_CHIP/2**30:.0f} GiB HBM",
+              flush=True)
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--sequence-parallel", action="store_true")
+    ap.add_argument("--compress-dcn", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.single_pod or not args.multi_pod:
+        meshes.append(False)
+    if args.multi_pod or not args.single_pod:
+        meshes.append(True)
+
+    if args.all:
+        cells = all_cells()
+    else:
+        arch = args.arch or ARCH_IDS[0]
+        shapes = [args.shape] if args.shape else supported_shapes(
+            get_config(arch))
+        cells = [(arch, s) for s in shapes]
+
+    failures = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape_name, mp,
+                         sequence_parallel=args.sequence_parallel,
+                         compress_dcn=args.compress_dcn)
+            except Exception as e:
+                failures.append((arch, shape_name, mp, repr(e)))
+                print(f"  FAILED: {e}", flush=True)
+                traceback.print_exc()
+    print(f"\n{len(cells)*len(meshes)-len(failures)} ok, "
+          f"{len(failures)} failed")
+    for f in failures:
+        print("  FAIL:", f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

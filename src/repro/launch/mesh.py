@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single-pod: (16,16) = 256 v5e chips, axes
+("data","model"). Multi-pod: (2,16,16) = 512 chips, axes ("pod","data",
+"model") — the pod axis carries only gradient reduction (DCN).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this)")
+    import numpy as np
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh over the first prod(shape) devices (tests, elastic)."""
+    import numpy as np
+    n = int(np.prod(shape))
+    dev_array = np.asarray(jax.devices()[:n]).reshape(tuple(shape))
+    return jax.sharding.Mesh(dev_array, tuple(axes))
+
+
+# v5e hardware constants (per chip) — used by the roofline
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s/link (~3 usable links per v5e chip)
+ICI_LINKS = 3
+DCN_BW_PER_HOST = 25e9          # bytes/s across pods (per host of 4 chips)
+HBM_PER_CHIP = 16 << 30         # bytes

@@ -1,0 +1,459 @@
+"""Attention: GQA (qk-norm, qkv-bias, sliding-window, bidirectional) and MLA.
+
+Two execution paths:
+  * XLA reference path (this file): grouped einsum formulation, used for the
+    512-device AOT dry-run and CPU smoke tests. Grouped (repeat-free) einsums
+    keep HLO FLOPs honest for GQA.
+  * Pallas flash kernels (repro.kernels.flash_attention): the TPU deployment
+    path, validated in interpret mode against this reference.
+
+Decode uses a fixed-capacity KV cache written with dynamic_update_slice;
+MLA decode uses the absorbed-matrix form so the cache holds only the latent
+(c_kv, k_rope) — the technique's entire point.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, apply_rope, dense_init, rmsnorm_nohead
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Fixed-capacity decode cache. For MLA, k holds c_kv and v holds k_rope.
+
+    `length` is PER-SLOT (B,) so continuous batching can mix requests at
+    different positions in one decode batch."""
+    k: jax.Array          # (B, cap, n_kv, head_dim)   | MLA: (B, cap, kv_lora)
+    v: jax.Array          # (B, cap, n_kv, v_dim)      | MLA: (B, cap, rope_dim)
+    length: jax.Array     # (B,) int32 — tokens currently in each slot
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    if cfg.attention == "mla":
+        return _init_mla(key, cfg, dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(k1, d, nh * hd, dtype),
+        "wk": dense_init(k2, d, nkv * hd, dtype),
+        "wv": dense_init(k3, d, nkv * hd, dtype),
+        "wo": dense_init(k4, nh * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _init_mla(key, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.mla
+    d, nh = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(k1, d, nh * qk_dim, dtype),
+        # joint down-projection: latent kv + shared rope key
+        "w_dkv": dense_init(k2, d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_uk": dense_init(k3, m.kv_lora_rank, nh * m.qk_nope_head_dim, dtype),
+        "w_uv": dense_init(k4, m.kv_lora_rank, nh * m.v_head_dim, dtype),
+        "wo": dense_init(k5, nh * m.v_head_dim, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def attention_bias(q_len: int, kv_len: int, *, causal: bool,
+                   window: int, q_offset: Any = 0) -> jax.Array:
+    """(q_len, kv_len) additive bias in fp32. q_offset: absolute position of
+    query 0 (scalar or traced int) — used for decode and blocked prefill."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    ok = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# grouped scaled-dot-product attention (GQA, repeat-free)
+# ---------------------------------------------------------------------------
+
+def grouped_sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+                 bias: Optional[jax.Array], scale: float) -> jax.Array:
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd) with H = KV*G. Returns (B,S,H,hd).
+
+    Grouped einsum avoids materializing repeated K/V heads, so compiled FLOPs
+    reflect the true GQA cost.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    # f32-ACCUMULATING dot (not a post-cast): avoids operand converts that
+    # XLA hoists out of scan loops as whole-stack f32 copies of the KV cache
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if bias is not None:
+        scores = scores + bias          # bias broadcasts over (b,k,g)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(params: Params, cfg: ModelConfig, x: jax.Array,
+                 positions: jax.Array, ctx=None):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    k = jnp.einsum("bsd,de->bse", x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_nohead(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm_nohead(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if ctx is not None and ctx.tp_axis:
+        if cfg.n_heads % ctx.tp_size == 0:
+            q = ctx.constrain(q, ctx.dp_axes, None, ctx.tp_axis, None)
+        if cfg.n_kv_heads % ctx.tp_size == 0:
+            k = ctx.constrain(k, ctx.dp_axes, None, ctx.tp_axis, None)
+            v = ctx.constrain(v, ctx.dp_axes, None, ctx.tp_axis, None)
+    return q, k, v
+
+
+def attention(params: Params, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, *, window: Optional[int] = None,
+              kernel_fn=None, ctx=None) -> jax.Array:
+    """Full-sequence attention (train / prefill). x: (B,S,D)."""
+    if cfg.attention == "mla":
+        return mla_attention(params, cfg, x, positions, ctx=ctx)
+    hd = cfg.resolved_head_dim
+    win = cfg.sliding_window if window is None else window
+    q, k, v = _project_qkv(params, cfg, x, positions, ctx)
+    if (ctx is not None and ctx.tp_axis
+            and cfg.n_kv_heads % ctx.tp_size != 0
+            and cfg.n_heads % ctx.tp_size == 0):
+        # GQA with kv_heads < tp: repeat KV to full heads so the attention
+        # computation shards over q-heads (Megatron kv-replication).
+        G = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        k = ctx.constrain(k, ctx.dp_axes, None, ctx.tp_axis, None)
+        v = ctx.constrain(v, ctx.dp_axes, None, ctx.tp_axis, None)
+    scale = hd ** -0.5
+    if kernel_fn is not None:
+        out = kernel_fn(q, k, v, causal=cfg.causal, window=win, scale=scale)
+    elif x.shape[1] >= BLOCKED_THRESHOLD:
+        out = blocked_grouped_sdpa(q, k, v, causal=cfg.causal, window=win,
+                                   scale=scale)
+    else:
+        bias = attention_bias(x.shape[1], x.shape[1], causal=cfg.causal,
+                              window=win)
+        out = grouped_sdpa(q, k, v, bias, scale)
+    B, S = x.shape[:2]
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, cfg.n_heads * hd),
+                      params["wo"])
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int) -> KVCache:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    if cfg.attention == "mla":
+        m = cfg.mla
+        return KVCache(
+            k=jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+            v=jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype),
+            length=jnp.zeros((batch,), jnp.int32),
+        )
+    cap = min(capacity, cfg.sliding_window) if cfg.sliding_window else capacity
+    return KVCache(
+        k=jnp.zeros((batch, cap, cfg.n_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, cap, cfg.n_kv_heads, hd), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def decode_attention(params: Params, cfg: ModelConfig, x: jax.Array,
+                     cache: KVCache) -> Tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B,1,D). Returns (out (B,1,D), new cache).
+
+    Sliding-window archs use a ring buffer of size `window`; full attention
+    uses absolute slots. Cache k/v hold *post-rope* keys.
+    """
+    if cfg.attention == "mla":
+        return mla_decode(params, cfg, x, cache)
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    pos = cache.length                                   # (B,) int32
+    positions = pos[:, None]                             # (B,1)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    cap = cache.k.shape[1]
+    slot = pos % cap if cfg.sliding_window else pos      # (B,)
+    b_idx = jnp.arange(B)
+    new_k = cache.k.at[b_idx, slot].set(k[:, 0].astype(cache.k.dtype))
+    new_v = cache.v.at[b_idx, slot].set(v[:, 0].astype(cache.v.dtype))
+    # validity mask over cache slots, per batch row
+    slots = jnp.arange(cap)[None, :]                     # (1, cap)
+    if cfg.sliding_window:
+        valid = slots < jnp.minimum(pos + 1, cap)[:, None]  # ring valid count
+    else:
+        valid = slots <= pos[:, None]
+    # (B,cap) -> broadcast over (b, kv, g, q=1, t=cap)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    bias = bias[:, None, None, None, :]
+    out = grouped_sdpa(q, new_k.astype(q.dtype), new_v.astype(q.dtype),
+                       bias, hd ** -0.5)
+    out = jnp.einsum("bse,ed->bsd", out.reshape(B, 1, cfg.n_heads * hd),
+                     params["wo"])
+    return out, KVCache(new_k, new_v, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def _mla_q(params: Params, cfg: ModelConfig, x: jax.Array, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(B, S, cfg.n_heads, qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(params: Params, cfg: ModelConfig, x: jax.Array, positions):
+    """Down-project to (c_kv, k_rope); k_rope is shared across heads."""
+    m = cfg.mla
+    dkv = jnp.einsum("bsd,de->bse", x, params["w_dkv"])
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm_nohead(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(params: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, ctx=None) -> jax.Array:
+    """Prefill/train MLA: decompress per-head keys/values (FLOP-favorable for
+    long sequences vs absorbed form when S >> ranks)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_latent(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,re->bse", c_kv, params["w_uk"]) \
+        .reshape(B, S, H, m.qk_nope_head_dim)
+    v = jnp.einsum("bsr,re->bse", c_kv, params["w_uv"]) \
+        .reshape(B, S, H, m.v_head_dim)
+    if ctx is not None and ctx.tp_axis and H % ctx.tp_size == 0:
+        q_nope = ctx.constrain(q_nope, ctx.dp_axes, None, ctx.tp_axis, None)
+        k_nope = ctx.constrain(k_nope, ctx.dp_axes, None, ctx.tp_axis, None)
+        v = ctx.constrain(v, ctx.dp_axes, None, ctx.tp_axis, None)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    if S >= BLOCKED_THRESHOLD:
+        out = blocked_mla_core(q_nope, q_rope, k_nope, k_rope, v, scale)
+    else:
+        scores = (jnp.einsum("bshe,bthe->bhst", q_nope, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshe,bte->bhst", q_rope, k_rope,
+                               preferred_element_type=jnp.float32)) * scale
+        bias = attention_bias(S, S, causal=cfg.causal, window=0)
+        probs = jax.nn.softmax(scores + bias, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthe->bshe", probs, v)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"])
+
+
+def mla_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+               cache: KVCache) -> Tuple[jax.Array, KVCache]:
+    """Absorbed-form decode: cache holds only (c_kv, k_rope) — (r + rope_dim)
+    per token instead of 2*H*hd. Score = (q_nope W_uk) c_kv + q_rope k_rope."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    pos = cache.length                                          # (B,)
+    positions = pos[:, None]
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)          # (B,1,H,·)
+    c_kv, k_rope = _mla_latent(params, cfg, x, positions)       # (B,1,r),(B,1,rope)
+    b_idx = jnp.arange(B)
+    new_c = cache.k.at[b_idx, pos].set(c_kv[:, 0].astype(cache.k.dtype))
+    new_r = cache.v.at[b_idx, pos].set(k_rope[:, 0].astype(cache.v.dtype))
+    cap = new_c.shape[1]
+    # absorb W_uk into q:   q_abs (B,H,r)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bhe,rhe->bhr", q_nope[:, 0], w_uk)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bhr,btr->bht", q_abs, new_c.astype(q_abs.dtype),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhe,bte->bht", q_rope[:, 0],
+                           new_r.astype(q_abs.dtype),
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(cap)[None, :] <= pos[:, None]            # (B,cap)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bht,btr->bhr", probs.astype(new_c.dtype), new_c)  # latent ctx
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhe->bhe", ctx, w_uv).reshape(B, 1, H * m.v_head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"])
+    return out, KVCache(new_c, new_r, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence attention that also populates a decode cache
+# ---------------------------------------------------------------------------
+
+def attention_prefill(params: Params, cfg: ModelConfig, x: jax.Array,
+                      positions: jax.Array, capacity: int, ctx=None
+                      ) -> Tuple[jax.Array, KVCache]:
+    """Like attention(), but returns the populated KV cache for decode.
+    Handles full, sliding-window (ring layout), and MLA (latent) caches."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dtype = jnp.dtype(cfg.compute_dtype)
+    lengths = jnp.full((B,), S, jnp.int32)
+    if cfg.attention == "mla":
+        m = cfg.mla
+        out = mla_attention(params, cfg, x, positions, ctx=ctx)
+        c_kv, k_rope = _mla_latent(params, cfg, x, positions)
+        ck = jnp.zeros((B, capacity, m.kv_lora_rank), dtype)
+        kr = jnp.zeros((B, capacity, m.qk_rope_head_dim), dtype)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, c_kv.astype(dtype), 0, 1)
+        kr = jax.lax.dynamic_update_slice_in_dim(kr, k_rope.astype(dtype), 0, 1)
+        return out, KVCache(ck, kr, lengths)
+    q, k, v = _project_qkv(params, cfg, x, positions, ctx)
+    bias = attention_bias(S, S, causal=cfg.causal, window=cfg.sliding_window)
+    o = grouped_sdpa(q, k, v, bias, hd ** -0.5)
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, cfg.n_heads * hd),
+                     params["wo"])
+    if cfg.sliding_window and cfg.sliding_window < max(S, capacity):
+        cap = min(capacity, cfg.sliding_window)
+        # ring layout: position p lives at slot p % cap
+        n_keep = min(S, cap)
+        keep = jnp.arange(S - n_keep, S)
+        slots = keep % cap
+        ck = jnp.zeros((B, cap) + k.shape[2:], dtype)
+        cv = jnp.zeros((B, cap) + v.shape[2:], dtype)
+        ck = ck.at[:, slots].set(k[:, keep].astype(dtype))
+        cv = cv.at[:, slots].set(v[:, keep].astype(dtype))
+        return out, KVCache(ck, cv, lengths)
+    ck = jnp.zeros((B, capacity) + k.shape[2:], dtype)
+    cv = jnp.zeros((B, capacity) + v.shape[2:], dtype)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(dtype), 0, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(dtype), 0, 1)
+    return out, KVCache(ck, cv, lengths)
+
+
+# ---------------------------------------------------------------------------
+# blocked (query-chunked) attention — exact, bounded memory for long seqs
+# ---------------------------------------------------------------------------
+
+BLOCKED_THRESHOLD = 8192     # use blocked path when S >= this
+Q_CHUNK = 1024
+
+
+def blocked_grouped_sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool, window: int, scale: float,
+                         q_chunk: int = Q_CHUNK) -> jax.Array:
+    """Exact attention computed one query-block at a time (scan), avoiding
+    the (S,S) score materialization. For sliding-window attention only the
+    (window + q_chunk)-wide key slab is touched per block — the FLOP saving
+    of SWA is structural, not just a mask.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qc = min(q_chunk, S)
+    while S % qc:
+        qc -= 1
+    nq = S // qc
+    qg = jnp.moveaxis(q.reshape(B, nq, qc, KV, G, hd), 1, 0)  # (nq,B,qc,KV,G,hd)
+    idxs = jnp.arange(nq)
+
+    use_slab = window > 0 and (window + qc) < S
+    slab = min(S, ((window + qc + 127) // 128) * 128) if use_slab else S
+
+    def body(_, inp):
+        q_blk, i = inp
+        q0 = i * qc
+        if use_slab:
+            start = jnp.clip(q0 + qc - slab, 0, S - slab)
+            k_blk = jax.lax.dynamic_slice_in_dim(k, start, slab, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, start, slab, axis=1)
+            k_pos = start + jnp.arange(slab)
+        else:
+            k_blk, v_blk = k, v
+            k_pos = jnp.arange(S)
+        q_pos = q0 + jnp.arange(qc)
+        ok = jnp.ones((qc, k_blk.shape[1]), bool)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            ok &= k_pos[None, :] > q_pos[:, None] - window
+        bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+        scores = jnp.einsum("bskgh,btkh->bkgst", q_blk, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+        probs = jax.nn.softmax(scores + bias, axis=-1).astype(v_blk.dtype)
+        out = jnp.einsum("bkgst,btkh->bskgh", probs, v_blk)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qg, idxs))      # (nq,B,qc,KV,G,hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def blocked_mla_core(q_nope, q_rope, k_nope, k_rope, v, scale,
+                     q_chunk: int = Q_CHUNK) -> jax.Array:
+    """Blocked causal attention for MLA heads (separate nope/rope scores)."""
+    B, S, H, _ = q_nope.shape
+    qc = min(q_chunk, S)
+    while S % qc:
+        qc -= 1
+    nq = S // qc
+    qn = jnp.moveaxis(q_nope.reshape(B, nq, qc, H, -1), 1, 0)
+    qr = jnp.moveaxis(q_rope.reshape(B, nq, qc, H, -1), 1, 0)
+    idxs = jnp.arange(nq)
+    k_pos = jnp.arange(S)
+
+    def body(_, inp):
+        qn_b, qr_b, i = inp
+        q_pos = i * qc + jnp.arange(qc)
+        bias = jnp.where(k_pos[None, :] <= q_pos[:, None], 0.0, NEG_INF
+                         ).astype(jnp.float32)
+        scores = (jnp.einsum("bshe,bthe->bhst", qn_b, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshe,bte->bhst", qr_b, k_rope,
+                               preferred_element_type=jnp.float32)) * scale
+        probs = jax.nn.softmax(scores + bias, axis=-1).astype(v.dtype)
+        return None, jnp.einsum("bhst,bthe->bshe", probs, v)
+
+    _, outs = jax.lax.scan(body, None, (qn, qr, idxs))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, v.shape[-1])

@@ -1,0 +1,301 @@
+"""Mamba2 (SSD — state-space duality) block, zamba2-style.
+
+Projections are SPLIT (z / x / B / C / dt as separate matrices) so tensor
+parallelism is expressible: z, x, dt shard over heads (tp), while B and C —
+shared across heads within a group — replicate over tp. A fused in_proj
+would interleave tp-sharded and replicated columns in one matrix, which a
+single PartitionSpec cannot express.
+
+Implementations:
+  * ``ssd_chunked``: chunked algorithm (intra-chunk quadratic term computed
+    per chunk inside the scan — bounded temps mirroring the Pallas kernel's
+    VMEM tile; inter-chunk state recurrence in the scan carry).
+  * ``ssd_naive``: step-by-step linear recurrence — the correctness oracle.
+  * ``mamba2_decode``: O(1)-state single-token step (long_500k decode).
+
+Shapes: x (B,L,H,P); B/C (B,L,G,N) with H = G*HG heads per group; state
+h (B,G,HG,P,N). log-decay a_t = dt_t * A_h (A negative).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init, init_rmsnorm, rmsnorm
+
+
+class SSMState(NamedTuple):
+    h: jax.Array          # (B, G, HG, P, N) ssm state
+    conv_x: jax.Array     # (B, d_conv-1, d_inner) conv tail for x
+    conv_B: jax.Array     # (B, d_conv-1, G*N)
+    conv_C: jax.Array     # (B, d_conv-1, G*N)
+    length: jax.Array     # (B,) int32
+
+
+# ---------------------------------------------------------------------------
+# core SSD
+# ---------------------------------------------------------------------------
+
+def ssd_naive(x, dt, A, Bm, Cm, h0=None):
+    """Oracle: sequential recurrence. x (B,L,G,HG,P), dt (B,L,G,HG),
+    A (G,HG), Bm/Cm (B,L,G,N). Returns (y, h_final)."""
+    B, L, G, HG, P = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, G, HG, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                     # (B,G,HG,P),(B,G,HG),(B,G,N)x2
+        da = jnp.exp(dtt * A)                     # (B,G,HG)
+        dbx = jnp.einsum("bgh,bghp,bgn->bghpn", dtt, xt, bt)
+        h = h * da[..., None, None] + dbx
+        y = jnp.einsum("bghpn,bgn->bghp", h, ct)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, h0=None, chunk: int = 128):
+    """Chunked SSD. Same signature/semantics as ssd_naive."""
+    B, L, G, HG, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, f"seq {L} not divisible by chunk {Q}"
+    nc = L // Q
+    f32 = jnp.float32
+
+    cdt = x.dtype                                        # matmul dtype (bf16 prod)
+    xc = jnp.moveaxis(x.reshape(B, nc, Q, G, HG, P), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(B, nc, Q, G, HG), 1, 0).astype(f32)
+    Bc = jnp.moveaxis(Bm.reshape(B, nc, Q, G, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(B, nc, Q, G, N), 1, 0)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    if h0 is None:
+        h0 = jnp.zeros((B, G, HG, P, N), f32)
+
+    def step(h, inp):
+        x_c, dt_c, B_c, C_c = inp                        # chunk slabs
+        a = dt_c * A.astype(f32)                         # (B,Q,G,HG) log-decay
+        cum = jnp.cumsum(a, axis=1)                      # inclusive
+        # intra-chunk: L[q,k] = exp(cum_q - cum_k), k<=q (segsum, stable);
+        # materialized one chunk at a time (mirrors kernel VMEM tile)
+        diff = cum[:, :, None] - cum[:, None, :]         # (B,Q,Q,G,HG)
+        Lmat = jnp.where(mask[None, :, :, None, None], jnp.exp(diff), 0.0)
+        Gmat = jnp.einsum("bqgn,bkgn->bqkg", C_c, B_c)   # (B,Q,Q,G)
+        M = (Gmat[..., None].astype(f32) * Lmat
+             * dt_c[:, None]).astype(cdt)                # weight at key k
+        y = jnp.einsum("bqkgh,bkghp->bqghp", M, x_c).astype(f32)
+        # inter-chunk: carried state contribution
+        y = y + jnp.einsum("bqgn,bghpn->bqghp", C_c.astype(f32), h) \
+            * jnp.exp(cum)[..., None]
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:] - cum)        # (B,Q,G,HG)
+        S = jnp.einsum("bqgn,bqgh,bqghp->bghpn", B_c.astype(f32),
+                       dt_c * decay_to_end, x_c.astype(f32))
+        h = h * jnp.exp(cum[:, -1])[..., None, None] + S
+        return h, y.astype(cdt)
+
+    # remat the chunk body (see rwkv6.wkv_chunked): avoids saving stacked
+    # (Q,Q)-sized intra-chunk intermediates across all chunks for backward
+    step = jax.checkpoint(step, prevent_cse=False)
+    h_final, ys = jax.lax.scan(step, h0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1)
+    return y.reshape(B, L, G, HG, P).astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+def pick_chunk(L: int, chunk: int) -> int:
+    """Largest chunk size <= `chunk` that divides L."""
+    q = min(chunk, L)
+    while L % q:
+        q -= 1
+    return q
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    G = s.n_groups
+    return d_inner, H, G
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    dtype = jnp.dtype(cfg.param_dtype)
+    d_inner, H, G = _dims(cfg)
+    GN = G * s.d_state
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[0], (H,), jnp.float32)
+                 * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    conv = lambda k, ch: (jax.random.normal(k, (s.d_conv, ch), jnp.float32)
+                          * 0.1).astype(dtype)
+    return {
+        "in_z": dense_init(ks[1], cfg.d_model, d_inner, dtype),
+        "in_x": dense_init(ks[2], cfg.d_model, d_inner, dtype),
+        "in_B": dense_init(ks[3], cfg.d_model, GN, dtype),
+        "in_C": dense_init(ks[4], cfg.d_model, GN, dtype),
+        "in_dt": dense_init(ks[5], cfg.d_model, H, dtype),
+        "conv_x": conv(ks[6], d_inner),
+        "conv_bx": jnp.zeros((d_inner,), dtype),
+        "conv_B": conv(ks[7], GN),
+        "conv_bB": jnp.zeros((GN,), dtype),
+        "conv_C": conv(jax.random.fold_in(key, 9), GN),
+        "conv_bC": jnp.zeros((GN,), dtype),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, dtype),
+        "out_proj": dense_init(jax.random.fold_in(key, 10), d_inner,
+                               cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(xs: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d + silu. xs (B,L,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xs.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_block(params: Params, cfg: ModelConfig, u: jax.Array,
+                 use_chunked: bool = True, ctx=None) -> jax.Array:
+    """Full-sequence Mamba2 mixer. u: (B,L,D) -> (B,L,D)."""
+    s = cfg.ssm
+    B, L, _ = u.shape
+    d_inner, H, G = _dims(cfg)
+    HG = H // G
+    z = jnp.einsum("bld,de->ble", u, params["in_z"])
+    x = _causal_conv(jnp.einsum("bld,de->ble", u, params["in_x"]),
+                     params["conv_x"], params["conv_bx"])
+    Bm = _causal_conv(jnp.einsum("bld,de->ble", u, params["in_B"]),
+                      params["conv_B"], params["conv_bB"])
+    Cm = _causal_conv(jnp.einsum("bld,de->ble", u, params["in_C"]),
+                      params["conv_C"], params["conv_bC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", u, params["in_dt"]).astype(jnp.float32)
+        + params["dt_bias"])
+    x = x.reshape(B, L, G, HG, s.head_dim)
+    Bm = Bm.reshape(B, L, G, s.d_state)
+    Cm = Cm.reshape(B, L, G, s.d_state)
+    dt = dt.reshape(B, L, G, HG)
+    if ctx is not None and ctx.tp_axis and HG % ctx.tp_size == 0:
+        x = ctx.constrain(x, ctx.dp_axes, None, None, ctx.tp_axis, None)
+        dt = ctx.constrain(dt, ctx.dp_axes, None, None, ctx.tp_axis)
+    A = -jnp.exp(params["A_log"]).reshape(G, HG)
+    ssd = ssd_chunked if use_chunked else ssd_naive
+    kw = {"chunk": pick_chunk(L, s.chunk)} if use_chunked else {}
+    y, _ = ssd(x, dt, A, Bm, Cm, **kw)
+    y = y + x * params["D"].reshape(G, HG)[None, None, :, :, None].astype(y.dtype)
+    y = y.reshape(B, L, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    s = cfg.ssm
+    d_inner, H, G = _dims(cfg)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    K = s.d_conv - 1
+    return SSMState(
+        h=jnp.zeros((batch, G, H // G, s.head_dim, s.d_state), jnp.float32),
+        conv_x=jnp.zeros((batch, K, d_inner), dtype),
+        conv_B=jnp.zeros((batch, K, G * s.d_state), dtype),
+        conv_C=jnp.zeros((batch, K, G * s.d_state), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _conv_step(tail: jax.Array, cur: jax.Array, w: jax.Array, b: jax.Array):
+    """One-token depthwise conv: tail (B,K-1,C), cur (B,C)."""
+    window = jnp.concatenate([tail, cur[:, None, :]], axis=1)
+    out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w.astype(cur.dtype)) + b)
+    return out, window[:, 1:, :]
+
+
+def mamba2_decode(params: Params, cfg: ModelConfig, u: jax.Array,
+                  state: SSMState) -> Tuple[jax.Array, SSMState]:
+    """Single-token step. u: (B,1,D)."""
+    s = cfg.ssm
+    B = u.shape[0]
+    d_inner, H, G = _dims(cfg)
+    HG = H // G
+    u0 = u[:, 0]
+    z = jnp.einsum("bd,de->be", u0, params["in_z"])
+    x, cx = _conv_step(state.conv_x, jnp.einsum("bd,de->be", u0, params["in_x"]),
+                       params["conv_x"], params["conv_bx"])
+    Bm, cB = _conv_step(state.conv_B, jnp.einsum("bd,de->be", u0, params["in_B"]),
+                        params["conv_B"], params["conv_bB"])
+    Cm, cC = _conv_step(state.conv_C, jnp.einsum("bd,de->be", u0, params["in_C"]),
+                        params["conv_C"], params["conv_bC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", u0, params["in_dt"]).astype(jnp.float32)
+        + params["dt_bias"]).reshape(B, G, HG)
+    x = x.reshape(B, G, HG, s.head_dim).astype(jnp.float32)
+    Bm = Bm.reshape(B, G, s.d_state).astype(jnp.float32)
+    Cm = Cm.reshape(B, G, s.d_state).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"]).reshape(G, HG)
+    da = jnp.exp(dt * A)
+    h = state.h * da[..., None, None] \
+        + jnp.einsum("bgh,bghp,bgn->bghpn", dt, x, Bm)
+    y = jnp.einsum("bghpn,bgn->bghp", h, Cm)
+    y = y + x * params["D"].reshape(G, HG)[None, :, :, None]
+    y = y.reshape(B, 1, d_inner).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z[:, None, :]), cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    return out, SSMState(h, cx, cB, cC, state.length + 1)
+
+
+def mamba2_prefill(params: Params, cfg: ModelConfig, u: jax.Array,
+                   ctx=None) -> Tuple[jax.Array, SSMState]:
+    """Full-sequence forward returning the SSM state for decode handoff."""
+    s = cfg.ssm
+    B, L, _ = u.shape
+    d_inner, H, G = _dims(cfg)
+    HG = H // G
+    K = s.d_conv - 1
+    z = jnp.einsum("bld,de->ble", u, params["in_z"])
+    xp = jnp.einsum("bld,de->ble", u, params["in_x"])
+    Bp = jnp.einsum("bld,de->ble", u, params["in_B"])
+    Cp = jnp.einsum("bld,de->ble", u, params["in_C"])
+    x = _causal_conv(xp, params["conv_x"], params["conv_bx"])
+    Bm = _causal_conv(Bp, params["conv_B"], params["conv_bB"])
+    Cm = _causal_conv(Cp, params["conv_C"], params["conv_bC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", u, params["in_dt"]).astype(jnp.float32)
+        + params["dt_bias"])
+    x = x.reshape(B, L, G, HG, s.head_dim)
+    Bm = Bm.reshape(B, L, G, s.d_state)
+    Cm = Cm.reshape(B, L, G, s.d_state)
+    dt = dt.reshape(B, L, G, HG)
+    A = -jnp.exp(params["A_log"]).reshape(G, HG)
+    y, h_final = ssd_chunked(x, dt, A, Bm, Cm, chunk=pick_chunk(L, s.chunk))
+    y = y + x * params["D"].reshape(G, HG)[None, None, :, :, None].astype(y.dtype)
+    y = y.reshape(B, L, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tail = lambda a: (jnp.pad(a, ((0, 0), (K - a.shape[1], 0), (0, 0)))
+                      if a.shape[1] < K else a[:, -K:, :]).astype(cdt)
+    state = SSMState(
+        h=h_final, conv_x=tail(xp), conv_B=tail(Bp), conv_C=tail(Cp),
+        length=jnp.full((B,), L, jnp.int32))
+    return out, state

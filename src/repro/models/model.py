@@ -1,0 +1,255 @@
+"""Top-level model: embeddings + stack + head; train/prefill/decode entry
+points; modality frontend stubs; analytic parameter counts.
+
+Inputs are dicts (see ``input_specs`` in repro.launch.dryrun):
+  LM:      {"tokens": (B,S) i32, "labels": (B,S) i32}
+  [vlm]:   + {"image_embeds": (B, P, feat) } — precomputed patch embeddings
+  [audio]: {"features": (B,S,feat), "labels": (B,S)} — precomputed frames
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, padded_vocab
+from repro.distributed.sharding import fsdp_gather
+from repro.models import transformer as tf
+from repro.models.layers import (Params, dense_init, embed, init_embedding,
+                                 init_rmsnorm, rmsnorm)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_e, k_s, k_h, k_f = jax.random.split(key, 4)
+    v_pad = padded_vocab(cfg.vocab)
+    p: Params = {
+        "embed": init_embedding(k_e, v_pad, cfg.d_model, dtype),
+        "stack": tf.init_stack(k_s, cfg),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k_h, cfg.d_model, v_pad, dtype)
+    fe = cfg.frontend
+    if fe.kind == "vision_patches":
+        k1, k2 = jax.random.split(k_f)
+        p["frontend"] = {
+            "norm": init_rmsnorm(fe.feature_dim, dtype),
+            "fc1": dense_init(k1, fe.feature_dim, cfg.d_model, dtype),
+            "fc2": dense_init(k2, cfg.d_model, cfg.d_model, dtype),
+        }
+    elif fe.kind == "audio_frames":
+        p["frontend"] = {
+            "proj": dense_init(k_f, fe.feature_dim, cfg.d_model, dtype),
+            "norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# frontend stubs
+# ---------------------------------------------------------------------------
+
+def apply_frontend(params: Params, cfg: ModelConfig,
+                   inputs: Dict[str, jax.Array]) -> jax.Array:
+    """Produce the (B,S,D) input sequence from the modality inputs."""
+    fe = cfg.frontend
+    if fe.kind == "vision_patches":
+        img = inputs["image_embeds"]                        # (B,P,feat)
+        f = params["frontend"]
+        h = rmsnorm(f["norm"], img, cfg.norm_eps)
+        h = jnp.einsum("bpf,fd->bpd", h, f["fc1"])
+        h = jnp.einsum("bpd,de->bpe", jax.nn.gelu(h), f["fc2"])
+        txt = embed(params["embed"], inputs["tokens"])      # (B,S_text,D)
+        return jnp.concatenate([h.astype(txt.dtype), txt], axis=1)
+    if fe.kind == "audio_frames":
+        f = params["frontend"]
+        h = jnp.einsum("bsf,fd->bsd", inputs["features"], f["proj"])
+        return rmsnorm(f["norm"], h, cfg.norm_eps)
+    return embed(params["embed"], inputs["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+            remat: bool = False, kernel_fn=None, ctx=None,
+            inference: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Hidden states after final norm: (B,S,D), plus aux loss."""
+    x = apply_frontend(params, cfg, inputs).astype(jnp.dtype(cfg.compute_dtype))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, aux = tf.stack_forward(params["stack"], cfg, x, positions, remat=remat,
+                              kernel_fn=kernel_fn, ctx=ctx,
+                              inference=inference)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def head_table(params: Params, cfg: ModelConfig) -> jax.Array:
+    """(V, D) unembedding table."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"]
+    return params["head"].T
+
+
+def chunked_cross_entropy(x: jax.Array, table: jax.Array, labels: jax.Array,
+                          vocab: int, chunk: int = 512) -> jax.Array:
+    """Mean next-token CE without materializing (B,S,V) logits.
+
+    x: (B,S,D) hidden; table: (V_padded,D); labels: (B,S) with -100 = ignore.
+    Scans over sequence chunks; per-chunk logits are (B,chunk,V). The body is
+    rematerialized (jax.checkpoint) so backward recomputes per-chunk logits
+    instead of saving all of them. Pad-vocab logits are masked to -inf.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    if S % chunk:                                           # pad to multiple
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+        S = S + pad
+    nc = S // chunk
+    xc = jnp.moveaxis(x.reshape(B, nc, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    v_pad = table.shape[0]
+
+    @jax.checkpoint
+    def body(carry, inp):
+        tot, cnt = carry
+        xb, lb = inp
+        logits = jnp.einsum("bsd,vd->bsv", xb.astype(jnp.float32),
+                            table.astype(jnp.float32))
+        if v_pad > vocab:
+            pad_mask = jnp.arange(v_pad) < vocab
+            logits = jnp.where(pad_mask, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        mask = (lb >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((logz - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+            remat: bool = True, aux_weight: float = 0.01,
+            kernel_fn=None, ctx=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Training loss (next-token CE, or frame CE for encoders)."""
+    x, aux = forward(params, cfg, inputs, remat=remat, kernel_fn=kernel_fn,
+                     ctx=ctx)
+    labels = inputs["labels"]
+    if cfg.causal:
+        if cfg.frontend.kind == "vision_patches":
+            # labels cover text positions only; prefix positions are ignored
+            P = cfg.frontend.num_prefix_tokens
+            ignore = jnp.full(labels.shape[:1] + (P,), -100, labels.dtype)
+            labels = jnp.concatenate([ignore, labels], axis=1)
+        # next-token shift: predict labels[t] from hidden[t-1]
+        x = x[:, :-1]
+        labels = labels[:, 1:]
+    table = head_table(params, cfg)
+    if ctx is not None:
+        table = fsdp_gather({"head": table.T}, cfg, ctx)["head"].T
+    ce = chunked_cross_entropy(x, table, labels, cfg.vocab)
+    total = ce + aux_weight * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, capacity: int):
+    return tf.init_caches(cfg, batch, capacity)
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                caches) -> Tuple[jax.Array, Any]:
+    """One decode step: tokens (B,1) -> (logits (B,V) fp32, new caches)."""
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    x, caches = tf.stack_decode(params["stack"], caches, cfg, x)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = head_table(params, cfg)
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                        table.astype(jnp.float32))[:, 0]
+    if table.shape[0] > cfg.vocab:
+        logits = jnp.where(jnp.arange(table.shape[0]) < cfg.vocab, logits,
+                           -1e30)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts (for MODEL_FLOPS roofline term)
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, V = cfg.d_model, cfg.vocab
+    hd = cfg.resolved_head_dim
+    total = V * d * (1 if cfg.tie_embeddings else 2)        # embed + head
+
+    def attn_params():
+        if cfg.attention == "mla":
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            return (d * cfg.n_heads * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * cfg.n_heads
+                    * (m.qk_nope_head_dim + m.v_head_dim)
+                    + cfg.n_heads * m.v_head_dim * d)
+        return d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+
+    def mlp_params(ff):
+        return 3 * d * ff
+
+    def mamba_params():
+        s = cfg.ssm
+        d_in = s.expand * d
+        H = d_in // s.head_dim
+        conv_ch = d_in + 2 * s.n_groups * s.d_state
+        return (d * (2 * d_in + 2 * s.n_groups * s.d_state + H)
+                + s.d_conv * conv_ch + d_in * d)
+
+    def rwkv_params():
+        c = cfg.rwkv
+        return (5 * d * d                 # r,k,v,g,o projections
+                + d * c.mix_lora * 5 * 2  # mixing adapters (approx)
+                + d * c.decay_lora * 2
+                + 2 * d * cfg.d_ff + d * d)  # channel mix
+
+    if cfg.block_pattern == "zamba_hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every
+        total += cfg.n_layers * mamba_params()
+        total += attn_params() + mlp_params(cfg.d_ff)       # shared block
+        total += n_sites * 2 * (d * tf.ZAMBA_LORA_RANK
+                                + tf.ZAMBA_LORA_RANK * cfg.n_heads * hd)
+        return total
+    if cfg.block_kind == "mamba2":
+        return total + cfg.n_layers * mamba_params()
+    if cfg.block_kind == "rwkv6":
+        return total + cfg.n_layers * rwkv_params()
+    # attention archs
+    per_layer = attn_params()
+    if cfg.moe is not None:
+        m = cfg.moe
+        n_moe = cfg.n_layers - m.first_k_dense
+        total += m.first_k_dense * (per_layer + mlp_params(m.dense_d_ff))
+        router = d * m.num_experts
+        if active_only:
+            expert = 3 * d * m.expert_d_ff * m.top_k
+        else:
+            expert = 3 * d * m.expert_d_ff * m.num_experts
+        shared = 3 * d * m.shared_d_ff if m.num_shared_experts else 0
+        total += n_moe * (per_layer + router + expert + shared)
+        return total
+    return total + cfg.n_layers * (per_layer + mlp_params(cfg.d_ff))

@@ -1,0 +1,205 @@
+"""Mixture-of-experts with capacity-bounded gather dispatch.
+
+Design notes (TPU/SPMD adaptation):
+  * Token-choice routing (top-k) with per-expert capacity
+    C = ceil(S * top_k / E * capacity_factor). Tokens over capacity are
+    dropped (residual passes through) — standard GShard/Switch semantics.
+  * Dispatch is a GATHER, not the classic (B,S,E,C) one-hot einsum: at the
+    assigned scale (S=4k..32k, E=128) the one-hot dispatch tensor is O(10^13)
+    elements, and its einsum FLOPs would poison the roofline. Instead each
+    expert top_k-selects (by sequence priority) the indices of tokens routed
+    to it -> (B,E,C) index tensor; gather (B,E,C,D); batched expert matmuls
+    einsum('becd,edf->becf') carry the *true* MoE FLOPs; combine is a
+    scatter-add. Under SPMD (batch on 'data', experts on 'model') XLA lowers
+    the gather/scatter to all-to-all-class traffic, mirroring expert-parallel
+    dispatch.
+  * Router math in fp32; load-balance aux loss returned for training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import Params, dense_init, init_mlp, mlp
+
+
+INFERENCE_CAPACITY_FACTOR = 4.0   # relaxed at inference (drop ~never)
+
+
+def expert_capacity(num_tokens: int, moe: MoEConfig,
+                    factor: float = None) -> int:
+    f = moe.capacity_factor if factor is None else factor
+    cap = int(num_tokens * moe.top_k * f / moe.num_experts)
+    return min(max(moe.top_k, cap), num_tokens)
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    moe = cfg.moe
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    E, F = moe.num_experts, moe.expert_d_ff
+    p: Params = {
+        "router": dense_init(k_r, d, E, jnp.float32),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, F, dtype))(
+            jax.random.split(k_g, E)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, F, dtype))(
+            jax.random.split(k_u, E)),
+        "w_down": jax.vmap(lambda k: dense_init(k, F, d, dtype))(
+            jax.random.split(k_d, E)),
+    }
+    if moe.num_shared_experts:
+        p["shared"] = init_mlp(k_s, d, moe.shared_d_ff, dtype)
+    return p
+
+
+def route(router_w: jax.Array, x: jax.Array, moe: MoEConfig
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Router: returns (weights (B,S,E) dense fp32, top-k ids, aux loss)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, moe.top_k)              # (B,S,K)
+    if moe.norm_topk_prob:
+        top_w = top_w / (jnp.sum(top_w, axis=-1, keepdims=True) + 1e-9)
+    # dense (B,S,E) combine-weight matrix (zero where not routed)
+    onehot = jax.nn.one_hot(top_ids, moe.num_experts, dtype=jnp.float32)
+    dense_w = jnp.einsum("bsk,bske->bse", top_w, onehot)
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1)) / moe.top_k
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = moe.num_experts * jnp.sum(frac_tokens * frac_probs)
+    return dense_w, top_ids, aux
+
+
+def moe_ffn(params: Params, cfg: ModelConfig, x: jax.Array, ctx=None,
+            inference: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """MoE FFN. x: (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    Training uses the configured capacity factor (tokens over capacity are
+    dropped, GShard-style). Inference relaxes capacity (no training signal to
+    balance against; dropping answers is not acceptable).
+
+    With a mesh (ctx), dispatch runs through the explicit shard_map
+    expert-parallel path (_moe_ffn_shardmap): GSPMD partitions the
+    gather/scatter dispatch by REPLICATING the full token batch per device
+    (measured: 45 s of collective per step on qwen3-moe train_4k); the
+    hand-partitioned form needs one activation all-reduce per layer."""
+    if (ctx is not None and ctx.tp_axis
+            and cfg.moe.num_experts % ctx.tp_size == 0):
+        return _moe_ffn_shardmap(params, cfg, x, ctx, inference)
+    moe = cfg.moe
+    B, S, D = x.shape
+    E = moe.num_experts
+    C = expert_capacity(S, moe,
+                        INFERENCE_CAPACITY_FACTOR if inference else None)
+    dense_w, _, aux = route(params["router"], x, moe)             # (B,S,E)
+
+    # --- expert-side selection of routed tokens (sequence priority) ------
+    assigned = dense_w > 0.0                                      # (B,S,E)
+    score = jnp.where(assigned.transpose(0, 2, 1),                # (B,E,S)
+                      -jnp.arange(S, dtype=jnp.float32)[None, None, :],
+                      -jnp.inf)
+    top_score, token_idx = jax.lax.top_k(score, C)                # (B,E,C)
+    valid = jnp.isfinite(top_score)                               # (B,E,C)
+
+    # --- dispatch: gather tokens into (B,E,C,D) ---------------------------
+    b_idx = jnp.arange(B)[:, None, None]
+    xin = x[b_idx, token_idx]                                     # (B,E,C,D)
+    w_in = dense_w[b_idx, token_idx, jnp.arange(E)[None, :, None]]  # (B,E,C)
+    xin = jnp.where(valid[..., None], xin, 0.0)
+    if ctx is not None and ctx.tp_axis and E % ctx.tp_size == 0:
+        # expert-parallel dispatch: XLA lowers the resharding from batch-
+        # sharded tokens to expert-sharded buffers as all-to-all traffic
+        xin = ctx.constrain(xin, ctx.dp_axes, ctx.tp_axis, None, None)
+
+    # --- expert compute (true MoE FLOPs) ----------------------------------
+    gate = jnp.einsum("becd,edf->becf", xin, params["w_gate"])
+    up = jnp.einsum("becd,edf->becf", xin, params["w_up"])
+    hidden = jax.nn.silu(gate) * up
+    y = jnp.einsum("becf,efd->becd", hidden, params["w_down"])
+    y = y * jnp.where(valid, w_in, 0.0).astype(y.dtype)[..., None]
+
+    # --- combine: scatter-add back to (B,S,D) ------------------------------
+    out = jnp.zeros((B, S, D), y.dtype)
+    out = out.at[b_idx, token_idx].add(y, mode="drop")
+
+    if moe.num_shared_experts:
+        out = out + mlp(params["shared"], x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# explicit expert-parallel dispatch (shard_map)
+# ---------------------------------------------------------------------------
+
+def _moe_ffn_shardmap(params: Params, cfg: ModelConfig, x: jax.Array, ctx,
+                      inference: bool) -> Tuple[jax.Array, jax.Array]:
+    """Hand-partitioned MoE: each device runs its LOCAL experts over its
+    LOCAL batch rows (token hidden states are tp-replicated between blocks
+    anyway), then one psum over tp combines expert contributions. Routing
+    semantics are identical to the auto path: router top-k over the FULL
+    expert set; per-(row, expert) capacity with sequence priority."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    E = moe.num_experts
+    C = expert_capacity(S, moe,
+                        INFERENCE_CAPACITY_FACTOR if inference else None)
+    mesh = ctx.mesh
+    tp = ctx.tp_axis
+    n_tp = ctx.tp_size
+    E_loc = E // n_tp
+    all_axes = tuple(mesh.axis_names)
+
+    fsdp = ctx.fsdp_axis
+
+    def body(xl, router, wg, wu, wd):
+        if fsdp is not None:
+            # explicit ZeRO-3: weights arrive D-sharded over the data axis,
+            # gathered here (param-sized traffic); grads reduce-scatter back
+            # through the transpose of the all-gather.
+            wg = jax.lax.all_gather(wg, fsdp, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, fsdp, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, fsdp, axis=2, tiled=True)
+        dense_w, _, aux = route(router, xl, moe)          # (B_l,S,E) global E
+        e0 = jax.lax.axis_index(tp) * E_loc
+        dw = jax.lax.dynamic_slice_in_dim(dense_w, e0, E_loc, axis=2)
+        assigned = dw > 0.0
+        score = jnp.where(assigned.transpose(0, 2, 1),     # (B_l,E_l,S)
+                          -jnp.arange(S, dtype=jnp.float32)[None, None, :],
+                          -jnp.inf)
+        top_score, token_idx = jax.lax.top_k(score, C)     # (B_l,E_l,C)
+        valid = jnp.isfinite(top_score)
+        xin = jax.vmap(lambda xb, ib: xb[ib])(xl, token_idx)  # local gather
+        w_in = jnp.take_along_axis(dw.transpose(0, 2, 1), token_idx, axis=2)
+        xin = jnp.where(valid[..., None], xin, 0.0)
+        gate = jnp.einsum("becd,edf->becf", xin, wg)
+        up = jnp.einsum("becd,edf->becf", xin, wu)
+        y = jnp.einsum("becf,efd->becd", jax.nn.silu(gate) * up, wd)
+        y = y * jnp.where(valid, w_in, 0.0).astype(y.dtype)[..., None]
+        b_idx = jnp.arange(xl.shape[0])[:, None, None]
+        out = jnp.zeros(xl.shape, y.dtype).at[b_idx, token_idx].add(
+            y, mode="drop")
+        out = jax.lax.psum(out, tp)                        # combine experts
+        aux = jax.lax.pmean(aux, all_axes)
+        return out, aux
+
+    dp_spec = P(ctx.dp_axes, None, None)
+    w_in_specs = ((P(tp, ctx.fsdp_axis, None), P(tp, ctx.fsdp_axis, None),
+                   P(tp, None, ctx.fsdp_axis)) if ctx.fsdp_axis is not None
+                  else (P(tp, None, None),) * 3)
+    out, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(dp_spec, P()) + w_in_specs,
+        out_specs=(dp_spec, P()),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+    if moe.num_shared_experts:
+        out = out + mlp(params["shared"], x)
+    return out.astype(x.dtype), aux

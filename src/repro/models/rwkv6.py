@@ -1,0 +1,267 @@
+"""RWKV6 "Finch" block: time-mix (WKV6 recurrence with data-dependent
+per-channel decay) + channel-mix FFN.
+
+Recurrence per head (key dim N, value dim N):
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+    o_t[j]   = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+with w_t = exp(-exp(w0 + lora_w(x))) in (0,1), data-dependent.
+
+Implementations:
+  * ``wkv_naive``  — per-step scan (oracle).
+  * ``wkv_chunked``— chunk-parallel form (intra-chunk pairwise decay products
+    + inter-chunk state carry), primary path, mirrored by the Pallas kernel.
+  * ``rwkv6_decode`` — O(1) state step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init, init_rmsnorm, rmsnorm
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array            # (B, H, N, N) wkv state
+    x_tm: jax.Array         # (B, D) previous token (time-mix shift)
+    x_cm: jax.Array         # (B, D) previous token (channel-mix shift)
+    length: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# WKV core
+# ---------------------------------------------------------------------------
+
+def wkv_naive(r, k, v, w, u, s0=None):
+    """Oracle. r/k/v/w: (B,L,H,N); u: (H,N). Returns (out (B,L,H,N), s)."""
+    B, L, H, N = r.shape
+    f32 = jnp.float32
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), f32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        o = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(f32) for t in (r, k, v, w))
+    s, os_ = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(os_, 0, 1).astype(r.dtype), s
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 16, ctx=None):
+    # shrink chunk to a divisor of L
+    L0 = r.shape[1]
+    q = min(chunk, L0)
+    while L0 % q:
+        q -= 1
+    chunk = q
+    """Chunk-parallel WKV6.
+
+    Within a chunk (log-space cumulative decay lcum, inclusive):
+      intra: o_q += sum_{j<q} r_q * exp(lcum_{q-1} - lcum_j) k_j  v_j
+             (+ current-step bonus u*k_q v_q)
+      inter: o_q += (r_q * exp(lcum_{q-1})) @ S_chunkstart
+      state: S' = exp(lcum_last) * S + sum_j exp(lcum_last - lcum_j) k_j v_j
+    """
+    B, L, H, N = r.shape
+    Q = min(chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+    f32 = jnp.float32
+    cdt = r.dtype
+
+    rc, kc, vc = (jnp.moveaxis(t.reshape(B, nc, Q, H, N), 1, 0)
+                  for t in (r, k, v))                   # (nc,B,Q,H,N)
+    wc = jnp.moveaxis(w.reshape(B, nc, Q, H, N), 1, 0).astype(f32)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), -1)
+
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), f32)
+
+    def step(s, inp):
+        r_c, k_c, v_c, w_c = inp                        # (B,Q,H,N)
+        lw = jnp.log(jnp.maximum(w_c, 1e-20))
+        lcum = jnp.cumsum(lw, axis=1)                   # inclusive (B,Q,H,N)
+        lprev = lcum - lw                               # exclusive
+        # intra-chunk: pair decay exp(lprev_q - lcum_j), j < q  (materialized
+        # one chunk at a time — bounded temp, mirrors the kernel's VMEM tile)
+        diff = lprev[:, :, None] - lcum[:, None, :]     # (B,Q,Q,H,N)
+        pair = jnp.where(mask[None, :, :, None, None], jnp.exp(diff), 0.0)
+        if ctx is not None and ctx.tp_axis and pair.shape[-1] % ctx.tp_size == 0:
+            # the pair tensor derives from w (tp-replicated); without a
+            # constraint every device materializes ALL of it — shard over N
+            # and let the scores contraction psum (PERF: rwkv hillclimb #1)
+            pair = ctx.constrain(pair, ctx.dp_axes, None, None, None,
+                                 ctx.tp_axis)
+        scores = jnp.einsum("bqhi,bqjhi,bjhi->bqjh",
+                            r_c.astype(f32), pair, k_c.astype(f32))
+        o = jnp.einsum("bqjh,bjhn->bqhn", scores.astype(cdt), v_c).astype(f32)
+        # current-step bonus
+        bonus = jnp.einsum("bqhi,hi,bqhi->bqh", r_c.astype(f32),
+                           u.astype(f32), k_c.astype(f32))
+        o = o + bonus[..., None] * v_c.astype(f32)
+        # inter-chunk: carried state contribution
+        rq = r_c.astype(f32) * jnp.exp(lprev)
+        o = o + jnp.einsum("bqhi,bhin->bqhn", rq, s)
+        # state update
+        decay_to_end = jnp.exp(lcum[:, -1:] - lcum)     # (B,Q,H,N)
+        Ssum = jnp.einsum("bqhi,bqhn->bhin",
+                          k_c.astype(f32) * decay_to_end, v_c.astype(f32))
+        s = s * jnp.exp(lcum[:, -1])[..., None] + Ssum
+        return s, o.astype(cdt)
+
+    # remat the chunk body: without this the scan saves every chunk's
+    # (Q,Q,H,N)-sized intermediates for backward — O(L^2) HBM traffic
+    # (PERF: rwkv hillclimb #4). Saved per chunk = just the state carry.
+    step = jax.checkpoint(step, prevent_cse=False)
+    s_final, outs = jax.lax.scan(step, s0, (rc, kc, vc, wc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, L, H, N)
+    return out, s_final
+
+
+# ---------------------------------------------------------------------------
+# block params
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(key, cfg: ModelConfig) -> Params:
+    """Time-mix + channel-mix parameters for one block."""
+    c = cfg.rwkv
+    dtype = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    N = c.head_dim
+    H = D // N
+    ks = jax.random.split(key, 12)
+    lora = c.decay_lora
+    return {
+        # token-shift lerp bases for r,k,v,w,g (+ low-rank data-dependent part)
+        "mu": 0.5 * jnp.ones((5, D), dtype),
+        "mix_a": dense_init(ks[0], D, 5 * c.mix_lora, dtype),
+        "mix_b": (jax.random.normal(ks[1], (5, c.mix_lora, D), jnp.float32)
+                  * 0.01).astype(dtype),
+        "wr": dense_init(ks[2], D, D, dtype),
+        "wk": dense_init(ks[3], D, D, dtype),
+        "wv": dense_init(ks[4], D, D, dtype),
+        "wg": dense_init(ks[5], D, D, dtype),
+        "wo": dense_init(ks[6], D, D, dtype),
+        # data-dependent decay: w = exp(-exp(w0 + b(tanh(a(x)))))
+        "w0": jnp.full((D,), -4.0, jnp.float32),
+        "decay_a": dense_init(ks[7], D, lora, dtype),
+        "decay_b": dense_init(ks[8], lora, D, dtype) * 0.1,
+        "u": 0.5 * jnp.ones((H, N), jnp.float32),        # current-step bonus
+        "ln_x": {"scale": jnp.ones((D,), dtype)},        # per-head group norm
+        # channel-mix
+        "cm_mu": 0.5 * jnp.ones((2, D), dtype),
+        "cm_k": dense_init(ks[9], D, cfg.d_ff, dtype),
+        "cm_v": dense_init(ks[10], cfg.d_ff, D, dtype),
+        "cm_r": dense_init(ks[11], D, D, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """Shifted sequence: position t sees token t-1. x (B,L,D); x_prev (B,D)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix_inputs(params: Params, x: jax.Array, xs: jax.Array):
+    """Data-dependent lerp between x and shifted x for r,k,v,w,g.
+
+    PERF (rwkv hillclimb #2): computed one stream at a time — stacking all
+    five as (B,L,5,D) forces 5x activation-sized HBM traffic per block; the
+    per-stream form fuses into each projection's dot input."""
+    delta = xs - x                                       # (B,L,D)
+    B, L, D = x.shape
+    low = jnp.tanh(jnp.einsum("bld,dr->blr", delta, params["mix_a"]))
+    low = low.reshape(B, L, 5, -1)
+    out = []
+    for i in range(5):
+        adj = jnp.einsum("blr,rd->bld", low[:, :, i], params["mix_b"][i])
+        out.append(x + delta * (params["mu"][i] + adj))
+    return out                                           # r,k,v,w,g inputs
+
+
+def rwkv6_time_mix(params: Params, cfg: ModelConfig, x: jax.Array,
+                   x_prev: jax.Array, s0=None, use_chunked: bool = True,
+                   ctx=None):
+    """Time-mix. x (B,L,D); x_prev (B,D) last token of previous segment.
+    Returns (out, s_final, x_last).
+
+    TP note: the WKV recurrence is independent across VALUE channels, so v,
+    the state's value dim, and the output shard over tp while r/k/w stay
+    replicated (heads=40 do not divide tp=16; value channels do).
+    """
+    c = cfg.rwkv
+    B, L, D = x.shape
+    N = c.head_dim
+    H = D // N
+    xs = _token_shift(x, x_prev)
+    xr, xk, xv, xw, xg = _time_mix_inputs(params, x, xs)
+    r = jnp.einsum("bld,de->ble", xr, params["wr"]).reshape(B, L, H, N)
+    k = jnp.einsum("bld,de->ble", xk, params["wk"]).reshape(B, L, H, N)
+    v = jnp.einsum("bld,de->ble", xv, params["wv"]).reshape(B, L, H, N)
+    g = jax.nn.silu(jnp.einsum("bld,de->ble", xg, params["wg"]))
+    dlow = jnp.tanh(jnp.einsum("bld,dr->blr", xw, params["decay_a"]))
+    dlog = params["w0"] + jnp.einsum("blr,re->ble", dlow,
+                                     params["decay_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dlog)).reshape(B, L, H, N)      # (0,1) decay
+    if ctx is not None and ctx.tp_axis and N % ctx.tp_size == 0:
+        v = ctx.constrain(v, ctx.dp_axes, None, None, ctx.tp_axis)
+        # shard the DECAY over N too: the whole lcum/diff/pair chain then
+        # propagates N-sharded instead of being computed replicated and
+        # resharded at the pair constraint (PERF: rwkv hillclimb #3)
+        w = ctx.constrain(w, ctx.dp_axes, None, None, ctx.tp_axis)
+        if s0 is None:
+            s0 = jnp.zeros((B, H, N, N), jnp.float32)
+        s0 = ctx.constrain(s0, ctx.dp_axes, None, None, ctx.tp_axis)
+    if use_chunked:
+        out, s_final = wkv_chunked(r, k, v, w, params["u"], s0, ctx=ctx)
+    else:
+        out, s_final = wkv_naive(r, k, v, w, params["u"], s0)
+    out = out.reshape(B, L, D)
+    out = rmsnorm(params["ln_x"], out, cfg.norm_eps) * g
+    out = jnp.einsum("ble,ed->bld", out, params["wo"])
+    return out, s_final, x[:, -1, :]
+
+
+def rwkv6_channel_mix(params: Params, x: jax.Array, x_prev: jax.Array):
+    """Channel-mix FFN with token shift. Returns (out, x_last)."""
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * params["cm_mu"][0]
+    xr = x + (xs - x) * params["cm_mu"][1]
+    k = jnp.einsum("bld,df->blf", xk, params["cm_k"])
+    kv = jnp.einsum("blf,fd->bld", jnp.square(jax.nn.relu(k)), params["cm_v"])
+    r = jax.nn.sigmoid(jnp.einsum("ble,ed->bld", xr, params["cm_r"]))
+    return r * kv, x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    c = cfg.rwkv
+    D = cfg.d_model
+    H = D // c.head_dim
+    dtype = jnp.dtype(cfg.compute_dtype)
+    return RWKVState(
+        s=jnp.zeros((batch, H, c.head_dim, c.head_dim), jnp.float32),
+        x_tm=jnp.zeros((batch, D), dtype),
+        x_cm=jnp.zeros((batch, D), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def rwkv6_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                 state: RWKVState) -> Tuple[jax.Array, RWKVState]:
+    """Single-token time-mix + channel-mix step. x: (B,1,D) block input
+    (already normed by caller per sublayer); here we run time-mix given
+    state and return (tm_out, new_state-without-cm-update). Channel-mix is
+    applied by the caller via rwkv6_channel_mix with x_cm."""
+    out, s_final, x_last = rwkv6_time_mix(params, cfg, x, state.x_tm,
+                                          s0=state.s, use_chunked=False)
+    return out, state._replace(s=s_final, x_tm=x_last,
+                               length=state.length + 1)

@@ -1,0 +1,477 @@
+"""Block definitions and layer stacks.
+
+Stacks are scan-over-layers (stacked params, lax.scan) for compile-time
+sanity at 512 AOT devices. Two patterns:
+
+  * ``uniform``      — one homogeneous scanned stack (plus optional unrolled
+                       ``first_k_dense`` prefix for deepseek-style MoE).
+  * ``zamba_hybrid`` — outer scan over groups of ``attn_every`` Mamba2 blocks,
+                       each group followed by the SHARED attention block
+                       (weights shared across sites, per-site LoRA deltas);
+                       remainder layers form a tail scan.
+
+Decode mirrors the same structure with stacked per-layer caches/states.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import fsdp_gather
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rw
+from repro.models.attention import KVCache
+from repro.models.layers import (Params, dense_init, init_mlp, init_rmsnorm,
+                                 mlp, rmsnorm)
+
+ZAMBA_LORA_RANK = 64
+
+
+# ---------------------------------------------------------------------------
+# single blocks
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, use_moe: bool) -> Params:
+    """One transformer block (attn/mamba/rwkv + ffn/moe)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if cfg.block_kind == "mamba2":
+        return {"norm": init_rmsnorm(cfg.d_model, dtype),
+                "mixer": m2.init_mamba2(k1, cfg)}
+    if cfg.block_kind == "rwkv6":
+        return {"norm1": init_rmsnorm(cfg.d_model, dtype),
+                "norm2": init_rmsnorm(cfg.d_model, dtype),
+                "mixer": rw.init_rwkv6(k1, cfg)}
+    p: Params = {
+        "norm1": init_rmsnorm(cfg.d_model, dtype),
+        "norm2": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_mod.init_attention(k1, cfg),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+    else:
+        d_ff = cfg.moe.dense_d_ff if (cfg.moe and cfg.moe.first_k_dense) else cfg.d_ff
+        p["mlp"] = init_mlp(k3, cfg.d_model, d_ff, dtype)
+    return p
+
+
+def block_forward(params: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, kernel_fn=None, ctx=None,
+                  inference: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """(x, aux_loss). Full-sequence forward for one block."""
+    aux = jnp.zeros((), jnp.float32)
+    params = fsdp_gather(params, cfg, ctx)      # explicit ZeRO-3 prefetch
+    if ctx is not None and ctx.tp_axis:
+        if ctx.sequence_parallel:
+            # SP: residual stream sharded (dp, tp) between blocks; XLA forms
+            # the Megatron-SP all-gather/reduce-scatter pairs around tp ops
+            x = ctx.constrain(x, ctx.dp_axes, ctx.tp_axis, None)
+        else:
+            # pin the residual replicated over tp: prevents the partitioner
+            # from inventing a seq-sharded scan carry that reshards at every
+            # head-sharded op (baseline Megatron-TP semantics)
+            x = ctx.constrain(x, ctx.dp_axes, None, None)
+    if cfg.block_kind == "mamba2":
+        x = x + m2.mamba2_block(params["mixer"], cfg,
+                                rmsnorm(params["norm"], x, cfg.norm_eps),
+                                ctx=ctx)
+        return x, aux
+    if cfg.block_kind == "rwkv6":
+        B, _, D = x.shape
+        zeros = jnp.zeros((B, D), x.dtype)
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        tm, _, _ = rw.rwkv6_time_mix(params["mixer"], cfg, h, zeros, ctx=ctx)
+        x = x + tm
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        cm, _ = rw.rwkv6_channel_mix(params["mixer"], h, zeros)
+        return x + cm, aux
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    x = x + attn_mod.attention(params["attn"], cfg, h, positions,
+                               kernel_fn=kernel_fn, ctx=ctx)
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if "moe" in params:
+        out, aux = moe_mod.moe_ffn(params["moe"], cfg, h, ctx=ctx,
+                                   inference=inference)
+        x = x + out
+    else:
+        x = x + mlp(params["mlp"], h)
+    return x, aux
+
+
+def block_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                 cache: Any) -> Tuple[jax.Array, Any]:
+    """One-token decode for one block. cache: KVCache | SSMState | RWKVState."""
+    if cfg.block_kind == "mamba2":
+        h = rmsnorm(params["norm"], x, cfg.norm_eps)
+        out, cache = m2.mamba2_decode(params["mixer"], cfg, h, cache)
+        return x + out, cache
+    if cfg.block_kind == "rwkv6":
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        tm, s_final, x_last = rw.rwkv6_time_mix(
+            params["mixer"], cfg, h, cache.x_tm, s0=cache.s, use_chunked=False)
+        x = x + tm
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        cm, cm_last = rw.rwkv6_channel_mix(params["mixer"], h, cache.x_cm)
+        cache = rw.RWKVState(s_final, x_last, cm_last, cache.length + 1)
+        return x + cm, cache
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    out, cache = attn_mod.decode_attention(params["attn"], cfg, h, cache)
+    x = x + out
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if "moe" in params:
+        out, _ = moe_mod.moe_ffn(params["moe"], cfg, h, inference=True)
+        x = x + out
+    else:
+        x = x + mlp(params["mlp"], h)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# zamba shared attention block (+ per-site LoRA)
+# ---------------------------------------------------------------------------
+
+def init_shared_attn(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": init_rmsnorm(cfg.d_model, dtype),
+        "norm2": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn_mod.init_attention(k1, cfg),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_site_lora(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "a_q": dense_init(ks[0], d, ZAMBA_LORA_RANK, dtype),
+        "b_q": jnp.zeros((ZAMBA_LORA_RANK, cfg.n_heads * hd), dtype),
+        "a_k": dense_init(ks[1], d, ZAMBA_LORA_RANK, dtype),
+        "b_k": jnp.zeros((ZAMBA_LORA_RANK, cfg.n_kv_heads * hd), dtype),
+    }
+
+
+def _lora_adjusted_attn_params(shared: Params, lora: Params) -> Params:
+    """Per-site effective attention params: wq + a_q@b_q (low-rank delta)."""
+    p = dict(shared)
+    p["wq"] = shared["wq"] + lora["a_q"] @ lora["b_q"]
+    p["wk"] = shared["wk"] + lora["a_k"] @ lora["b_k"]
+    return p
+
+
+def shared_attn_forward(shared: Params, lora: Params, cfg: ModelConfig,
+                        x: jax.Array, positions: jax.Array,
+                        ctx=None) -> jax.Array:
+    ap = _lora_adjusted_attn_params(shared["attn"], lora)
+    h = rmsnorm(shared["norm1"], x, cfg.norm_eps)
+    x = x + attn_mod.attention(ap, cfg, h, positions, ctx=ctx)
+    h = rmsnorm(shared["norm2"], x, cfg.norm_eps)
+    return x + mlp(shared["mlp"], h)
+
+
+def shared_attn_decode(shared: Params, lora: Params, cfg: ModelConfig,
+                       x: jax.Array, cache: KVCache
+                       ) -> Tuple[jax.Array, KVCache]:
+    ap = _lora_adjusted_attn_params(shared["attn"], lora)
+    h = rmsnorm(shared["norm1"], x, cfg.norm_eps)
+    out, cache = attn_mod.decode_attention(ap, cfg, h, cache)
+    x = x + out
+    h = rmsnorm(shared["norm2"], x, cfg.norm_eps)
+    return x + mlp(shared["mlp"], h), cache
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _stack_init(key, n: int, init_one):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def init_stack(key, cfg: ModelConfig) -> Params:
+    """All block parameters for the configured pattern."""
+    if cfg.block_pattern == "zamba_hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every
+        n_tail = cfg.n_layers - n_sites * cfg.attn_every
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {
+            "groups": _stack_init(
+                k1, n_sites * cfg.attn_every,
+                lambda k: init_block(k, cfg, use_moe=False)),
+            "shared_attn": init_shared_attn(k2, cfg),
+            "loras": _stack_init(k3, n_sites,
+                                 lambda k: init_site_lora(k, cfg)),
+        }
+        if n_tail:
+            p["tail"] = _stack_init(
+                k4, n_tail, lambda k: init_block(k, cfg, use_moe=False))
+        return p
+    # uniform
+    moe_on = cfg.moe is not None
+    k_pre, k_main = jax.random.split(key)
+    p = {}
+    n_dense = cfg.moe.first_k_dense if moe_on else 0
+    if n_dense:
+        p["prefix"] = _stack_init(
+            k_pre, n_dense, lambda k: init_block(k, cfg, use_moe=False))
+    p["layers"] = _stack_init(
+        k_main, cfg.n_layers - n_dense,
+        lambda k: init_block(k, cfg, use_moe=moe_on))
+    return p
+
+
+def _scan_blocks(stacked: Params, cfg: ModelConfig, x, positions, remat: bool,
+                 kernel_fn=None, ctx=None, inference: bool = False):
+    """lax.scan over a stacked block group, sqrt-remat when deep.
+
+    With L layers, a flat remat scan saves L carries; nesting the scan as
+    (L/g groups) x (g layers) with checkpoint at BOTH levels saves L/g outer
+    carries plus one group's g inner carries during backward — O(sqrt(L))
+    live residuals (Chen et al. sqrt-remat), which is what lets an 80-layer
+    72B train step fit 16 GB HBM.
+    """
+    def body(carry, layer_params):
+        h, aux = carry
+        h, a = block_forward(layer_params, cfg, h, positions, kernel_fn, ctx,
+                             inference)
+        return (h, aux + a), None
+
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+        # pick a group size ~ sqrt(n) that divides n
+        g = max(1, int(n ** 0.5))
+        while n % g:
+            g -= 1
+        if g > 1 and n // g > 1:
+            groups = jax.tree.map(
+                lambda a: a.reshape((n // g, g) + a.shape[1:]), stacked)
+
+            @functools.partial(jax.checkpoint, prevent_cse=False)
+            def group_body(carry, group_params):
+                out, _ = jax.lax.scan(body, carry, group_params)
+                return out, None
+
+            (x, aux), _ = jax.lax.scan(
+                group_body, (x, jnp.zeros((), jnp.float32)), groups)
+            return x, aux
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+def stack_forward(params: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, remat: bool = False,
+                  kernel_fn=None, ctx=None,
+                  inference: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward through all layers. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.block_pattern == "zamba_hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every
+        ge = cfg.attn_every
+        # reshape group params to (n_sites, ge, ...)
+        groups = jax.tree.map(
+            lambda a: a.reshape((n_sites, ge) + a.shape[1:]), params["groups"])
+
+        def group_body(carry, inp):
+            h, aux = carry
+            g_params, lora = inp
+            h, a = _scan_blocks(g_params, cfg, h, positions, remat, ctx=ctx)
+            h = shared_attn_forward(params["shared_attn"], lora, cfg, h,
+                                    positions, ctx=ctx)
+            return (h, aux + a), None
+        gb = jax.checkpoint(group_body, prevent_cse=False) if remat else group_body
+        (x, aux), _ = jax.lax.scan(gb, (x, aux), (groups, params["loras"]))
+        if "tail" in params:
+            x, a = _scan_blocks(params["tail"], cfg, x, positions, remat,
+                                ctx=ctx)
+            aux = aux + a
+        return x, aux
+    if "prefix" in params:
+        x, a = _scan_blocks(params["prefix"], cfg, x, positions, remat,
+                            kernel_fn, ctx, inference)
+        aux = aux + a
+    x, a = _scan_blocks(params["layers"], cfg, x, positions, remat, kernel_fn,
+                        ctx, inference)
+    return x, aux + a
+
+
+# ---------------------------------------------------------------------------
+# decode stacks (stacked caches)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int) -> Any:
+    """Stacked per-layer decode caches matching the stack structure."""
+    if cfg.block_pattern == "zamba_hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every
+        n_tail = cfg.n_layers - n_sites * cfg.attn_every
+        mk_ssm = lambda n: jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n,) + l.shape),
+            m2.init_ssm_state(cfg, batch))
+        caches = {
+            "groups": mk_ssm(n_sites * cfg.attn_every),
+            "shared_kv": jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (n_sites,) + l.shape),
+                attn_mod.init_kv_cache(cfg, batch, capacity)),
+        }
+        if n_tail:
+            caches["tail"] = mk_ssm(n_tail)
+        return caches
+    n_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    n_main = cfg.n_layers - n_dense
+    if cfg.block_kind == "mamba2":
+        one = m2.init_ssm_state(cfg, batch)
+    elif cfg.block_kind == "rwkv6":
+        one = rw.init_rwkv_state(cfg, batch)
+    else:
+        one = attn_mod.init_kv_cache(cfg, batch, capacity)
+    stack = lambda n: jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (n,) + l.shape), one)
+    out = {"layers": stack(n_main)}
+    if n_dense:
+        out["prefix"] = stack(n_dense)
+    return out
+
+
+def _scan_decode(stacked_p: Params, stacked_c, cfg: ModelConfig, x):
+    def body(h, inp):
+        lp, lc = inp
+        h, new_c = block_decode(lp, cfg, h, lc)
+        return h, new_c
+    return jax.lax.scan(body, x, (stacked_p, stacked_c))
+
+
+def stack_decode(params: Params, caches, cfg: ModelConfig, x: jax.Array
+                 ) -> Tuple[jax.Array, Any]:
+    """One-token decode through all layers. Returns (x, new caches)."""
+    if cfg.block_pattern == "zamba_hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every
+        ge = cfg.attn_every
+        groups_p = jax.tree.map(
+            lambda a: a.reshape((n_sites, ge) + a.shape[1:]), params["groups"])
+        groups_c = jax.tree.map(
+            lambda a: a.reshape((n_sites, ge) + a.shape[1:]), caches["groups"])
+
+        def site_body(h, inp):
+            gp, gc, lora, kv = inp
+            h, new_gc = _scan_decode(gp, gc, cfg, h)
+            h, new_kv = shared_attn_decode(params["shared_attn"], lora, cfg,
+                                           h, kv)
+            return h, (new_gc, new_kv)
+        x, (new_gc, new_kv) = jax.lax.scan(
+            site_body, x, (groups_p, groups_c, params["loras"],
+                           caches["shared_kv"]))
+        new_caches = {
+            "groups": jax.tree.map(
+                lambda a: a.reshape((n_sites * ge,) + a.shape[2:]), new_gc),
+            "shared_kv": new_kv,
+        }
+        if "tail" in params:
+            x, new_tail = _scan_decode(params["tail"], caches["tail"], cfg, x)
+            new_caches["tail"] = new_tail
+        return x, new_caches
+    new_caches = {}
+    if "prefix" in params:
+        x, nc = _scan_decode(params["prefix"], caches["prefix"], cfg, x)
+        new_caches["prefix"] = nc
+    x, nc = _scan_decode(params["layers"], caches["layers"], cfg, x)
+    new_caches["layers"] = nc
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# prefill stacks (forward + populate decode caches)
+# ---------------------------------------------------------------------------
+
+def block_prefill(params: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, capacity: int, ctx=None
+                  ) -> Tuple[jax.Array, Any]:
+    """Forward one block and return its decode cache."""
+    params = fsdp_gather(params, cfg, ctx)      # explicit ZeRO-3 prefetch
+    if cfg.block_kind == "mamba2":
+        h = rmsnorm(params["norm"], x, cfg.norm_eps)
+        out, state = m2.mamba2_prefill(params["mixer"], cfg, h, ctx=ctx)
+        return x + out, state
+    if cfg.block_kind == "rwkv6":
+        B, _, D = x.shape
+        zeros = jnp.zeros((B, D), x.dtype)
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        tm, s_final, x_tm = rw.rwkv6_time_mix(params["mixer"], cfg, h, zeros,
+                                              ctx=ctx)
+        x = x + tm
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        cm, x_cm = rw.rwkv6_channel_mix(params["mixer"], h, zeros)
+        state = rw.RWKVState(s_final, x_tm, x_cm,
+                             jnp.full((B,), x.shape[1], jnp.int32))
+        return x + cm, state
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    out, kv = attn_mod.attention_prefill(params["attn"], cfg, h, positions,
+                                         capacity, ctx=ctx)
+    x = x + out
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if "moe" in params:
+        o, _ = moe_mod.moe_ffn(params["moe"], cfg, h, ctx=ctx, inference=True)
+        x = x + o
+    else:
+        x = x + mlp(params["mlp"], h)
+    return x, kv
+
+
+def _scan_prefill(stacked_p: Params, cfg: ModelConfig, x, positions,
+                  capacity: int, ctx=None):
+    def body(h, lp):
+        h, cache = block_prefill(lp, cfg, h, positions, capacity, ctx)
+        return h, cache
+    return jax.lax.scan(body, x, stacked_p)
+
+
+def stack_prefill(params: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, capacity: int, ctx=None
+                  ) -> Tuple[jax.Array, Any]:
+    """Forward all layers, returning stacked decode caches (same structure
+    as init_caches)."""
+    if cfg.block_pattern == "zamba_hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every
+        ge = cfg.attn_every
+        groups_p = jax.tree.map(
+            lambda a: a.reshape((n_sites, ge) + a.shape[1:]), params["groups"])
+
+        def site_body(h, inp):
+            gp, lora = inp
+            h, gc = _scan_prefill(gp, cfg, h, positions, capacity, ctx)
+            ap = _lora_adjusted_attn_params(params["shared_attn"]["attn"], lora)
+            hh = rmsnorm(params["shared_attn"]["norm1"], h, cfg.norm_eps)
+            out, kv = attn_mod.attention_prefill(ap, cfg, hh, positions,
+                                                 capacity, ctx=ctx)
+            h = h + out
+            hh = rmsnorm(params["shared_attn"]["norm2"], h, cfg.norm_eps)
+            h = h + mlp(params["shared_attn"]["mlp"], hh)
+            return h, (gc, kv)
+        x, (gc, kv) = jax.lax.scan(site_body, x,
+                                   (groups_p, params["loras"]))
+        caches = {
+            "groups": jax.tree.map(
+                lambda a: a.reshape((n_sites * ge,) + a.shape[2:]), gc),
+            "shared_kv": kv,
+        }
+        if "tail" in params:
+            x, tc = _scan_prefill(params["tail"], cfg, x, positions,
+                                  capacity, ctx)
+            caches["tail"] = tc
+        return x, caches
+    caches = {}
+    if "prefix" in params:
+        x, pc = _scan_prefill(params["prefix"], cfg, x, positions, capacity,
+                              ctx)
+        caches["prefix"] = pc
+    x, lc = _scan_prefill(params["layers"], cfg, x, positions, capacity, ctx)
+    caches["layers"] = lc
+    return x, caches

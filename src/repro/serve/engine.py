@@ -1,0 +1,151 @@
+"""Serving: prefill + decode steps and a continuous-batching session.
+
+The decode batch has fixed slots; each slot carries its own cache position
+(per-slot lengths in every cache type), so requests at different depths decode
+together. New requests are prefilled (chunk of their own) and spliced into a
+free slot; finished requests free their slot. The request queue is drained by
+the many-task engine in examples/serve_lm.py — serving is "many-task over
+staged node-local data" in the paper's sense (weights + caches are the staged
+data; requests are the tasks).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.models.layers import embed, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# jit-able steps
+# ---------------------------------------------------------------------------
+
+def prefill_step(params, cfg: ModelConfig, inputs: Dict[str, jax.Array],
+                 capacity: int, ctx=None):
+    """Prefill: inputs -> (last-token logits (B,V), populated caches)."""
+    x = M.apply_frontend(params, cfg, inputs).astype(
+        jnp.dtype(cfg.compute_dtype))
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, caches = tf.stack_prefill(params["stack"], cfg, x, positions,
+                                 capacity, ctx=ctx)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = M.head_table(params, cfg)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1].astype(jnp.float32),
+                        table.astype(jnp.float32))
+    if table.shape[0] > cfg.vocab:
+        logits = jnp.where(jnp.arange(table.shape[0]) < cfg.vocab, logits,
+                           -1e30)
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, caches,
+                ctx=None):
+    """One token for every slot: (B,1) -> (logits (B,V), caches)."""
+    return M.decode_step(params, cfg, tokens, caches)
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching session (host-side orchestration)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    generated: List[int] = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class ServeSession:
+    """Fixed-slot continuous batching over a single decode batch."""
+
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int,
+                 capacity: int, ctx=None):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.capacity = capacity
+        self.ctx = ctx
+        self.caches = M.init_decode_state(cfg, batch_slots, capacity)
+        self.tokens = np.zeros((batch_slots, 1), np.int32)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._prefill = jax.jit(functools.partial(
+            prefill_step, cfg=cfg, capacity=capacity, ctx=ctx),
+            static_argnames=())
+        self._decode = jax.jit(functools.partial(decode_step, cfg=cfg,
+                                                 ctx=ctx))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def _splice(self, slot: int, caches_new, token: int, length: int):
+        """Insert a prefilled single-request cache into batch slot `slot`."""
+        def ins(dst, src):
+            return dst.at[:, slot].set(src[:, 0])     # leading dim = layers
+        self.caches = jax.tree.map(
+            lambda d, s: d.at[tuple([slice(None), slot])].set(s[:, 0])
+            if d.ndim >= 2 else d, self.caches, caches_new)
+        self.tokens[slot, 0] = token
+
+    def step(self) -> int:
+        """One engine step: admit pending requests, then decode all active
+        slots. Returns number of active requests."""
+        # admit
+        while self.queue and self._free_slot() is not None:
+            req = self.queue.pop(0)
+            slot = self._free_slot()
+            inputs = {"tokens": jnp.asarray(req.prompt[None, :])}
+            logits, caches_new = self._prefill(self.params, inputs=inputs)
+            first = int(greedy_sample(logits)[0])
+            req.generated.append(first)
+            req.slot = slot
+            self.slots[slot] = req
+            self._splice(slot, caches_new, first, len(req.prompt))
+        if not any(self.slots):
+            return 0
+        # decode all slots together
+        logits, self.caches = self._decode(self.params,
+                                           tokens=jnp.asarray(self.tokens),
+                                           caches=self.caches)
+        nxt = np.asarray(greedy_sample(logits))
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.generated.append(tok)
+            self.tokens[i, 0] = tok
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+        return sum(r is not None for r in self.slots)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self.queue or any(self.slots)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

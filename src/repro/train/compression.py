@@ -1,0 +1,88 @@
+"""Gradient compression for cross-pod (DCN) reduction: int8 quantization with
+error feedback.
+
+Rationale: intra-pod gradient reduce-scatter rides ICI (cheap); the POD-axis
+all-reduce crosses the data-center network. Quantizing that hop to int8 cuts
+DCN bytes 4x; error feedback keeps the scheme convergent (the quantization
+residual is carried into the next step's gradient).
+
+Implemented with shard_map over the pod axis: per-tensor symmetric int8
+quantization -> all_gather of (int8 payload, f32 scale) -> local dequant-sum.
+all_gather of int8 moves exactly the compressed bytes on the wire.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_residual(g: jax.Array, err: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback: quantize (g + carried error); return (q, scale, new_err)."""
+    target = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(target)
+    new_err = target - dequantize_int8(q, scale)
+    return q, scale, new_err
+
+
+def compressed_psum(x: jax.Array, mesh: Mesh, axis: str = "pod") -> jax.Array:
+    """int8-compressed all-reduce over `axis` (mean is NOT applied).
+
+    x must be identically sharded on the non-`axis` mesh axes; inside the
+    shard_map body each participant quantizes its local block, all-gathers
+    the int8 payloads + scales over `axis`, and dequant-sums locally.
+    """
+    n = mesh.shape[axis]
+    other = tuple(a for a in mesh.axis_names if a != axis)
+
+    def body(local):
+        q, scale = quantize_int8(local)
+        qs = jax.lax.all_gather(q, axis)                 # (n, ...) int8 wire
+        ss = jax.lax.all_gather(scale, axis)             # (n,) f32
+        return jnp.tensordot(ss, qs.astype(jnp.float32), axes=(0, 0))
+
+    spec = P(*([None] * x.ndim))
+    fn = shard_map(body, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                   check_vma=False)
+    return fn(x)
+
+
+def compressed_grad_allreduce(grads: Any, errors: Any, mesh: Mesh,
+                              axis: str = "pod") -> Tuple[Any, Any]:
+    """Error-feedback int8 all-reduce of a grad pytree over the pod axis.
+    Returns (reduced grads [mean], new error state)."""
+    n = mesh.shape[axis]
+
+    def one(g, e):
+        tgt = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(tgt)
+        new_e = tgt - dequantize_int8(q, scale)
+        red = compressed_psum(dequantize_int8(q, scale), mesh, axis) / n
+        return red, new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    red = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_err = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return red, new_err
+
+
+def init_error_state(grads_shape: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_shape)

@@ -1,0 +1,98 @@
+"""AdamW with f32 master weights + moments, warmup-cosine schedule,
+global-norm clipping. Pure JAX (no optax dependency).
+
+Memory layout matters at scale: master/m/v are f32 and inherit the param
+sharding (FSDP x TP), so qwen2-72b optimizer state (~864 GB) spreads over
+all 256 chips/pod (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_schedule(opt: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio * peak."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, opt.warmup_steps)
+    decay_steps = jnp.maximum(1.0, opt.total_steps - opt.warmup_steps)
+    frac = jnp.clip((step - opt.warmup_steps) / decay_steps, 0.0, 1.0)
+    cos = opt.min_lr_ratio + (1 - opt.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac))
+    return opt.peak_lr * jnp.where(step < opt.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any) -> Dict[str, Any]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(params: Any, grads: Any, state: Dict[str, Any],
+                 opt: OptConfig) -> Tuple[Any, Dict[str, Any], Dict[str, Any]]:
+    """One AdamW step. grads in f32 (already clipped). Returns
+    (bf16-or-param-dtype params, new state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(opt, step)
+    b1t = 1 - opt.b1 ** step.astype(jnp.float32)
+    b2t = 1 - opt.b2 ** step.astype(jnp.float32)
+
+    def upd(m, v, g, master):
+        m = opt.b1 * m + (1 - opt.b1) * g
+        v = opt.b2 * v + (1 - opt.b2) * jnp.square(g)
+        mhat = m / b1t
+        vhat = v / b2t
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + opt.eps)
+                                    + opt.weight_decay * master)
+        return m, v, new_master
+
+    flat_m, tdef = jax.tree.flatten(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_g = jax.tree.leaves(grads)
+    flat_master = jax.tree.leaves(state["master"])
+    new_m, new_v, new_master = [], [], []
+    for m, v, g, ms in zip(flat_m, flat_v, flat_g, flat_master):
+        a, b, c = upd(m, v, g.astype(jnp.float32), ms)
+        new_m.append(a); new_v.append(b); new_master.append(c)
+    new_state = {
+        "step": step,
+        "master": jax.tree.unflatten(tdef, new_master),
+        "m": jax.tree.unflatten(tdef, new_m),
+        "v": jax.tree.unflatten(tdef, new_v),
+    }
+    new_params = jax.tree.map(lambda ms, p: ms.astype(p.dtype),
+                              new_state["master"], params)
+    return new_params, new_state, {"lr": lr}

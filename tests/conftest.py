@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the default single CPU device (the dry-run alone uses 512
+# placeholder devices — set ONLY inside launch/dryrun.py, never globally).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

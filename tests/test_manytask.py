@@ -1,0 +1,108 @@
+"""Many-task engine: completion, load balancing, stragglers, failures,
+dataflow semantics (paper §III, Figs. 4/5, 12/13)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import Dataflow
+from repro.core.fabric import Fabric
+from repro.core.manytask import EngineStats, ManyTaskEngine, Task
+
+
+def test_all_tasks_complete_exactly_once():
+    fab = Fabric(n_hosts=4)
+    eng = ManyTaskEngine(fab, n_workers=8)
+    stats = eng.run([Task(task_id=i, duration=1.0) for i in range(100)])
+    done = [e.task_id for e in stats.events]
+    assert sorted(set(done)) == list(range(100))
+
+
+def test_makespan_scales_with_workers():
+    fab = Fabric(n_hosts=20, ranks_per_host=16)
+    r = random.Random(1)
+    durations = [r.uniform(5, 160) for _ in range(720)]   # FF stage 1 (Fig 12)
+    spans = {}
+    for w in (40, 80, 160, 320):
+        eng = ManyTaskEngine(fab, n_workers=w)
+        st_ = eng.run([Task(task_id=i, duration=d)
+                       for i, d in enumerate(durations)])
+        spans[w] = st_.makespan
+    assert spans[80] < spans[40]
+    assert spans[160] < spans[80]
+    assert spans[320] <= spans[160]
+    # lower bound: total work / workers
+    assert spans[320] >= sum(durations) / 320
+
+
+def test_dependencies_respected():
+    fab = Fabric(n_hosts=2)
+    eng = ManyTaskEngine(fab, n_workers=4)
+    tasks = [Task(task_id=0, duration=5.0),
+             Task(task_id=1, duration=1.0, deps=(0,)),
+             Task(task_id=2, duration=1.0, deps=(1,))]
+    stats = eng.run(tasks)
+    t = {e.task_id: (e.start, e.end) for e in stats.events}
+    assert t[1][0] >= t[0][1]
+    assert t[2][0] >= t[1][1]
+
+
+def test_straggler_backup_tasks_win():
+    fab = Fabric(n_hosts=8, ranks_per_host=16)
+    eng = ManyTaskEngine(fab, n_workers=64, straggler_factor=0.08,
+                         backup_threshold=1.5, seed=5)
+    stats = eng.run([Task(task_id=i, duration=10.0) for i in range(400)])
+    assert stats.backups_launched > 0
+    assert stats.backups_won > 0
+    # with backups the makespan stays near the no-straggler ideal
+    assert stats.makespan < 400 * 10.0 / 64 * 3
+
+
+def test_worker_failure_recovery():
+    fab = Fabric(n_hosts=4, ranks_per_host=16)
+    eng = ManyTaskEngine(fab, n_workers=16, failure_times={0: 5.0, 1: 12.0})
+    stats = eng.run([Task(task_id=i, duration=3.0) for i in range(200)])
+    assert stats.failures_recovered >= 1
+    assert sorted({e.task_id for e in stats.events}) == list(range(200))
+
+
+def test_locality_cache_hits():
+    import numpy as np
+    fab = Fabric(n_hosts=2, ranks_per_host=2)
+    blob = np.ones(1 << 10, np.uint8)
+    fab.fs.put("d/in.bin", blob)
+    for h in fab.hosts:
+        h.store.write("d/in.bin", blob, 0.0)
+    eng = ManyTaskEngine(fab, n_workers=4)
+    stats = eng.run([Task(task_id=i, duration=1.0, inputs=("d/in.bin",))
+                     for i in range(8)])
+    assert stats.cache_hits == 8
+    assert stats.cache_misses == 0
+
+
+def test_dataflow_mapreduce_no_barrier():
+    """Fig. 4/5: merges become eligible before the map phase finishes."""
+    fab = Fabric(n_hosts=4)
+    df = Dataflow(fab)
+    maps = df.foreach(lambda x: x, list(range(16)),
+                      durations=[1.0 if i < 15 else 50.0 for i in range(16)])
+    total = df.merge_pairwise(lambda a, b: a + b, maps, duration=0.5)
+    stats = df.run(n_workers=4)
+    assert total.result() == sum(range(16))
+    events = {e.task_id: e for e in stats.events}
+    slow_map_end = events[15].end
+    merge_starts = [e.start for tid, e in events.items() if tid >= 16]
+    assert min(merge_starts) < slow_map_end     # no stage barrier
+
+
+@given(n_tasks=st.integers(1, 60), n_workers=st.integers(1, 16),
+       seed=st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_makespan_bounds_property(n_tasks, n_workers, seed):
+    """work/W <= makespan <= work (independent equal tasks)."""
+    fab = Fabric(n_hosts=2, ranks_per_host=max(1, n_workers // 2))
+    eng = ManyTaskEngine(fab, n_workers=n_workers, seed=seed)
+    stats = eng.run([Task(task_id=i, duration=2.0) for i in range(n_tasks)])
+    total = 2.0 * n_tasks
+    assert stats.makespan >= total / n_workers - 1e-6
+    assert stats.makespan <= total + 1e-6
