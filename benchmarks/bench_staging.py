@@ -1,0 +1,202 @@
+"""Microbenchmark: zero-copy staging engine + vectorized stage-1 labeling.
+
+Measures REAL wall-clock of the simulator hot paths against faithful
+re-implementations of the seed code paths:
+
+  * ``stage_collective`` at P in {64, 256, 1024} hosts vs the legacy
+    per-stripe-read + np.concatenate + per-host-write engine,
+  * stage-1 connected-component labeling over a 64-frame 256x256 stack:
+    vectorized run-based two-pass labeler vs the pure-Python pixel loop
+    (legacy timed on a subset and extrapolated linearly when slow —
+    reported as such in the JSON).
+
+Byte-exactness of the staged replicas against the source FS is asserted on
+every configuration. Emits ``BENCH_staging.json`` next to this file and
+returns harness CSV rows via :func:`rows` (wired into ``benchmarks.run``).
+
+Run directly:  PYTHONPATH=src python -m benchmarks.bench_staging
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+Row = Tuple[str, float, str]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_staging.json")
+
+HOST_COUNTS = (64, 256, 1024)
+STAGE_FILES = 4
+STAGE_FILE_BYTES = 32 << 20          # 4 x 32 MiB dataset per config
+LABEL_FRAMES = 64
+LABEL_SIZE = 256
+LEGACY_LABEL_BUDGET_S = 10.0         # time legacy on a subset if slower
+
+
+# --------------------------------------------------------------------------
+# legacy (seed) implementations — the "before" side of the comparison
+# --------------------------------------------------------------------------
+
+def _legacy_stage_collective(fabric, paths):
+    """The seed engine: P per-stripe fs.read calls per file, np.concatenate
+    replica assembly (a real dataset-sized copy), per-host write loop."""
+    import math
+    from repro.core.staging import _stripes
+    P_ = fabric.n_hosts
+    c = fabric.constants
+    coll_overhead = c.coll_latency_base + c.coll_latency_log * max(
+        0.0, math.log2(max(P_, 2)))
+    t_read_done = 0.0
+    for path in paths:
+        size = fabric.fs.size(path)
+        t_file = 0.0
+        for off, sz in _stripes(size, P_):
+            _, t_done = fabric.fs.read(path, off, sz, 0.0, coordinated=True)
+            t_file = max(t_file, t_done)
+        t_read_done = max(t_read_done, t_file) + coll_overhead
+    total = sum(fabric.fs.size(p) for p in paths)
+    stripe_bytes = max(1, (total + P_ - 1) // P_)
+    fabric.net.ring_allgather_time(stripe_bytes, P_)
+    for path in paths:
+        size = fabric.fs.size(path)
+        blob = np.concatenate([fabric.fs.files[path][off:off + sz]
+                               for off, sz in _stripes(size, P_)]) \
+            if P_ > 1 else fabric.fs.files[path]
+        for host in fabric.hosts:
+            host.store.write(path, blob, 0.0)
+
+
+def _make_fabric(n_hosts):
+    from repro.core.fabric import BGQ, Fabric
+    fab = Fabric(n_hosts=n_hosts, constants=BGQ)
+    rng = np.random.default_rng(0)
+    blob = rng.integers(0, 255, STAGE_FILE_BYTES, dtype=np.uint8)
+    paths = []
+    for i in range(STAGE_FILES):
+        fab.fs.put(f"d/{i}.bin", blob)
+        paths.append(f"d/{i}.bin")
+    return fab, paths
+
+
+def _check_replicas(fabric, paths):
+    probe = [0, len(fabric.hosts) // 2, len(fabric.hosts) - 1]
+    for h in probe:
+        store = fabric.hosts[h].store
+        for p in paths:
+            assert np.array_equal(store.data[p], fabric.fs.files[p]), \
+                f"replica mismatch host={h} path={p}"
+
+
+def bench_stage_collective() -> List[dict]:
+    from repro.core.staging import stage_collective
+    out = []
+    for hosts in HOST_COUNTS:
+        fab_new, paths = _make_fabric(hosts)
+        t0 = time.perf_counter()
+        stage_collective(fab_new, paths)
+        t_new = time.perf_counter() - t0
+        _check_replicas(fab_new, paths)
+
+        fab_old, paths = _make_fabric(hosts)
+        t0 = time.perf_counter()
+        _legacy_stage_collective(fab_old, paths)
+        t_old = time.perf_counter() - t0
+        _check_replicas(fab_old, paths)
+
+        out.append({
+            "name": f"stage_collective_P{hosts}",
+            "dataset_bytes": STAGE_FILES * STAGE_FILE_BYTES,
+            "legacy_s": t_old, "zero_copy_s": t_new,
+            "speedup": t_old / t_new, "byte_exact": True,
+        })
+    return out
+
+
+def bench_labeling() -> dict:
+    import jax.numpy as jnp
+    from repro.hedm.pipeline import (label_components,
+                                     simulate_detector_frames,
+                                     _union_find_label)
+    from repro.kernels.hedm_reduce_ref import reference
+    frames, dark = simulate_detector_frames(LABEL_FRAMES, size=LABEL_SIZE,
+                                            n_spots=12, seed=1)
+    masks = np.asarray(reference(jnp.asarray(frames), jnp.asarray(dark),
+                                 threshold=200.0)[0]) > 0
+
+    t0 = time.perf_counter()
+    new_results = [label_components(m) for m in masks]
+    t_new = time.perf_counter() - t0
+
+    # legacy pixel loop: time one frame, run as many as the budget allows,
+    # extrapolate linearly (it is O(pixels) per frame, same every frame)
+    t0 = time.perf_counter()
+    old0 = _union_find_label(masks[0])
+    per_frame = time.perf_counter() - t0
+    n_legacy = max(1, min(LABEL_FRAMES,
+                          int(LEGACY_LABEL_BUDGET_S / max(per_frame, 1e-9))))
+    t0 = time.perf_counter()
+    old_results = [_union_find_label(m) for m in masks[:n_legacy]]
+    t_old_measured = time.perf_counter() - t0
+    t_old = t_old_measured * (LABEL_FRAMES / n_legacy)
+
+    for (l_new, n_new), (l_old, n_old) in zip(new_results, old_results):
+        assert n_new == n_old and np.array_equal(l_new, l_old), \
+            "labeler mismatch vs legacy union-find"
+    _ = old0
+    return {
+        "name": f"labeling_{LABEL_FRAMES}x{LABEL_SIZE}x{LABEL_SIZE}",
+        "vectorized_s": t_new,
+        "legacy_s": t_old,
+        "legacy_frames_measured": n_legacy,
+        "legacy_extrapolated": n_legacy < LABEL_FRAMES,
+        "speedup": t_old / t_new,
+        "labels_match_legacy": True,
+    }
+
+
+def run_benchmarks() -> dict:
+    staging = bench_stage_collective()
+    labeling = bench_labeling()
+    report = {"staging": staging, "labeling": labeling}
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def rows(report=None) -> List[Row]:
+    """Harness CSV rows (name, us_per_call, derived) for benchmarks.run."""
+    if report is None:
+        report = run_benchmarks()
+    out: List[Row] = []
+    for s in report["staging"]:
+        out.append((f"bench_{s['name']}_zero_copy", s["zero_copy_s"] * 1e6,
+                    f"speedup_vs_legacy={s['speedup']:.1f}x"))
+    lab = report["labeling"]
+    out.append((f"bench_{lab['name']}_vectorized", lab["vectorized_s"] * 1e6,
+                f"speedup_vs_legacy={lab['speedup']:.1f}x"))
+    return out
+
+
+def main() -> None:
+    report = run_benchmarks()
+    for s in report["staging"]:
+        print(f"{s['name']}: legacy {s['legacy_s']:.3f}s -> zero-copy "
+              f"{s['zero_copy_s']:.3f}s  ({s['speedup']:.1f}x, byte-exact)")
+    lab = report["labeling"]
+    extra = (f" (legacy extrapolated from {lab['legacy_frames_measured']} "
+             f"frames)" if lab["legacy_extrapolated"] else "")
+    print(f"{lab['name']}: legacy {lab['legacy_s']:.2f}s -> vectorized "
+          f"{lab['vectorized_s']:.3f}s  ({lab['speedup']:.0f}x){extra}")
+    print(f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    main()

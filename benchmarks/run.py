@@ -2,7 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV (harness contract). The roofline
 table (EXPERIMENTS.md §Roofline) is produced separately by
-``python -m benchmarks.roofline`` from the dry-run artifacts.
+``python -m benchmarks.roofline`` from the dry-run artifacts, and the
+staging/labeling hot-path microbenchmark by ``--staging`` (also emits
+``BENCH_staging.json``; standalone: ``python -m benchmarks.bench_staging``).
 """
 from __future__ import annotations
 
@@ -13,8 +15,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
-    from benchmarks import paper_figures
     print("name,us_per_call,derived")
+    if "--staging" in sys.argv[1:]:
+        from benchmarks import bench_staging
+        for name, us, derived in bench_staging.rows():
+            print(f"{name},{us:.1f},{derived}")
+        return
+    from benchmarks import paper_figures
     for fn in paper_figures.ALL:
         for name, us, derived in fn():
             print(f"{name},{us:.1f},{derived}")

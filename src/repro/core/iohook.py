@@ -19,7 +19,11 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.fabric import Fabric
-from repro.core.staging import StagingReport, stage_collective, stage_naive
+from repro.core.staging import (StagingReport, stage_collective,
+                                stage_naive, stage_pipelined)
+
+_STAGE_FNS = {"collective": stage_collective, "pipelined": stage_pipelined,
+              "naive": stage_naive}
 
 
 @dataclass(frozen=True)
@@ -83,8 +87,19 @@ def resolve_manifest(fabric: Fabric, patterns: Sequence[str], t0: float
 
 
 def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
-                collective: bool = True) -> HookResult:
-    """Execute the hook: resolve globs once, broadcast, stage collectively."""
+                collective: bool = True, mode: Optional[str] = None
+                ) -> HookResult:
+    """Execute the hook: resolve globs once, broadcast, stage collectively.
+
+    ``mode`` selects the staging engine ("collective", "pipelined", "naive")
+    and overrides the legacy ``collective`` flag when given.
+    """
+    if mode is None:
+        mode = "collective" if collective else "naive"
+    if mode not in _STAGE_FNS:
+        raise ValueError(f"unknown staging mode {mode!r}; expected one of "
+                         f"{sorted(_STAGE_FNS)}")
+    stage = _STAGE_FNS[mode]
     reports: List[StagingReport] = []
     t_meta = 0.0
     t = t0
@@ -93,7 +108,6 @@ def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
         files, t_resolved = resolve_manifest(fabric, entry.files, t)
         t_meta += t_resolved - t
         t = t_resolved
-        stage = stage_collective if collective else stage_naive
         rep, t = stage(fabric, files, t)
         reports.append(rep)
         all_files.extend(files)

@@ -1,31 +1,40 @@
 """Collective data staging — the paper's key contribution, both fabrics.
 
-Host-level (``stage_collective`` / ``stage_naive``): the MPI-IO
-``MPI_File_read_all`` two-phase pattern over the simulated fabric. Leaders
-read disjoint 1/P stripes (aggregate FS traffic = 1x the dataset, at the
-coordinated sequential rate), then a ring all-gather replicates stripes to
-every node-local store. The naive baseline has every host read the full
+Host-level (``stage_collective`` / ``stage_pipelined`` / ``stage_naive``):
+the MPI-IO ``MPI_File_read_all`` two-phase pattern over the simulated fabric.
+Leaders read disjoint 1/P stripes (aggregate FS traffic = 1x the dataset, at
+the coordinated sequential rate), then a ring all-gather replicates stripes
+to every node-local store. The naive baseline has every host read the full
 dataset uncoordinated — the paper's measured 21 GB/s vs 101 GB/s regime.
+``stage_pipelined`` chunks the two phases and overlaps stripe reads with
+all-gather segments (double-buffered two-phase I/O), hiding most of the FS
+read time behind the interconnect.
+
+Replica delivery is zero-copy: a staged file's stripes are contiguous, so
+the assembled replica IS the source buffer — every ``NodeLocalStore``
+receives one shared read-only view instead of P concatenated copies. The
+simulated-time accounting (per-host write bandwidth) is unchanged; only the
+real memory traffic of the simulator goes away.
 
 Device-level (``device_replicate`` / ``device_shard``): the same algorithm
 expressed on the JAX mesh with shard_map + lax.all_gather. Each process
 contributes its 1/P shard; the all-gather rides ICI. Used by checkpoint
 restore and the input pipeline; testable on CPU fake devices.
 
-Both byte-exact: tests assert staged replicas equal the source.
+All modes byte-exact: tests assert staged replicas equal the source.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.core.fabric import Fabric
 
 
@@ -35,10 +44,13 @@ class StagingReport:
     n_hosts: int
     total_bytes: int              # dataset bytes (pre-replication)
     stage_time: float = 0.0       # FS read phase (simulated s)
-    comm_time: float = 0.0        # interconnect replication phase
+    comm_time: float = 0.0        # interconnect replication phase (exposed)
     write_time: float = 0.0       # node-local write phase
     fs_bytes: int = 0             # bytes actually read from shared FS
     net_bytes: int = 0            # bytes moved on the interconnect
+    mode: str = "collective"      # collective | pipelined | naive
+    n_chunks: int = 0             # pipelined: total all-gather segments
+    overlap_saved: float = 0.0    # pipelined: phase time hidden by overlap
 
     @property
     def total_time(self) -> float:
@@ -63,9 +75,43 @@ def _stripes(total: int, parts: int) -> List[Tuple[int, int]]:
     return out
 
 
+def _replica_view(fabric: Fabric, path: str) -> np.ndarray:
+    """The assembled replica of a staged file, zero-copy.
+
+    The P stripes of a file are contiguous and cover it exactly, so the
+    reassembled replica is byte-identical to the source buffer: hand out one
+    read-only view instead of materialising P (or even 1) concatenated
+    copies. Read-only so a store cannot mutate the shared FS through it.
+    """
+    view = fabric.fs.files[path].view()
+    view.setflags(write=False)
+    return view
+
+
+def _deliver_replicas(fabric: Fabric, paths: Sequence[str]) -> float:
+    """Write one shared replica view per file to every node-local store.
+
+    Hosts write in parallel (max across hosts); a host's files serialize on
+    its local-store bandwidth (times ACCUMULATE across files — the seed took
+    a max, undercounting multi-file staging).
+    """
+    replicas = {p: _replica_view(fabric, p) for p in paths}
+    t_write = 0.0
+    for host in fabric.hosts:
+        t_write = max(t_write, host.store.write_many(replicas, 0.0))
+    return t_write
+
+
 # ---------------------------------------------------------------------------
 # host-level staging (fabric)
 # ---------------------------------------------------------------------------
+
+def _coll_overhead(fabric: Fabric) -> float:
+    """Per-file MPI_File_read_all sync overhead; grows ~log2(P)."""
+    c = fabric.constants
+    return c.coll_latency_base + c.coll_latency_log * max(
+        0.0, math.log2(max(fabric.n_hosts, 2)))
+
 
 def stage_collective(fabric: Fabric, paths: Sequence[str],
                      t0: float = 0.0) -> Tuple[StagingReport, float]:
@@ -76,42 +122,83 @@ def stage_collective(fabric: Fabric, paths: Sequence[str],
     Returns (report, completion time).
     """
     P_ = fabric.n_hosts
-    c = fabric.constants
     fs0 = fabric.fs.bytes_read
     net0 = fabric.net.bytes_moved
     total = sum(fabric.fs.size(p) for p in paths)
-    rep = StagingReport(n_hosts=P_, total_bytes=total)
+    rep = StagingReport(n_hosts=P_, total_bytes=total, mode="collective")
 
-    # per-file MPI_File_read_all sync overhead grows ~log2(P)
-    coll_overhead = c.coll_latency_base + c.coll_latency_log * max(
-        0.0, math.log2(max(P_, 2)))
+    coll_overhead = _coll_overhead(fabric)
     t_read_done = t0
     for path in paths:
         size = fabric.fs.size(path)
-        t_file = t0
-        for i, (off, sz) in enumerate(_stripes(size, P_)):
-            # stripes are issued concurrently; FS serializes bandwidth only
-            _, t_done = fabric.fs.read(path, off, sz, t0, coordinated=True)
-            t_file = max(t_file, t_done)
+        # stripes are issued concurrently; FS serializes bandwidth only
+        _, t_file = fabric.fs.read_striped(path, _stripes(size, P_), t0,
+                                           coordinated=True)
         t_read_done = max(t_read_done, t_file) + coll_overhead
     rep.stage_time = t_read_done - t0
 
     # phase 2: ring all-gather of the (max) stripe, all hosts in parallel
     stripe_bytes = max(1, (total + P_ - 1) // P_)
-    t_comm = fabric.net.ring_allgather_time(stripe_bytes, P_)
-    rep.comm_time = t_comm
+    rep.comm_time = fabric.net.ring_allgather_time(stripe_bytes, P_)
 
-    # reassemble and write replicas (hosts write in parallel -> max time)
-    t_write = 0.0
+    rep.write_time = _deliver_replicas(fabric, paths)
+    rep.fs_bytes = fabric.fs.bytes_read - fs0
+    rep.net_bytes = fabric.net.bytes_moved - net0
+    return rep, t0 + rep.total_time
+
+
+def stage_pipelined(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
+                    chunk_bytes: int = 8 << 20
+                    ) -> Tuple[StagingReport, float]:
+    """Two-phase collective staging with chunked read/all-gather overlap.
+
+    Each file's striped read is split into segments of ~``chunk_bytes`` per
+    host; the ring all-gather of segment k runs while the leaders read
+    segment k+1 (double-buffered two-phase I/O). The critical path is
+
+        t_comm[k] = max(t_comm[k-1], t_read[k]) + allgather(seg_k)
+
+    so all but the first segment's FS time hides behind the interconnect
+    (or vice versa, whichever is slower). ``overlap_saved`` reports the
+    serial-phase time hidden. Delivered replicas and FS byte accounting are
+    identical to ``stage_collective``; ``net_bytes`` can exceed it by up to
+    P * n_chunks bytes of per-segment ceil-rounding in the stripe sizes.
+    """
+    P_ = fabric.n_hosts
+    fs0 = fabric.fs.bytes_read
+    net0 = fabric.net.bytes_moved
+    total = sum(fabric.fs.size(p) for p in paths)
+    rep = StagingReport(n_hosts=P_, total_bytes=total, mode="pipelined")
+
+    coll_overhead = _coll_overhead(fabric)
+    t_read_done = t0     # leader read stream completion (incl. sync)
+    t_comm = t0          # ring all-gather stream
+    comm_total = 0.0
     for path in paths:
         size = fabric.fs.size(path)
-        blob = np.concatenate([fabric.fs.files[path][off:off + sz]
-                               for off, sz in _stripes(size, P_)]) \
-            if P_ > 1 else fabric.fs.files[path]
-        for host in fabric.hosts:
-            t_end = host.store.write(path, blob, 0.0)
-            t_write = max(t_write, t_end)
-    rep.write_time = t_write
+        per_host = max(1, (size + P_ - 1) // P_)
+        n_seg = max(1, (per_host + chunk_bytes - 1) // chunk_bytes)
+        t_seg = t0
+        for off, seg in _stripes(size, n_seg):       # file-range segments
+            # all reads issue at t0: fs.busy_until serializes the bandwidth
+            # and per-request latencies overlap, exactly as in
+            # stage_collective — per-file sync overheads accumulate in
+            # t_read_done OUTSIDE the busy stream, so stage_time matches
+            # the collective engine for the same paths
+            _, t_seg = fabric.fs.read_striped(
+                path, [(off + o, s) for o, s in _stripes(seg, P_)],
+                t0, coordinated=True)
+            seg_stripe = max(1, (seg + P_ - 1) // P_)
+            dt = fabric.net.ring_allgather_time(seg_stripe, P_)
+            comm_total += dt
+            t_comm = max(t_comm, t_seg) + dt         # gather rides behind
+            rep.n_chunks += 1
+        t_read_done = max(t_read_done, t_seg) + coll_overhead
+    rep.stage_time = t_read_done - t0
+    rep.comm_time = max(0.0, t_comm - t_read_done)   # exposed (unhidden)
+    rep.overlap_saved = comm_total - rep.comm_time
+
+    rep.write_time = _deliver_replicas(fabric, paths)
     rep.fs_bytes = fabric.fs.bytes_read - fs0
     rep.net_bytes = fabric.net.bytes_moved - net0
     return rep, t0 + rep.total_time
@@ -124,7 +211,7 @@ def stage_naive(fabric: Fabric, paths: Sequence[str],
     P_ = fabric.n_hosts
     fs0 = fabric.fs.bytes_read
     total = sum(fabric.fs.size(p) for p in paths)
-    rep = StagingReport(n_hosts=P_, total_bytes=total)
+    rep = StagingReport(n_hosts=P_, total_bytes=total, mode="naive")
     t_done = t0
     for path in paths:
         size = fabric.fs.size(path)
@@ -132,7 +219,11 @@ def stage_naive(fabric: Fabric, paths: Sequence[str],
             # concurrent uncoordinated reads: bandwidth serializes on the
             # shared FS, per-request latency overlaps across hosts
             data, t_r = fabric.fs.read(path, 0, size, t0, coordinated=False)
-            host.store.write(path, data, 0.0)
+            # fs.read returns a view of the source buffer: same read-only
+            # guard as the collective paths, so no store can mutate the FS
+            replica = data.view()
+            replica.setflags(write=False)
+            host.store.write(path, replica, 0.0)
             t_done = max(t_done, t_r)
     rep.stage_time = t_done - t0
     rep.write_time = total / fabric.constants.local_bw
@@ -152,14 +243,12 @@ def device_replicate(mesh: Mesh, x: jax.Array, axis: str = "data"
     This is the staging all-gather: read-shards once, replicate over ICI —
     instead of every participant fetching the full buffer from storage.
     """
-    axes = tuple(mesh.axis_names)
     spec_in = P(axis)
     spec_out = P()
 
     def body(shard):
         return jax.lax.all_gather(shard, axis, tiled=True)
 
-    from jax import shard_map
     fn = shard_map(body, mesh=mesh, in_specs=(spec_in,), out_specs=spec_out,
                    check_vma=False)
     return jax.jit(fn)(x)

@@ -52,6 +52,47 @@ _REPLICA_IOTA_DIMS_RE = re.compile(
     r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]T\(([\d,]+)\)")
 
 
+def _op_args(line: str, opname: str) -> Optional[str]:
+    """Operand list of ``opname(...)`` with balanced parentheses — typed
+    tuple-shaped operands ("(f32[128]{0}, s32[128]{0}) %sort.1") contain
+    nested parens that a ``[^)]*`` capture would truncate."""
+    i = line.find(opname + "(")
+    if i < 0:
+        return None
+    start = i + len(opname) + 1
+    depth = 1
+    for j in range(start, len(line)):
+        ch = line[j]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start:j]
+    return None
+
+
+def _split_args(content: str) -> List[str]:
+    """Split an op's operand list on top-level commas only. Older XLA dumps
+    type every operand inline ("f32[128,128]{1,0} %arg"), so a naive
+    split(",") breaks inside the shape brackets."""
+    out: List[str] = []
+    depth, cur = 0, []
+    for ch in content:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [s.strip() for s in out if s.strip()]
+
+
 def _parse_shape(text: str) -> Tuple[int, int]:
     """Return (elements, bytes) for a shape string like bf16[16,128]{1,0} or
     a tuple shape — tuples summed."""
@@ -147,8 +188,8 @@ class HloModule:
             if "compare(" in ln and "direction=LT" in ln:
                 args = re.search(r"compare\(([^)]*)\)", ln)
                 if args:
-                    names = [a.strip().lstrip("%") for a in
-                             args.group(1).split(",")]
+                    names = [a.split()[-1].lstrip("%") for a in
+                             _split_args(args.group(1))]
                     for n in names:
                         if n in const_vals:
                             return max(1, const_vals[n])
@@ -157,13 +198,15 @@ class HloModule:
     # ------------------------------------------------------------------
     def _operand_bytes(self, comp: str, line: str, opname: str) -> float:
         """Sum bytes of operands referenced inside op(...)."""
-        m = re.search(re.escape(opname) + r"\(([^)]*)\)", line)
-        if not m:
+        content = _op_args(line, opname)
+        if content is None:
             return 0.0
         total = 0.0
-        for arg in m.group(1).split(","):
-            name = arg.strip().lstrip("%")
-            shape = self.op_defs.get(comp, {}).get(name)
+        for arg in _split_args(content):
+            if "[" in arg:                   # typed operand: shape inline
+                total += _parse_shape(arg)[1]
+                continue
+            shape = self.op_defs.get(comp, {}).get(arg.lstrip("%"))
             if shape:
                 total += _parse_shape(shape)[1]
         return total
@@ -234,14 +277,16 @@ class HloModule:
             return None
         if opcode == "dot":
             # contracted size from lhs shape and contracting dims
-            args = re.search(r"dot\(([^)]*)\)", line)
+            content = _op_args(line, "dot")
             contracted = 1
-            if args:
-                lhs = args.group(1).split(",")[0].strip().lstrip("%")
-                lhs_shape = self.op_defs.get(comp, {}).get(lhs, "")
+            if content:
+                lhs_seg = _split_args(content)[0]
+                if "[" not in lhs_seg:       # untyped: resolve via op_defs
+                    lhs_seg = self.op_defs.get(comp, {}).get(
+                        lhs_seg.lstrip("%"), "")
                 dm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-                if dm and lhs_shape:
-                    sm = _SHAPE_RE.search(lhs_shape)
+                if dm and lhs_seg:
+                    sm = _SHAPE_RE.search(lhs_seg)
                     if sm:
                         dims = [int(x) for x in sm.group(2).split(",") if x]
                         for ci in dm.group(1).split(","):
@@ -254,14 +299,15 @@ class HloModule:
             if "dynamic-update-slice" in name or "dynamic_update_slice" in name:
                 # in-place update fusion: traffic = the update slice, not the
                 # whole aliased buffer (read slice + write slice)
-                m = re.search(r"fusion\(([^)]*)\)", line)
+                content = _op_args(line, "fusion")
                 small = 0.0
-                if m:
-                    for arg in m.group(1).split(","):
-                        shape = self.op_defs.get(comp, {}).get(
-                            arg.strip().lstrip("%"))
-                        if shape:
-                            b = _parse_shape(shape)[1]
+                if content:
+                    for arg in _split_args(content):
+                        if "[" not in arg:
+                            arg = self.op_defs.get(comp, {}).get(
+                                arg.lstrip("%"), "")
+                        if arg:
+                            b = _parse_shape(arg)[1]
                             if b != res_by:
                                 small += b
                 c.bytes = 2.0 * small
@@ -297,14 +343,17 @@ class HloModule:
             # in-place on TPU: traffic = read+write of the UPDATE slice, not
             # the whole buffer (scan ys-stacking would otherwise count the
             # full stack once per iteration)
-            m = re.search(r"dynamic-update-slice\(([^)]*)\)", line)
+            content = _op_args(line, "dynamic-update-slice")
             upd = 0.0
-            if m:
-                args = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+            if content:
+                args = _split_args(content)
                 if len(args) >= 2:
-                    shape = self.op_defs.get(comp, {}).get(args[1])
-                    if shape:
-                        upd = _parse_shape(shape)[1]
+                    seg = args[1]
+                    if "[" not in seg:
+                        seg = self.op_defs.get(comp, {}).get(
+                            seg.lstrip("%"), "")
+                    if seg:
+                        upd = _parse_shape(seg)[1]
             c.bytes = 2.0 * upd if upd else res_by
             return c
         if opcode == "dynamic-slice":

@@ -35,18 +35,25 @@ def simulate_detector_frames(n_frames: int, size: int = 256,
                              n_spots: int = 12, seed: int = 0
                              ) -> Tuple[np.ndarray, np.ndarray]:
     """Synthetic diffraction frames: Gaussian spots on Poisson background.
-    Returns (frames (F,size,size) float32, dark (size,size))."""
+    Returns (frames (F,size,size) float32, dark (size,size)).
+
+    Spot rendering is fully vectorized: an isotropic Gaussian separates into
+    a row factor and a column factor, so all F x n_spots spots render as one
+    (F,S,H) x (F,S,W) einsum — no per-frame/per-spot Python loops.
+    """
     rng = np.random.default_rng(seed)
     dark = rng.poisson(8.0, (size, size)).astype(np.float32)
     frames = rng.poisson(8.0, (n_frames, size, size)).astype(np.float32)
-    yy, xx = np.mgrid[0:size, 0:size]
-    for f in range(n_frames):
-        for _ in range(n_spots):
-            cy, cx = rng.uniform(8, size - 8, 2)
-            amp = rng.uniform(800, 4000)
-            sig = rng.uniform(1.0, 2.5)
-            frames[f] += amp * np.exp(-((yy - cy) ** 2 + (xx - cx) ** 2)
-                                      / (2 * sig ** 2))
+    if n_frames and n_spots:
+        cy = rng.uniform(8, size - 8, (n_frames, n_spots, 1))
+        cx = rng.uniform(8, size - 8, (n_frames, n_spots, 1))
+        amp = rng.uniform(800, 4000, (n_frames, n_spots, 1))
+        sig = rng.uniform(1.0, 2.5, (n_frames, n_spots, 1))
+        r = np.arange(size, dtype=np.float64)
+        gy = amp * np.exp(-((r - cy) ** 2) / (2 * sig ** 2))   # (F,S,H)
+        gx = np.exp(-((r - cx) ** 2) / (2 * sig ** 2))         # (F,S,W)
+        frames += np.einsum("fsh,fsw->fhw", gy, gx,
+                            optimize=True).astype(np.float32)
     return frames, dark
 
 
@@ -65,8 +72,92 @@ def stream_to_fs(fabric: Fabric, frames: np.ndarray, prefix: str = "scan"
 # stage 1: reduction
 # ---------------------------------------------------------------------------
 
+def label_components(mask: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Vectorized 4-connected component labeling (run-based two-pass).
+
+    Pass 1 finds horizontal runs of the whole mask at once (a sentinel
+    column keeps runs from spanning rows) and unions runs that overlap
+    between adjacent rows; pass 2 paints final labels with one scatter.
+    Work is O(H*W) vectorized + O(#runs) scalar — for sparse diffraction
+    masks #runs is ~100x smaller than #pixels, which is what makes stage-1
+    labeling faster than the filter kernel it post-processes.
+
+    Label numbering matches ``_union_find_label`` exactly (components
+    numbered by first pixel in row-major scan order), so the two are
+    interchangeable; tests assert equivalence.
+    """
+    H, W = mask.shape
+    m = np.ascontiguousarray(mask, dtype=bool)
+    if not m.any():
+        return np.zeros((H, W), np.int32), 0
+
+    # --- pass 1a: horizontal runs over the flattened mask -----------------
+    padded = np.zeros((H, W + 1), bool)          # sentinel column: runs
+    padded[:, :W] = m                            # never cross a row edge
+    flat = padded.ravel()
+    d = np.diff(flat.view(np.int8))
+    starts = np.flatnonzero(d == 1) + 1
+    ends = np.flatnonzero(d == -1) + 1           # every run closes (sentinel)
+    if flat[0]:
+        starts = np.concatenate(([0], starts))
+    rows = starts // (W + 1)
+    col_s = starts - rows * (W + 1)
+    col_e = ends - rows * (W + 1)
+    n_runs = len(starts)
+
+    # --- pass 1b: union runs that overlap between adjacent rows ----------
+    # Encode (row, col) into one monotone key so a SINGLE pair of
+    # searchsorted calls finds, for every run i in row r, the contiguous
+    # range [lo_i, hi_i) of row r-1 runs j with col_s[j] < col_e[i] and
+    # col_e[j] > col_s[i] (4-connectivity overlap). Runs in other rows fall
+    # outside [lo_i, hi_i) by key construction (row-0 runs get hi <= lo).
+    stride = W + 2                               # > any col value
+    key_s = rows * stride + col_s
+    key_e = rows * stride + col_e
+    target = (rows - 1) * stride
+    lo = np.searchsorted(key_e, target + col_s, side="right")
+    hi = np.searchsorted(key_s, target + col_e, side="left")
+    n_ov = np.maximum(hi - lo, 0)
+    pair_i = np.repeat(np.arange(n_runs), n_ov)
+    off = np.concatenate(([0], n_ov.cumsum()[:-1]))
+    pair_j = np.arange(n_ov.sum()) + np.repeat(lo - off, n_ov)
+
+    parent = np.arange(n_runs, dtype=np.int64)
+
+    def find(a: int) -> int:
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    for i, j in zip(pair_i.tolist(), pair_j.tolist()):
+        ri, rj = find(i), find(j)
+        if ri != rj:                         # min-root union keeps scan order
+            if rj < ri:
+                ri, rj = rj, ri
+            parent[rj] = ri
+    # full path compression, vectorized (log-depth)
+    while True:
+        p2 = parent[parent]
+        if np.array_equal(p2, parent):
+            break
+        parent = p2
+
+    # --- pass 2: renumber roots in scan order, paint runs -----------------
+    roots = np.unique(parent)                # sorted == first-run order
+    run_label = (np.searchsorted(roots, parent) + 1).astype(np.int32)
+    lengths = ends - starts
+    pos = (np.arange(lengths.sum()) + np.repeat(
+        starts - np.concatenate(([0], lengths.cumsum()[:-1])), lengths))
+    out = np.zeros(H * (W + 1), np.int32)
+    out[pos] = np.repeat(run_label, lengths)
+    return out.reshape(H, W + 1)[:, :W], len(roots)
+
+
 def _union_find_label(mask: np.ndarray) -> Tuple[np.ndarray, int]:
-    """4-connected component labeling (host-side)."""
+    """Pure-Python pixel-loop 4-connected labeling. Kept as the reference
+    oracle for :func:`label_components` (and the benchmark baseline) — the
+    hot path uses the vectorized labeler."""
     H, W = mask.shape
     labels = np.zeros((H, W), np.int32)
     parent: List[int] = [0]
@@ -130,16 +221,22 @@ def reduce_frames(frames: np.ndarray, dark: np.ndarray,
                                   threshold=threshold)
     masks = np.asarray(masks)
     counts = np.asarray(counts)
+    H, W = frames.shape[1:]
+    yy, xx = np.divmod(np.arange(H * W), W)
     out = []
     for f in range(frames.shape[0]):
-        labels, n = _union_find_label(masks[f] > 0)
-        peaks = np.zeros((n, 3), np.float32)
-        img = frames[f]
-        for lbl in range(1, n + 1):
-            ys, xs = np.nonzero(labels == lbl)
-            inten = img[ys, xs]
-            w = inten / max(inten.sum(), 1e-9)
-            peaks[lbl - 1] = ((ys * w).sum(), (xs * w).sum(), inten.sum())
+        labels, n = label_components(masks[f] > 0)
+        # intensity-weighted centroids: one bincount pass per moment instead
+        # of a per-label nonzero scan over the full frame
+        lab = labels.ravel()
+        sel = np.flatnonzero(lab)
+        l_s, v_s = lab[sel], frames[f].ravel()[sel].astype(np.float64)
+        s_i = np.bincount(l_s, weights=v_s, minlength=n + 1)
+        s_y = np.bincount(l_s, weights=v_s * yy[sel], minlength=n + 1)
+        s_x = np.bincount(l_s, weights=v_s * xx[sel], minlength=n + 1)
+        denom = np.maximum(s_i, 1e-9)
+        peaks = np.stack([s_y / denom, s_x / denom, s_i],
+                         axis=1)[1:].astype(np.float32)
         out.append(ReducedFrame(f, int(counts[f]), n, peaks))
     return out
 

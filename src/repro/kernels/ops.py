@@ -45,5 +45,6 @@ def rwkv6_wkv(r, k, v, w, u, chunk=32):
 
 @functools.partial(jax.jit, static_argnames=("threshold",))
 def hedm_reduce(frames, dark, threshold=100.0):
-    return _hr.hedm_reduce(frames, dark, threshold=threshold,
-                           interpret=not _on_tpu())
+    # interpret auto-selection (compiled Mosaic on TPU, interpreter
+    # elsewhere) lives in the kernel itself: interpret=None
+    return _hr.hedm_reduce(frames, dark, threshold=threshold)

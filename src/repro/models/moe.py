@@ -21,10 +21,10 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.compat import shard_map
 from repro.models.layers import Params, dense_init, init_mlp, mlp
 
 

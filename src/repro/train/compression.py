@@ -16,8 +16,9 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 
 def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:

@@ -18,8 +18,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed.sharding import ShardCtx

@@ -26,8 +26,8 @@ def test_device_replicate_and_staged_restore():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core.staging import device_replicate, staged_restore
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.core.compat import make_auto_mesh
+        mesh = make_auto_mesh((4, 2), ("data", "model"))
         x = np.arange(64 * 8, dtype=np.float32).reshape(64, 8)
         xs = jax.device_put(x, NamedSharding(mesh, P("data")))
         rep = device_replicate(mesh, xs, "data")
@@ -78,6 +78,18 @@ def test_sharded_train_step_runs_and_matches_single_device():
     assert "OK" in out
 
 
+def _partial_manual_shard_map_supported() -> bool:
+    """Partial-manual shard_map (manual 'pod', auto data/model) crashes XLA's
+    SPMD partitioner on jax 0.4.x (Check failed: sharding.IsManualSubgroup());
+    it needs the jax>=0.6 axis_names API generation."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.compat import _NEW_API
+    return _NEW_API
+
+
+@pytest.mark.skipif(not _partial_manual_shard_map_supported(),
+                    reason="partial-manual shard_map unsupported by this "
+                           "jax/XLA (crashes the SPMD partitioner)")
 def test_compressed_dcn_train_step_on_pod_mesh():
     out = run_with_devices(textwrap.dedent("""
         import jax, jax.numpy as jnp

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 key = jax.random.PRNGKey(0)
 
@@ -110,6 +110,79 @@ def test_hedm_reduce_matches_reference():
     assert np.array_equal(np.asarray(m1), np.asarray(m2))
     assert np.array_equal(np.asarray(c1), np.asarray(c2))
     assert int(np.asarray(c1)[1]) > 0          # the spot was detected
+
+
+def test_hedm_reduce_row_tiled_matches_untiled():
+    """Row tiling with 2-row halo must be invisible: tiled == untiled ==
+    reference, including when H is not a multiple of the tile."""
+    from repro.kernels.hedm_reduce import hedm_reduce
+    from repro.kernels.hedm_reduce_ref import reference
+    rng = np.random.default_rng(3)
+    for H, W, tile in [(64, 64, 16), (72, 48, 32), (40, 56, 8)]:
+        frames = rng.integers(0, 40, (2, H, W)).astype(np.float32)
+        frames[0, H // 2:H // 2 + 3, W // 2:W // 2 + 3] += 3000
+        frames[1, 0:3, 0:3] += 3000            # spot crossing the edge
+        dark = np.full((H, W), 8.0, np.float32)
+        m_ref, c_ref = reference(jnp.asarray(frames), jnp.asarray(dark),
+                                 threshold=150.0)
+        m_t, c_t = hedm_reduce(jnp.asarray(frames), jnp.asarray(dark),
+                               threshold=150.0, tile_rows=tile)
+        assert np.array_equal(np.asarray(m_t), np.asarray(m_ref)), (H, W, tile)
+        assert np.array_equal(np.asarray(c_t), np.asarray(c_ref)), (H, W, tile)
+
+
+def test_hedm_reduce_exact_on_noisy_borders():
+    """High-amplitude noise makes frame-border pixels threshold-sensitive:
+    the fused kernel must still match the oracle bit-for-bit there (the
+    naive fusion of input-replicated halos does not)."""
+    from repro.kernels.hedm_reduce import hedm_reduce
+    from repro.kernels.hedm_reduce_ref import reference
+    for seed in range(5):
+        for H, W, tiles in [(24, 24, (None, 8)),     # divisible
+                            (20, 16, (8,)),          # H % tile != 0
+                            (21, 24, (16, 4))]:      # partial last tile
+            rng = np.random.default_rng(seed)
+            frames = rng.integers(0, 400, (2, H, W)).astype(np.float32)
+            dark = np.zeros((H, W), np.float32)
+            m_ref, c_ref = reference(jnp.asarray(frames), jnp.asarray(dark),
+                                     threshold=150.0)
+            for tile in tiles:
+                m, c = hedm_reduce(jnp.asarray(frames), jnp.asarray(dark),
+                                   threshold=150.0, tile_rows=tile)
+                assert np.array_equal(np.asarray(m), np.asarray(m_ref)), \
+                    (seed, H, W, tile)
+                assert np.array_equal(np.asarray(c), np.asarray(c_ref)), \
+                    (seed, H, W, tile)
+
+
+def test_hedm_reduce_vmem_budget_forces_tiling():
+    """A small VMEM budget must row-tile large frames without changing the
+    result (and the picked tile must actually be smaller than the frame)."""
+    from repro.kernels.hedm_reduce import _pick_tile, hedm_reduce
+    from repro.kernels.hedm_reduce_ref import reference
+    assert _pick_tile(256, 256, 8 << 20) >= 256       # fits: one tile
+    small = _pick_tile(256, 256, 1 << 18)             # 256 KB budget: tiles
+    assert small < 256
+    rng = np.random.default_rng(4)
+    frames = rng.integers(0, 40, (1, 128, 64)).astype(np.float32)
+    frames[0, 60:64, 30:34] += 2500
+    dark = np.full((128, 64), 8.0, np.float32)
+    m_ref, c_ref = reference(jnp.asarray(frames), jnp.asarray(dark),
+                             threshold=150.0)
+    m, c = hedm_reduce(jnp.asarray(frames), jnp.asarray(dark),
+                       threshold=150.0, vmem_budget_bytes=1 << 17)
+    assert np.array_equal(np.asarray(m), np.asarray(m_ref))
+    assert np.array_equal(np.asarray(c), np.asarray(c_ref))
+
+
+def test_hedm_reduce_auto_interpret_default():
+    """interpret=None resolves by backend (interpreter off-TPU, compiled
+    Mosaic on TPU) — the default path must run on whatever backend this is."""
+    from repro.kernels.hedm_reduce import hedm_reduce
+    frames = jnp.zeros((1, 16, 16), jnp.float32)
+    dark = jnp.zeros((16, 16), jnp.float32)
+    mask, counts = hedm_reduce(frames, dark)          # must not raise
+    assert int(np.asarray(counts)[0]) == 0
 
 
 def test_hedm_reduce_finds_only_real_spots():

@@ -3,7 +3,7 @@ dataflow semantics (paper §III, Figs. 4/5, 12/13)."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.dataflow import Dataflow
 from repro.core.fabric import Fabric

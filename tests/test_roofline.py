@@ -83,8 +83,8 @@ def test_collective_ring_model_values():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.distributed.hlo_cost import analyze_hlo_text
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.core.compat import make_auto_mesh
+        mesh = make_auto_mesh((2, 4), ("data", "model"))
         def f(x, w):
             return x @ w
         xs = jax.ShapeDtypeStruct((64, 512), jnp.float32)

@@ -1,12 +1,13 @@
 """Staging framework: byte-exactness, traffic accounting, paper calibration."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.fabric import BGQ, Fabric, TPU_POD
 from repro.core.iohook import (BroadcastEntry, StagingSpec, naive_per_rank_globs,
                                resolve_manifest, run_io_hook)
-from repro.core.staging import _stripes, stage_collective, stage_naive
+from repro.core.staging import (_stripes, stage_collective, stage_naive,
+                                stage_pipelined)
 
 
 def make_fabric(n_hosts=8, n_files=4, size=1 << 16, seed=0):
@@ -106,6 +107,102 @@ def test_staging_equivalence_property(n_hosts, size, n_files):
     for hc, hn in zip(fab_c.hosts, fab_n.hosts):
         for p in paths:
             assert np.array_equal(hc.store.data[p], hn.store.data[p])
+
+
+def test_zero_copy_replicas_share_source_memory():
+    """Replica delivery hands out read-only VIEWS of the FS buffer — no
+    per-host copies — while staying byte-exact."""
+    fab, paths = make_fabric(n_hosts=8)
+    stage_collective(fab, paths)
+    for host in fab.hosts:
+        for p in paths:
+            replica = host.store.data[p]
+            assert np.shares_memory(replica, fab.fs.files[p])
+            assert not replica.flags.writeable
+            assert np.array_equal(replica, fab.fs.files[p])
+
+
+def test_zero_copy_byte_accounting_unchanged():
+    """fs_bytes/net_bytes under the zero-copy path: FS traffic is 1x the
+    dataset; the ring all-gather moves stripe * P * (P-1) bytes."""
+    n_hosts, n_files, size = 16, 3, 1 << 14
+    fab, paths = make_fabric(n_hosts=n_hosts, n_files=n_files, size=size)
+    rep, _ = stage_collective(fab, paths)
+    total = n_files * size
+    assert rep.fs_bytes == total
+    stripe = (total + n_hosts - 1) // n_hosts
+    assert rep.net_bytes == stripe * n_hosts * (n_hosts - 1)
+    # node-local write accounting still sees the full replicated volume
+    assert all(h.store.bytes_written == total for h in fab.hosts)
+
+
+def test_write_time_accumulates_across_files():
+    """Seed bug: multi-file write phase took a max; files on one host
+    serialize on local-store bandwidth, so times must accumulate."""
+    n_files, size = 4, 1 << 16
+    fab, paths = make_fabric(n_hosts=4, n_files=n_files, size=size)
+    rep, _ = stage_collective(fab, paths)
+    assert rep.write_time == pytest.approx(n_files * size / BGQ.local_bw)
+
+
+def test_pipelined_staging_byte_exact_and_accounted():
+    fab, paths = make_fabric(n_hosts=8, n_files=3, size=1 << 16)
+    rep, _ = stage_pipelined(fab, paths, chunk_bytes=1 << 12)
+    for host in fab.hosts:
+        for p in paths:
+            assert np.array_equal(host.store.data[p], fab.fs.files[p])
+    assert rep.mode == "pipelined"
+    assert rep.fs_bytes == 3 * (1 << 16)          # still 1x dataset
+    assert rep.n_chunks > 3                        # actually chunked
+
+
+def test_pipelined_overlap_beats_serial_phases():
+    """Chunked read/all-gather overlap hides phase time: pipelined total is
+    below collective's, by (close to) the modeled overlap_saved."""
+    size = 8 << 20
+    fab_c, paths = make_fabric(n_hosts=64, n_files=2, size=size)
+    fab_p, _ = make_fabric(n_hosts=64, n_files=2, size=size)
+    rep_c, _ = stage_collective(fab_c, paths)
+    rep_p, _ = stage_pipelined(fab_p, paths, chunk_bytes=1 << 15)
+    assert rep_p.overlap_saved > 0
+    assert rep_p.total_time < rep_c.total_time
+    assert rep_p.total_time + rep_p.overlap_saved >= 0.9 * (
+        rep_c.stage_time + rep_c.comm_time)
+
+
+def test_pipelined_stage_time_matches_collective():
+    """Per-file sync overheads must accumulate OUTSIDE the FS busy stream:
+    pipelined stage_time equals collective's, and pipelined never models
+    slower than serial two-phase — even for many small files where the
+    overheads dominate."""
+    def mk():
+        fab = Fabric(n_hosts=64, constants=BGQ)
+        blob = np.zeros(1 << 20, np.uint8)
+        paths = []
+        for i in range(50):
+            fab.fs.files[f"d/{i}"] = blob
+            paths.append(f"d/{i}")
+        return fab, paths
+
+    fab_c, paths = mk()
+    fab_p, _ = mk()
+    rep_c, _ = stage_collective(fab_c, paths)
+    rep_p, _ = stage_pipelined(fab_p, paths)
+    assert rep_p.stage_time == pytest.approx(rep_c.stage_time, abs=1e-12)
+    assert rep_p.total_time <= rep_c.total_time + 1e-12
+
+
+def test_iohook_pipelined_mode():
+    fab = Fabric(n_hosts=4, constants=BGQ)
+    for i in range(3):
+        fab.fs.put(f"scans/s{i}.bin", np.full(1 << 12, i, np.uint8))
+    res = run_io_hook(fab, StagingSpec([BroadcastEntry(("scans/*.bin",))]),
+                      mode="pipelined")
+    assert res.reports[0].mode == "pipelined"
+    for host in fab.hosts:
+        for i in range(3):
+            assert np.array_equal(host.store.data[f"scans/s{i}.bin"],
+                                  fab.fs.files[f"scans/s{i}.bin"])
 
 
 def test_iohook_declarative_spec_roundtrip():
