@@ -1,0 +1,137 @@
+"""End-to-end turnaround: batch stage-then-process vs overlapped streaming.
+
+One synthetic HEDM acquisition (48 x 128x128 float32 frames) is run both
+ways at several acquisition rates:
+
+  * **batch** — the paper's workflow: detector -> shared FS, wait for the
+    scan to close, ``stage_collective`` the whole dataset to every node,
+    then one-shot stage-1 reduction (``run_batch_hedm``);
+  * **stream** — frames are pushed straight into node memory as produced
+    (scatter + ring broadcast, bounded sliding window with backpressure)
+    and reduced per window while acquisition is still in flight
+    (``run_online_hedm``).
+
+Both paths run the REAL reduction over the node-local replicas and are
+asserted bit-identical per rate; the charged stage-1 cost is a declared
+``REDUCE_S_PER_FRAME`` simulated seconds per frame (the ManyTaskEngine
+duration idiom), so the turnaround comparison is deterministic. Acquisition
+and delivery times come from the fabric model (simulated seconds).
+
+Emits ``BENCH_streaming.json`` next to this file and harness CSV rows via
+:func:`rows` (wired into ``benchmarks.run --streaming``).
+
+Run directly:  PYTHONPATH=src python -m benchmarks.bench_streaming
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+Row = Tuple[str, float, str]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_streaming.json")
+
+N_HOSTS = 64
+N_FRAMES = 48
+FRAME_SIZE = 128
+WINDOW = 8                   # frames per online reduce batch
+CACHE_FRAMES = 16            # per-node sliding-window budget (frames)
+REDUCE_S_PER_FRAME = 0.15    # declared stage-1 cost (simulated s/frame)
+RATES_HZ = (2.0, 20.0, 200.0)   # acquisition-bound ... compute-bound
+
+
+def _fabric():
+    from repro.core.fabric import BGQ, Fabric
+    return Fabric(n_hosts=N_HOSTS, constants=BGQ)
+
+
+def bench_turnaround() -> List[dict]:
+    from repro.hedm.pipeline import (run_batch_hedm, run_online_hedm,
+                                     simulate_detector_frames)
+    frames, dark = simulate_detector_frames(N_FRAMES, size=FRAME_SIZE,
+                                            n_spots=8, seed=2)
+    out = []
+    for rate in RATES_HZ:
+        batch, t_batch, stage_rep = run_batch_hedm(
+            _fabric(), frames, dark, rate_hz=rate, use_kernel=False,
+            reduce_time_per_frame=REDUCE_S_PER_FRAME)
+        online = run_online_hedm(
+            _fabric(), frames, dark, rate_hz=rate, window=WINDOW,
+            use_kernel=False, cache_frames=CACHE_FRAMES,
+            reduce_time_per_frame=REDUCE_S_PER_FRAME)
+
+        byte_exact = len(online.reduced) == len(batch) and all(
+            a.frame_id == b.frame_id and a.n_spots == b.n_spots
+            and np.array_equal(a.peaks, b.peaks)
+            for a, b in zip(online.reduced, batch))
+        assert byte_exact, f"stream/batch HEDM mismatch at {rate} Hz"
+
+        t_acq = N_FRAMES / rate
+        out.append({
+            "name": f"turnaround_rate{rate:g}hz",
+            "rate_hz": rate,
+            "n_frames": N_FRAMES,
+            "frame_bytes": FRAME_SIZE * FRAME_SIZE * 4,
+            "acquisition_s": t_acq,
+            "batch_turnaround_s": t_batch,
+            "batch_stage_s": stage_rep.total_time,
+            "stream_turnaround_s": online.turnaround,
+            "stream_first_window_s": online.window_done[0],
+            "stream_stall_s": online.stream.stall_time,
+            "stream_evictions": online.stream.evictions,
+            "stream_peak_resident_bytes": online.stream.peak_resident_bytes,
+            "speedup": t_batch / online.turnaround,
+            "byte_exact": byte_exact,
+        })
+    return out
+
+
+def run_benchmarks() -> dict:
+    report = {
+        "config": {
+            "n_hosts": N_HOSTS, "n_frames": N_FRAMES,
+            "frame_size": FRAME_SIZE, "window_frames": WINDOW,
+            "cache_frames": CACHE_FRAMES,
+            "reduce_s_per_frame": REDUCE_S_PER_FRAME,
+        },
+        "turnaround": bench_turnaround(),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def rows(report=None) -> List[Row]:
+    """Harness CSV rows (name, us_per_call, derived) for benchmarks.run.
+    us_per_call carries the simulated streaming turnaround in µs."""
+    if report is None:
+        report = run_benchmarks()
+    out: List[Row] = []
+    for r in report["turnaround"]:
+        out.append((f"bench_stream_{r['name']}",
+                    r["stream_turnaround_s"] * 1e6,
+                    f"speedup_vs_batch={r['speedup']:.2f}x"))
+    return out
+
+
+def main() -> None:
+    report = run_benchmarks()
+    for r in report["turnaround"]:
+        print(f"{r['name']}: acq {r['acquisition_s']:.1f}s | batch "
+              f"{r['batch_turnaround_s']:.2f}s -> stream "
+              f"{r['stream_turnaround_s']:.2f}s  ({r['speedup']:.2f}x, "
+              f"first window at {r['stream_first_window_s']:.2f}s, "
+              f"stall {r['stream_stall_s']:.2f}s, "
+              f"{r['stream_evictions']} evictions, byte-exact)")
+    print(f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    main()

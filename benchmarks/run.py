@@ -5,6 +5,8 @@ table (EXPERIMENTS.md §Roofline) is produced separately by
 ``python -m benchmarks.roofline`` from the dry-run artifacts, and the
 staging/labeling hot-path microbenchmark by ``--staging`` (also emits
 ``BENCH_staging.json``; standalone: ``python -m benchmarks.bench_staging``).
+``--streaming`` runs the batch-vs-streaming turnaround comparison (emits
+``BENCH_streaming.json``; standalone: ``python -m benchmarks.bench_streaming``).
 """
 from __future__ import annotations
 
@@ -19,6 +21,11 @@ def main() -> None:
     if "--staging" in sys.argv[1:]:
         from benchmarks import bench_staging
         for name, us, derived in bench_staging.rows():
+            print(f"{name},{us:.1f},{derived}")
+        return
+    if "--streaming" in sys.argv[1:]:
+        from benchmarks import bench_streaming
+        for name, us, derived in bench_streaming.rows():
             print(f"{name},{us:.1f},{derived}")
         return
     from benchmarks import paper_figures

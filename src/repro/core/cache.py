@@ -23,7 +23,13 @@ from repro.core.fabric import Fabric, NodeLocalStore
 
 @dataclass
 class TaskInputCache:
-    """Per-process in-memory cache over a node-local store."""
+    """Per-process in-memory cache over a node-local store.
+
+    ``capacity_bytes`` bounds the deserialized working set (bytes; default
+    16 GiB ~ a BG/Q I/O-node's RAM share); beyond it, entries evict FIFO.
+    ``read_time_charged`` accumulates SIMULATED seconds spent on cache
+    misses (``size / local_read_bw``) — hits are free, which is exactly
+    the §VI-B effect; no wall-clock time is ever involved."""
     store: NodeLocalStore
     capacity_bytes: int = 1 << 34
     _mem: Dict[str, Any] = field(default_factory=dict)
@@ -35,6 +41,13 @@ class TaskInputCache:
     def get(self, path: str,
             deserialize: Callable[[np.ndarray], Any] = lambda b: b
             ) -> Optional[Any]:
+        """The deserialized value of `path`, or None if it is resident on
+        neither this cache nor the backing node-local store.
+
+        `deserialize` maps the raw uint8 buffer to the application object
+        (parsed once, on the miss that faults it in); the raw byte size —
+        not the deserialized footprint — is what counts against
+        ``capacity_bytes`` and the charged read time."""
         if path in self._mem:
             self.hits += 1              # free: already in application memory
             return self._mem[path]
@@ -58,4 +71,5 @@ class TaskInputCache:
 
     @property
     def resident_bytes(self) -> int:
+        """Raw bytes currently held (the eviction accounting basis)."""
         return sum(self._sizes.values())

@@ -6,6 +6,10 @@ Futures + deferred task graph. Building blocks:
   * ``Dataflow.merge_pairwise``   -> recursive pairwise reduction (Fig. 4's
     merge(), including the no-barrier property: merges become eligible as
     soon as their two inputs are ready, while other maps still run)
+  * ``Dataflow.frame_task(fn, record)`` -> a node keyed to a streamed
+    detector frame (`repro.core.streaming.FrameRecord`): it becomes
+    eligible the moment the frame lands on the node-local stores
+    (``record.t_avail``), while acquisition is still in flight.
 
 Execution is delegated to the ManyTaskEngine (simulated time + optional real
 payloads), preserving dataflow ordering.
@@ -43,8 +47,11 @@ class Dataflow:
     # -- graph construction -------------------------------------------------
     def task(self, fn: Callable[..., Any], *args: Any,
              duration: Optional[float] = None,
-             inputs: Sequence[str] = ()) -> Future:
-        """Add a node. `args` may contain Futures (become dependencies)."""
+             inputs: Sequence[str] = (),
+             not_before: float = 0.0) -> Future:
+        """Add a node. `args` may contain Futures (become dependencies).
+        `not_before` (simulated s) delays eligibility — the frame-future
+        hook: a task keyed to a streamed frame passes its ``t_avail``."""
         tid = len(self._tasks)
         deps = tuple(a.task_id for a in args if isinstance(a, Future))
 
@@ -56,19 +63,34 @@ class Dataflow:
             return out
 
         self._tasks.append(Task(task_id=tid, fn=thunk, duration=duration,
-                                deps=deps, inputs=tuple(inputs)))
+                                deps=deps, inputs=tuple(inputs),
+                                not_before=not_before))
         return Future(tid, self)
+
+    def frame_task(self, fn: Callable[..., Any], frame: Any, *args: Any,
+                   duration: Optional[float] = None) -> Future:
+        """Node keyed to a streamed frame future (`FrameRecord`-shaped:
+        needs ``.path`` and ``.t_avail``): eligible the moment the frame is
+        resident on the node-local stores, with the frame file as its
+        locality input. ``fn`` receives the record as its first argument."""
+        return self.task(fn, frame, *args, duration=duration,
+                         inputs=(frame.path,), not_before=frame.t_avail)
 
     def foreach(self, fn: Callable[[Any], Any], xs: Sequence[Any],
                 durations: Optional[Sequence[float]] = None,
-                inputs_of: Optional[Callable[[Any], Sequence[str]]] = None
+                inputs_of: Optional[Callable[[Any], Sequence[str]]] = None,
+                not_befores: Optional[Sequence[float]] = None
                 ) -> List[Future]:
-        """Swift `foreach`: independent, concurrent, load-balanced."""
+        """Swift `foreach`: independent, concurrent, load-balanced.
+        `not_befores` optionally staggers eligibility per element
+        (frame-future streaming of the map phase)."""
         futs = []
         for i, x in enumerate(xs):
             d = durations[i] if durations is not None else None
             ins = tuple(inputs_of(x)) if inputs_of else ()
-            futs.append(self.task(fn, x, duration=d, inputs=ins))
+            nb = not_befores[i] if not_befores is not None else 0.0
+            futs.append(self.task(fn, x, duration=d, inputs=ins,
+                                  not_before=nb))
         return futs
 
     def merge_pairwise(self, merge_fn: Callable[[Any, Any], Any],

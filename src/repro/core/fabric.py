@@ -17,6 +17,13 @@ The key physical distinction the paper exploits:
             (aggregate bytes = P x size, uncoordinated -> congested rate)
   staged  — nodes read DISJOINT 1/P stripes (aggregate = 1 x size at
             sequential rate) and replicate over the interconnect.
+
+Units, everywhere in this module: times are SIMULATED seconds (an
+accounting clock advanced against the bandwidth constants — never wall
+clock; only benchmark harnesses measure wall time), sizes are bytes,
+bandwidths bytes/second, latencies seconds. Methods that model an I/O or
+network operation take the caller's current simulated time ``t`` and
+return the operation's completion time on the same clock.
 """
 from __future__ import annotations
 
@@ -29,6 +36,8 @@ import numpy as np
 
 @dataclass
 class FabricConstants:
+    """Calibration constants for one simulated machine (all bandwidths in
+    bytes/s, all latencies in seconds of simulated time)."""
     name: str
     fs_seq_bw: float          # coordinated (disjoint, striped) read bw, bytes/s
     fs_rand_bw: float         # uncoordinated/replicated read bw, bytes/s
@@ -38,8 +47,8 @@ class FabricConstants:
     coll_latency_log: float   # + this * log2(P) (MPI collective scaling), s
     link_bw: float            # per-host interconnect link bw, bytes/s
     link_latency: float       # per-message latency, s
-    local_bw: float           # node-local store WRITE bw (RAM disk / host RAM)
-    local_read_bw: float      # per-process node-local READ bw (task inputs)
+    local_bw: float           # node-local store WRITE bw, bytes/s
+    local_read_bw: float      # per-process node-local READ bw, bytes/s
 
 
 # Calibrated to the paper's measurements (§VI-B, Figs. 10/11):
@@ -79,13 +88,21 @@ class SharedFilesystem:
     metadata_ops: int = 0
 
     def put(self, path: str, data: np.ndarray) -> None:
+        """Install `data` (any dtype, flattened to uint8) at `path`.
+        Producer-side writes are not time-accounted — the model charges
+        reads, which is where the paper's contention lives."""
         self.files[path] = np.ascontiguousarray(data).view(np.uint8).ravel()
 
     def size(self, path: str) -> int:
+        """File size in bytes (no metadata latency charged)."""
         return int(self.files[path].size)
 
     def glob(self, pattern: str, t: float) -> Tuple[List[str], float]:
-        """Metadata operation; latency charged per directory scan."""
+        """Resolve `pattern` (fnmatch) at simulated time `t`.
+
+        Returns ``(sorted matches, completion time)``; charges one
+        ``fs_md_latency`` scaled by directory size per scan, serialized on
+        the shared-FS busy stream like any other request."""
         self.metadata_ops += 1
         names = sorted(n for n in self.files if fnmatch.fnmatch(n, pattern))
         t_done = max(t, self.busy_until) + self.constants.fs_md_latency * (
@@ -95,9 +112,12 @@ class SharedFilesystem:
 
     def read(self, path: str, offset: int, size: int, t: float,
              coordinated: bool) -> Tuple[np.ndarray, float]:
-        """Read a byte range. `coordinated` selects the bandwidth regime:
-        disjoint-stripe collective reads stream at fs_seq_bw; uncoordinated
-        full-replica reads contend at fs_rand_bw.
+        """Read `size` bytes at `offset` from `path`, issued at simulated
+        time `t`. Returns ``(zero-copy view of the bytes, completion t)``.
+
+        `coordinated` selects the bandwidth regime: disjoint-stripe
+        collective reads stream at ``fs_seq_bw``; uncoordinated
+        full-replica reads contend at ``fs_rand_bw``.
 
         The FS is a shared resource: bandwidth serializes (busy_until),
         request latencies overlap (charged to the caller's completion time
@@ -138,12 +158,19 @@ class SharedFilesystem:
 
 @dataclass
 class Interconnect:
-    """Torus/ICI-style interconnect: per-host links, ring collectives."""
+    """Torus/ICI-style interconnect: per-host links, ring collectives.
+
+    Methods return the DURATION (simulated s) of one collective/message and
+    account the wire traffic in ``bytes_moved``; callers place the duration
+    on their own timeline (collectives from disjoint host groups may
+    overlap, so there is no global busy stream here)."""
     constants: FabricConstants
     bytes_moved: int = 0
 
     def ring_allgather_time(self, shard_bytes: int, n_hosts: int) -> float:
-        """Each host sends its shard around the ring (P-1 steps)."""
+        """Duration (s) of a ring all-gather where each of `n_hosts` hosts
+        contributes `shard_bytes`: P-1 steps of one shard each. Wire
+        traffic accounted: ``shard_bytes * P * (P-1)``."""
         if n_hosts <= 1:
             return 0.0
         c = self.constants
@@ -152,7 +179,10 @@ class Interconnect:
         return per_step * (n_hosts - 1)
 
     def broadcast_time(self, nbytes: int, n_hosts: int) -> float:
-        """Pipelined binomial/ring broadcast of a full buffer."""
+        """Duration (s) of a pipelined ring broadcast of `nbytes` from one
+        root to the other ``n_hosts - 1`` hosts: the buffer streams once
+        at link bandwidth plus (P-2) one-segment (1 MB) pipeline fills.
+        Wire traffic accounted: ``nbytes * (P-1)``."""
         if n_hosts <= 1:
             return 0.0
         c = self.constants
@@ -163,6 +193,8 @@ class Interconnect:
             seg / c.link_bw + c.link_latency) + c.link_latency
 
     def point_to_point_time(self, nbytes: int) -> float:
+        """Duration (s) of one `nbytes` message over one link (also the
+        detector->leader ingest hop in `repro.core.streaming`)."""
         c = self.constants
         self.bytes_moved += nbytes
         return nbytes / c.link_bw + c.link_latency
@@ -170,7 +202,13 @@ class Interconnect:
 
 @dataclass
 class NodeLocalStore:
-    """Node-local storage tier (BG/Q RAM disk /tmp; TPU host RAM)."""
+    """Node-local storage tier (BG/Q RAM disk /tmp; TPU host RAM).
+
+    Holds zero-copy read-only views delivered by the staging/streaming
+    engines. Writes are charged at ``local_bw`` bytes/s of simulated time;
+    reads are charged by the CONSUMER (``ManyTaskEngine._input_time`` /
+    ``TaskInputCache``) at ``local_read_bw``, so :meth:`read` itself only
+    counts hits/misses."""
     host_id: int
     constants: FabricConstants
     data: Dict[str, np.ndarray] = field(default_factory=dict)
@@ -180,6 +218,9 @@ class NodeLocalStore:
     pinned: set = field(default_factory=set)
 
     def write(self, path: str, data: np.ndarray, t: float) -> float:
+        """Store `data` (uint8 buffer/view) at `path`, starting at
+        simulated time `t`; returns the write completion time
+        (``t + bytes / local_bw``)."""
         self.data[path] = data
         self.bytes_written += data.size
         return t + data.size / self.constants.local_bw
@@ -194,6 +235,8 @@ class NodeLocalStore:
         return t + nbytes / self.constants.local_bw
 
     def read(self, path: str) -> Optional[np.ndarray]:
+        """The stored buffer, or None on miss. No time is charged here —
+        see the class docstring for who pays ``local_read_bw``."""
         if path in self.data:
             self.hits += 1
             return self.data[path]
@@ -201,10 +244,17 @@ class NodeLocalStore:
         return None
 
     def pin(self, path: str) -> None:
+        """Exempt `path` from eviction (human-in-the-loop reuse, §VI-B)."""
         self.pinned.add(path)
 
+    def drop(self, path: str) -> None:
+        """Evict `path` if present. Pure bookkeeping — eviction frees
+        memory, it is not an I/O, so no simulated time is charged."""
+        self.data.pop(path, None)
+
     def evict_lru(self, budget_bytes: int) -> None:
-        """Drop unpinned entries (insertion order ~ LRU) down to budget."""
+        """Drop unpinned entries (insertion order ~ LRU) until resident
+        bytes fit `budget_bytes`. No simulated time charged."""
         total = sum(v.size for v in self.data.values())
         for path in list(self.data):
             if total <= budget_bytes:

@@ -8,8 +8,14 @@ destination" — executed by the runtime before tasks run. Mirrors the paper:
   * glob resolution happens ONCE (leader rank 0) and the resolved list is
     broadcast — metadata contention avoidance (§IV: "only one process
     performs any globs");
-  * transfers use collective staging (stage_collective);
+  * transfers default to collective staging; ``mode`` selects the engine —
+    ``"collective"`` (two-phase MPI_File_read_all), ``"pipelined"``
+    (chunked read/all-gather overlap), ``"naive"`` (uncoordinated per-host
+    reads, the baseline), or ``"stream"`` (detector-push ingestion that
+    never reads the shared FS back — `repro.core.streaming`);
   * files are pinned in the node-local store for reuse across task waves.
+
+All times returned are SIMULATED seconds (see `repro.core.fabric`).
 """
 from __future__ import annotations
 
@@ -19,11 +25,10 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.fabric import Fabric
-from repro.core.staging import (StagingReport, stage_collective,
-                                stage_naive, stage_pipelined)
+from repro.core.staging import BATCH_STAGE_FNS, StagingReport
+from repro.core.streaming import stage_stream
 
-_STAGE_FNS = {"collective": stage_collective, "pipelined": stage_pipelined,
-              "naive": stage_naive}
+_STAGE_FNS = {**BATCH_STAGE_FNS, "stream": stage_stream}
 
 
 @dataclass(frozen=True)
@@ -74,7 +79,11 @@ def resolve_manifest(fabric: Fabric, patterns: Sequence[str], t0: float
                      ) -> Tuple[List[str], float]:
     """Leader-rank metadata resolution: ONE process runs the globs, then the
     list is broadcast (a naive implementation runs the glob on every rank,
-    congesting the FS — paper §IV)."""
+    congesting the FS — paper §IV).
+
+    `patterns` are fnmatch globs against the shared FS; `t0` the simulated
+    start time (s). Returns ``(resolved paths, completion time)``, the
+    broadcast of the (small) manifest included."""
     files: List[str] = []
     t = t0
     for pattern in patterns:
@@ -87,12 +96,17 @@ def resolve_manifest(fabric: Fabric, patterns: Sequence[str], t0: float
 
 
 def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
-                collective: bool = True, mode: Optional[str] = None
-                ) -> HookResult:
-    """Execute the hook: resolve globs once, broadcast, stage collectively.
+                collective: bool = True, mode: Optional[str] = None,
+                stage_kw: Optional[Dict] = None) -> HookResult:
+    """Execute the hook: resolve globs once, broadcast the manifest, stage.
 
-    ``mode`` selects the staging engine ("collective", "pipelined", "naive")
-    and overrides the legacy ``collective`` flag when given.
+    Parameters: `spec` is the declarative staging spec (Fig. 6); `t0` the
+    simulated start time (s); ``mode`` selects the staging engine
+    ("collective", "pipelined", "naive", "stream") and overrides the
+    legacy ``collective`` flag when given; ``stage_kw`` forwards
+    engine-specific keywords (e.g. ``{"chunk_bytes": 1 << 20}`` for
+    pipelined, ``{"rate_hz": 10.0, "window_bytes": ...}`` for stream).
+    Returns a :class:`HookResult` whose times are simulated seconds.
     """
     if mode is None:
         mode = "collective" if collective else "naive"
@@ -100,6 +114,7 @@ def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
         raise ValueError(f"unknown staging mode {mode!r}; expected one of "
                          f"{sorted(_STAGE_FNS)}")
     stage = _STAGE_FNS[mode]
+    stage_kw = stage_kw or {}
     reports: List[StagingReport] = []
     t_meta = 0.0
     t = t0
@@ -108,7 +123,12 @@ def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
         files, t_resolved = resolve_manifest(fabric, entry.files, t)
         t_meta += t_resolved - t
         t = t_resolved
-        rep, t = stage(fabric, files, t)
+        kw = stage_kw
+        if mode == "stream" and entry.pin:
+            # the streaming engine must pin AT INGEST: with a bounded
+            # window, post-hoc pinning would mark already-evicted files
+            kw = dict(stage_kw, pin_paths=files)
+        rep, t = stage(fabric, files, t, **kw)
         reports.append(rep)
         all_files.extend(files)
         if entry.pin:

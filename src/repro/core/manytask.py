@@ -12,7 +12,11 @@ duration). Features mirroring the production requirements:
     deadline (first completion wins),
   * fault tolerance: worker failure -> heartbeat-detected re-queue + retry,
   * per-task I/O accounting against the node-local cache (staged inputs hit
-    the cache; unstaged inputs fall back to shared-FS reads).
+    the cache; unstaged inputs fall back to shared-FS reads),
+  * frame futures (``Task.not_before``): a task keyed to a streamed
+    detector frame becomes eligible the moment the frame lands on the
+    node-local stores (its ``FrameRecord.t_avail``), not when the whole
+    dataset closes — the scheduling half of `repro.core.streaming`.
 """
 from __future__ import annotations
 
@@ -33,6 +37,9 @@ class Task:
     fn: Optional[Callable[[], Any]] = None    # real payload (measured)
     inputs: Tuple[str, ...] = ()              # file deps (node-local or FS)
     deps: Tuple[int, ...] = ()                # task-id dependencies
+    not_before: float = 0.0                   # earliest eligibility (sim s):
+    #   a frame future — set to FrameRecord.t_avail so the task becomes
+    #   runnable the moment its frame lands, not when the dataset closes
     retries: int = 0
     result: Any = None
 
@@ -101,6 +108,15 @@ class ManyTaskEngine:
                 t += data.size / self.fabric.constants.local_read_bw
             else:
                 stats.cache_misses += 1
+                if path not in self.fabric.fs.files:
+                    # streamed frames never touch the shared FS: once the
+                    # sliding window evicts one, there is nowhere to
+                    # re-fetch it from — fail loudly, not with a KeyError
+                    raise RuntimeError(
+                        f"task {task.task_id} input {path!r} is neither "
+                        f"node-local nor on the shared FS (streamed frame "
+                        f"evicted before use? pin it or enlarge the "
+                        f"stream window)")
                 size = self.fabric.fs.size(path)
                 _, t_done = self.fabric.fs.read(path, 0, size, 0.0,
                                                 coordinated=False)
@@ -134,9 +150,7 @@ class ManyTaskEngine:
             for d in t.deps:
                 dependents.setdefault(d, []).append(t.task_id)
 
-        ready = [t.task_id for t in tasks if not t.deps]
-        ready.sort()
-        queue: List[int] = list(ready)             # shared ADLB queue
+        queue: List[int] = []                      # shared ADLB queue
         done: set = set()
         running: Dict[int, Tuple[int, float, float, str]] = {}  # tid -> (worker,s,e,kind)
         backups: Dict[int, int] = {}               # original tid -> backup worker
@@ -151,6 +165,21 @@ class ManyTaskEngine:
 
         for w, ft in self.failure_times.items():
             heapq.heappush(heap, (ft, seq, "fail", w)); seq += 1
+
+        def schedule(tid: int, t_now: float, front: bool = False):
+            """Enqueue a dep-free task, honoring its frame future: a task
+            whose `not_before` is still ahead waits on a release event."""
+            nonlocal seq
+            nb = by_id[tid].not_before
+            if nb > t_now:
+                heapq.heappush(heap, (nb, seq, "release", tid)); seq += 1
+            elif front:
+                queue.insert(0, tid)
+            else:
+                queue.append(tid)
+
+        for tid in sorted(t.task_id for t in tasks if not t.deps):
+            schedule(tid, 0.0)
 
         def dispatch(t_now: float):
             nonlocal seq
@@ -212,7 +241,13 @@ class ManyTaskEngine:
             elif kind == "requeue":
                 tid = payload
                 if tid not in done:
-                    queue.insert(0, tid)
+                    schedule(tid, now, front=True)
+                dispatch(now)
+            elif kind == "release":
+                tid = payload
+                if tid not in done and tid not in running \
+                        and tid not in queue:
+                    queue.append(tid)
                 dispatch(now)
             elif kind == "check":
                 tid = payload
@@ -257,7 +292,7 @@ class ManyTaskEngine:
                 for dep in dependents.get(tid, ()):  # release dependents
                     remaining_deps[dep].discard(tid)
                     if not remaining_deps[dep] and dep not in done:
-                        queue.append(dep)
+                        schedule(dep, now)
                 dispatch(now)
         stats.makespan = max((e.end for e in stats.events), default=0.0)
         missing = set(by_id) - done

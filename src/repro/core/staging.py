@@ -75,6 +75,19 @@ def _stripes(total: int, parts: int) -> List[Tuple[int, int]]:
     return out
 
 
+def readonly_view(data: np.ndarray) -> np.ndarray:
+    """Zero-copy read-only view of ``data`` — the replica-delivery discipline.
+
+    Every consumer (node-local store, streamed-frame cache) receives a view
+    of ONE shared buffer instead of a copy; the write guard keeps a store
+    from mutating the source through it. Shared by the batch staging engines
+    here and the streaming ingest path (`repro.core.streaming`).
+    """
+    view = data.view()
+    view.setflags(write=False)
+    return view
+
+
 def _replica_view(fabric: Fabric, path: str) -> np.ndarray:
     """The assembled replica of a staged file, zero-copy.
 
@@ -83,9 +96,7 @@ def _replica_view(fabric: Fabric, path: str) -> np.ndarray:
     read-only view instead of materialising P (or even 1) concatenated
     copies. Read-only so a store cannot mutate the shared FS through it.
     """
-    view = fabric.fs.files[path].view()
-    view.setflags(write=False)
-    return view
+    return readonly_view(fabric.fs.files[path])
 
 
 def _deliver_replicas(fabric: Fabric, paths: Sequence[str]) -> float:
@@ -229,6 +240,15 @@ def stage_naive(fabric: Fabric, paths: Sequence[str],
     rep.write_time = total / fabric.constants.local_bw
     rep.fs_bytes = fabric.fs.bytes_read - fs0
     return rep, t0 + rep.total_time
+
+
+# The batch staging engines, by I/O-hook mode name. Single source of truth
+# for the mode -> engine mapping: the hook extends it with the streaming
+# engine (`repro.core.iohook._STAGE_FNS`), the HEDM batch baseline consumes
+# it directly — new engines register here once.
+BATCH_STAGE_FNS = {"collective": stage_collective,
+                   "pipelined": stage_pipelined,
+                   "naive": stage_naive}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,397 @@
+"""Streaming ingestion: delivery, sliding window, backpressure, frame
+futures, online HEDM equivalence (streaming follow-on to the paper)."""
+import numpy as np
+import pytest
+
+from repro.core.dataflow import Dataflow
+from repro.core.fabric import BGQ, Fabric
+from repro.core.iohook import BroadcastEntry, StagingSpec, run_io_hook
+from repro.core.manytask import ManyTaskEngine, Task
+from repro.core.streaming import (DetectorSource, StreamScenario,
+                                  StreamStager, stage_stream)
+from repro.hedm.pipeline import (reduce_frames, reduce_frames_online,
+                                 run_batch_hedm, run_online_hedm,
+                                 simulate_detector_frames)
+
+FRAME = 32
+FRAME_BYTES = FRAME * FRAME * 4
+
+
+def make_stream(n_frames=8, rate_hz=100.0, seed=0):
+    frames, dark = simulate_detector_frames(n_frames, size=FRAME,
+                                            n_spots=3, seed=seed)
+    return frames, dark, DetectorSource.from_frames(frames, rate_hz=rate_hz)
+
+
+def emitted_bytes(frames, i):
+    return np.ascontiguousarray(frames[i]).view(np.uint8).ravel()
+
+
+# ---------------------------------------------------------------------------
+# delivery
+# ---------------------------------------------------------------------------
+
+def test_stream_delivery_byte_exact_zero_copy():
+    """Every node-local store ends up with a read-only zero-copy view of
+    each emitted frame, byte-identical to the detector output."""
+    fab = Fabric(n_hosts=4, constants=BGQ)
+    frames, _, src = make_stream()
+    stager = StreamStager(fab, window_bytes=8 * FRAME_BYTES)
+    rep, recs = stager.stage(src)
+    assert rep.n_frames == 8 and rep.evictions == 0 and rep.stall_time == 0
+    for host in fab.hosts:
+        for i, r in enumerate(recs):
+            replica = host.store.data[r.path]
+            assert np.array_equal(replica, emitted_bytes(frames, i))
+            assert not replica.flags.writeable
+    # one shared buffer per frame across all hosts (zero-copy)
+    for r in recs:
+        assert np.shares_memory(fab.hosts[0].store.data[r.path],
+                                fab.hosts[-1].store.data[r.path])
+
+
+def test_frame_futures_monotone_and_after_emission():
+    fab = Fabric(n_hosts=8, constants=BGQ)
+    _, _, src = make_stream(rate_hz=50.0)
+    rep, recs = StreamStager(fab, window_bytes=8 * FRAME_BYTES).stage(src)
+    for a, b in zip(recs, recs[1:]):
+        assert b.t_avail > a.t_avail            # delivery order preserved
+    for r in recs:
+        assert r.t_avail > r.t_emit             # causality
+    assert rep.ingest_makespan >= rep.acquisition_span
+    assert rep.mean_latency > 0
+
+
+def test_stream_report_net_accounting():
+    """Each frame crosses the detector link once and is broadcast to the
+    other P-1 hosts: net_bytes = F * B * (1 + (P-1))."""
+    P, F = 4, 8
+    fab = Fabric(n_hosts=P, constants=BGQ)
+    _, _, src = make_stream(F)
+    rep, _ = StreamStager(fab, window_bytes=F * FRAME_BYTES).stage(src)
+    assert rep.total_bytes == F * FRAME_BYTES
+    assert rep.net_bytes == F * FRAME_BYTES * P
+
+
+# ---------------------------------------------------------------------------
+# sliding window: eviction, pinning, backpressure
+# ---------------------------------------------------------------------------
+
+def test_watermark_eviction_frees_consumed_frames():
+    """Above the high watermark, released (consumed) frames are dropped
+    oldest-first down to the low watermark, on every host."""
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    frames, _, src = make_stream(16)
+    stager = StreamStager(fab, window_bytes=4 * FRAME_BYTES,
+                          high_watermark=0.9, low_watermark=0.5)
+    recs = []
+    for fid, path, buf, t_emit in src:
+        rec = stager.ingest(path, buf, t_emit)
+        stager.release(path, rec.t_avail)       # consumer keeps up
+        recs.append(rec)
+    rep = stager.finish()
+    assert rep.evictions > 0
+    assert rep.stall_time == 0                  # releases prevented stalls
+    assert rep.peak_resident_bytes <= 4 * FRAME_BYTES
+    for host in fab.hosts:
+        assert recs[0].path not in host.store.data      # oldest evicted
+        assert recs[-1].path in host.store.data         # newest resident
+        resident = sum(v.size for v in host.store.data.values())
+        assert resident <= 4 * FRAME_BYTES
+
+
+def test_pinned_frames_survive_eviction():
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    frames, _, src = make_stream(16)
+    stager = StreamStager(fab, window_bytes=4 * FRAME_BYTES)
+    first = None
+    for fid, path, buf, t_emit in src:
+        rec = stager.ingest(path, buf, t_emit)
+        if fid == 0:
+            first = rec
+            stager.pin(rec.path)
+        stager.release(path, rec.t_avail)
+    rep = stager.finish()
+    assert rep.evictions > 0
+    for host in fab.hosts:
+        assert first.path in host.store.data            # pinned survived
+        assert first.path in host.store.pinned
+        assert np.array_equal(host.store.data[first.path],
+                              emitted_bytes(frames, 0))
+
+
+def test_backpressure_stalls_and_stays_byte_exact():
+    """A slow consumer fills the window: admission stalls until releases
+    free space, frames are never corrupted or dropped."""
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    frames, _, src = make_stream(12, rate_hz=1000.0)    # fast acquisition
+    stager = StreamStager(fab, window_bytes=3 * FRAME_BYTES)
+    for fid, path, buf, t_emit in src:
+        rec = stager.ingest(path, buf, t_emit)
+        # frame is intact on every node while the consumer holds it
+        for host in fab.hosts:
+            assert np.array_equal(host.store.data[path],
+                                  emitted_bytes(frames, fid))
+        stager.release(path, rec.t_avail + 0.5)         # slow consumer
+    rep = stager.finish()
+    assert rep.n_frames == 12                           # nothing dropped
+    assert rep.stall_time > 0                           # backpressure hit
+    assert rep.evictions > 0
+    assert rep.ingest_makespan > rep.acquisition_span + rep.stall_time / 2
+
+
+def test_wedged_window_raises():
+    """A window that can never fit the next frame (nothing released, no
+    future release pending) is a hard error, not silent loss."""
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    _, _, src = make_stream(4)
+    stager = StreamStager(fab, window_bytes=2 * FRAME_BYTES)
+    it = iter(src)
+    for _ in range(2):
+        fid, path, buf, t_emit = next(it)
+        stager.ingest(path, buf, t_emit)                # never released
+    fid, path, buf, t_emit = next(it)
+    with pytest.raises(RuntimeError, match="wedged"):
+        stager.ingest(path, buf, t_emit)
+
+
+# ---------------------------------------------------------------------------
+# iohook mode="stream"
+# ---------------------------------------------------------------------------
+
+def test_iohook_stream_mode_skips_fs_readback():
+    fab = Fabric(n_hosts=4, constants=BGQ)
+    for i in range(3):
+        fab.fs.put(f"scans/s{i}.bin", np.full(1 << 12, i, np.uint8))
+    res = run_io_hook(fab, StagingSpec([BroadcastEntry(("scans/*.bin",))]),
+                      mode="stream")
+    rep = res.reports[0]
+    assert rep.mode == "stream"
+    assert rep.fs_bytes == 0                    # the whole point
+    assert fab.fs.bytes_read == 0               # FS never read back
+    assert rep.n_chunks == 3                    # per-frame delivery
+    for host in fab.hosts:
+        for i in range(3):
+            p = f"scans/s{i}.bin"
+            assert np.array_equal(host.store.data[p], fab.fs.files[p])
+            assert p in host.store.pinned       # hook pins as usual
+
+
+def test_stage_stream_bounded_window_slides():
+    """A window smaller than the dataset must not wedge: frames release on
+    delivery and the cache keeps only the most recent ones."""
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    paths = []
+    for i in range(6):
+        fab.fs.put(f"s/{i}.bin", np.full(1 << 10, i, np.uint8))
+        paths.append(f"s/{i}.bin")
+    rep, _ = stage_stream(fab, paths, window_bytes=2 << 10)
+    assert rep.mode == "stream"
+    for host in fab.hosts:
+        assert paths[-1] in host.store.data             # newest resident
+        assert paths[0] not in host.store.data          # oldest evicted
+        assert sum(v.size for v in host.store.data.values()) <= 2 << 10
+        assert np.array_equal(host.store.data[paths[-1]],
+                              fab.fs.files[paths[-1]])
+
+
+def test_iohook_stage_kw_passthrough():
+    """Engine-specific parameters reach the staging engine via stage_kw."""
+    fab = Fabric(n_hosts=4, constants=BGQ)
+    for i in range(2):
+        fab.fs.put(f"k/{i}.bin", np.full(1 << 14, i, np.uint8))
+    spec = StagingSpec([BroadcastEntry(("k/*.bin",))])
+    res_p = run_io_hook(fab, spec, mode="pipelined",
+                        stage_kw={"chunk_bytes": 1 << 10})
+    assert res_p.reports[0].n_chunks > 2        # chunk size actually used
+    fab2 = Fabric(n_hosts=4, constants=BGQ)
+    for i in range(2):
+        fab2.fs.put(f"k/{i}.bin", np.full(1 << 14, i, np.uint8))
+    res_s = run_io_hook(fab2, spec, mode="stream",
+                        stage_kw={"rate_hz": 1.0})
+    assert res_s.total_time >= 2.0              # 2 frames at 1 Hz
+
+
+def test_iohook_stream_pin_with_bounded_window_fails_loudly():
+    """Pinning happens at ingest: a bounded window too small for the
+    pinned set wedges loudly instead of silently evicting pinned files."""
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    for i in range(4):
+        fab.fs.put(f"p/{i}.bin", np.full(1 << 10, i, np.uint8))
+    spec = StagingSpec([BroadcastEntry(("p/*.bin",), pin=True)])
+    with pytest.raises(RuntimeError, match="wedged"):
+        run_io_hook(fab, spec, mode="stream",
+                    stage_kw={"window_bytes": 2 << 10})
+    # unpinned entries slide through the same bounded window fine
+    fab2 = Fabric(n_hosts=2, constants=BGQ)
+    for i in range(4):
+        fab2.fs.put(f"p/{i}.bin", np.full(1 << 10, i, np.uint8))
+    res = run_io_hook(fab2, StagingSpec([BroadcastEntry(("p/*.bin",),
+                                                        pin=False)]),
+                      mode="stream", stage_kw={"window_bytes": 2 << 10})
+    assert res.reports[0].n_chunks == 4
+
+
+def test_online_hedm_accepts_non_float32_frames():
+    """The online path casts to float32 like the batch path's stream_to_fs,
+    so a float64 stack neither wedges the window nor corrupts replicas."""
+    frames, dark, _ = make_stream(8, seed=11)
+    on = run_online_hedm(Fabric(n_hosts=2, constants=BGQ),
+                         frames.astype(np.float64), dark, rate_hz=100.0,
+                         window=4, use_kernel=False,
+                         reduce_time_per_frame=0.01)
+    batch = reduce_frames(frames, dark, use_kernel=False)
+    for a, b in zip(on.reduced, batch):
+        assert np.array_equal(a.peaks, b.peaks)
+
+
+def test_evicted_frame_input_fails_loudly():
+    """A task whose streamed-frame input was evicted (and never existed on
+    the shared FS) gets a diagnosable error, not a KeyError."""
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    eng = ManyTaskEngine(fab, n_workers=2)
+    with pytest.raises(RuntimeError, match="evicted"):
+        eng.run([Task(task_id=0, duration=0.1,
+                      inputs=("scan/frame_00000.bin",))])
+
+
+def test_stage_stream_respects_rate():
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    for i in range(4):
+        fab.fs.put(f"s/{i}.bin", np.ones(1 << 10, np.uint8))
+    rep, t_end = stage_stream(fab, [f"s/{i}.bin" for i in range(4)],
+                              rate_hz=2.0)
+    assert t_end >= 2.0                         # 4 frames at 2 Hz
+    assert rep.total_time == pytest.approx(t_end)
+
+
+# ---------------------------------------------------------------------------
+# frame futures in the engine / dataflow
+# ---------------------------------------------------------------------------
+
+def test_task_not_before_delays_start():
+    fab = Fabric(n_hosts=2)
+    eng = ManyTaskEngine(fab, n_workers=4)
+    stats = eng.run([Task(task_id=0, duration=1.0, not_before=5.0),
+                     Task(task_id=1, duration=1.0)])
+    ev = {e.task_id: e for e in stats.events}
+    assert ev[1].start == 0.0
+    assert ev[0].start >= 5.0                   # waited for its frame
+    assert stats.makespan == pytest.approx(6.0)
+
+
+def test_dataflow_frame_future_ordering():
+    """Per-frame tasks become eligible exactly when their frame lands;
+    merges ride behind without a barrier; results are correct."""
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    frames, _, src = make_stream(8, rate_hz=2.0)        # 0.5 s cadence
+    _, recs = StreamStager(fab, window_bytes=8 * FRAME_BYTES).stage(src)
+
+    flow = Dataflow(fab)
+    futs = [flow.frame_task(lambda r: r.frame_id, rec, duration=0.01)
+            for rec in recs]
+    total = flow.merge_pairwise(lambda a, b: a + b, futs, duration=0.0)
+    stats = flow.run(n_workers=4)
+
+    ev = {e.task_id: e for e in stats.events}
+    for rec, fut in zip(recs, futs):
+        assert ev[fut.task_id].start >= rec.t_avail - 1e-12
+    assert total.result() == sum(range(8))
+    # early frames were processed long before the stream closed
+    assert ev[futs[0].task_id].end < recs[-1].t_avail
+    assert stats.makespan >= recs[-1].t_avail
+
+
+def test_dataflow_foreach_not_befores():
+    fab = Fabric(n_hosts=2)
+    flow = Dataflow(fab)
+    futs = flow.foreach(lambda x: x, [10, 20], durations=[0.1, 0.1],
+                        not_befores=[3.0, 0.0])
+    stats = flow.run(n_workers=2)
+    ev = {e.task_id: e for e in stats.events}
+    assert ev[futs[0].task_id].start >= 3.0
+    assert ev[futs[1].task_id].start == 0.0
+
+
+# ---------------------------------------------------------------------------
+# online HEDM
+# ---------------------------------------------------------------------------
+
+def test_online_reduction_bit_identical_to_batch():
+    frames, dark, _ = make_stream(10, seed=3)
+    batch = reduce_frames(frames, dark, use_kernel=False)
+    online = [r for chunk in reduce_frames_online(frames, dark, window=4,
+                                                  use_kernel=False)
+              for r in chunk]
+    assert len(online) == len(batch)
+    for a, b in zip(online, batch):
+        assert a.frame_id == b.frame_id
+        assert a.n_signal_pixels == b.n_signal_pixels
+        assert a.n_spots == b.n_spots
+        assert np.array_equal(a.peaks, b.peaks)
+
+
+def test_online_hedm_matches_batch_through_staged_replicas():
+    """End to end: streamed ingestion + per-window reduction from the
+    node-local replicas == FS round trip + batch staging + one-shot
+    reduction, bit-exact — even with a bounded window under backpressure."""
+    frames, dark, _ = make_stream(12, seed=5)
+    on = run_online_hedm(Fabric(n_hosts=4, constants=BGQ), frames, dark,
+                         rate_hz=500.0, window=4, use_kernel=False,
+                         cache_frames=6, reduce_time_per_frame=0.05)
+    batch, _, _ = run_batch_hedm(Fabric(n_hosts=4, constants=BGQ), frames,
+                                 dark, rate_hz=500.0, use_kernel=False,
+                                 reduce_time_per_frame=0.05)
+    assert on.stream.stall_time > 0             # window actually pressured
+    for a, b in zip(on.reduced, batch):
+        assert a.frame_id == b.frame_id and a.n_spots == b.n_spots
+        assert np.array_equal(a.peaks, b.peaks)
+
+
+def test_online_hedm_validates_cache_vs_window():
+    frames, dark, _ = make_stream(8)
+    with pytest.raises(ValueError, match="cache_frames"):
+        run_online_hedm(Fabric(n_hosts=2, constants=BGQ), frames, dark,
+                        window=4, cache_frames=2, use_kernel=False,
+                        reduce_time_per_frame=0.01)
+
+
+def test_batch_hedm_naive_mode():
+    frames, dark, _ = make_stream(6)
+    reduced, t_naive, rep = run_batch_hedm(
+        Fabric(n_hosts=4, constants=BGQ), frames, dark, rate_hz=10.0,
+        mode="naive", use_kernel=False, reduce_time_per_frame=0.01)
+    assert rep.mode == "naive"
+    assert len(reduced) == 6
+    with pytest.raises(ValueError, match="unknown staging mode"):
+        run_batch_hedm(Fabric(n_hosts=2, constants=BGQ), frames, dark,
+                       mode="bogus")
+
+
+def test_streaming_turnaround_beats_batch_when_acquisition_bound():
+    """The headline: overlapping reduction with a slow acquisition beats
+    stage-then-process end to end (deterministic simulated durations)."""
+    frames, dark, _ = make_stream(16, seed=7)
+    kw = dict(rate_hz=4.0, use_kernel=False, reduce_time_per_frame=0.05)
+    on = run_online_hedm(Fabric(n_hosts=8, constants=BGQ), frames, dark,
+                         window=4, **kw)
+    _, t_batch, _ = run_batch_hedm(Fabric(n_hosts=8, constants=BGQ),
+                                   frames, dark, **kw)
+    assert on.turnaround < t_batch
+    # window results arrive DURING acquisition (the interactive property)
+    assert on.window_done[0] < 16 / 4.0
+
+
+def test_stream_scenario_wiring():
+    sc = StreamScenario(n_hosts=4, n_frames=6, frame_size=FRAME,
+                        rate_hz=50.0, window_frames=3)
+    assert sc.frame_bytes == FRAME_BYTES
+    assert sc.window_bytes == 6 * FRAME_BYTES  # cache_frames=None -> scan
+    assert StreamScenario(n_frames=6, frame_size=FRAME,
+                          cache_frames=4).window_bytes == 4 * FRAME_BYTES
+    fab = sc.make_fabric()
+    frames, dark = sc.make_frames()
+    rep, recs = StreamStager(fab, window_bytes=sc.window_bytes).stage(
+        sc.make_source(frames))
+    assert rep.n_frames == 6
+    assert fab.n_hosts == 4
