@@ -1,0 +1,204 @@
+"""Multi-tenant staging-service benchmark: coalescing, eviction, write-back.
+
+One interactive HEDM scenario at P=1024 hosts: 4 concurrent analysis
+sessions lease 3 scans through the `repro.core.datasvc.StagingService`
+under a node-memory budget that fits only 2 scans — forcing cost-aware
+eviction, transparent re-staging, and queued admissions — and flush their
+reduced results back to the shared FS. Asserted on every run:
+
+  * request coalescing stages each dataset EXACTLY ONCE per residency
+    (acquires = stages + coalesced + hits, per dataset and in aggregate);
+  * every session's packed output is byte-exact vs reducing the scan
+    directly, eviction/re-staging notwithstanding, and so is the
+    write-back content landed on the shared FS;
+  * the collective ``stage_out`` write-back (disjoint 1/P stripe writes
+    via ``write_gather``) beats the naive every-host-writes baseline by a
+    measured simulated-time factor at P=1024.
+
+Emits ``BENCH_service.json`` next to this file and harness CSV rows via
+:func:`rows` (wired into ``benchmarks.run --service``).
+
+Run directly:  PYTHONPATH=src python -m benchmarks.bench_service
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+Row = Tuple[str, float, str]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_service.json")
+
+N_HOSTS = 1024
+N_FRAMES = 16
+FRAME_SIZE = 128
+N_SPOTS = 6
+REDUCE_S_PER_FRAME = 0.15
+DATASETS = ("scanA", "scanB", "scanC")
+SESSION_PLANS = (                       # 4 tenants, overlapping access order
+    ("s1", ("scanA", "scanB", "scanC"), 0.0),
+    ("s2", ("scanA", "scanC", "scanB"), 0.0),
+    ("s3", ("scanB", "scanA", "scanC"), 0.5),
+    ("s4", ("scanC", "scanB", "scanA"), 1.0),
+)
+
+
+def _scenario():
+    from repro.hedm.pipeline import SessionScript, simulate_detector_frames
+    scans, dark = {}, None
+    for i, name in enumerate(DATASETS):
+        frames, dark = simulate_detector_frames(N_FRAMES, size=FRAME_SIZE,
+                                                n_spots=N_SPOTS, seed=i)
+        scans[name] = frames
+    budget = 2 * N_FRAMES * FRAME_SIZE * FRAME_SIZE * 4 + 1024  # 2 of 3 fit
+    sessions = [SessionScript(n, list(ds), t_start=t,
+                              reduce_s_per_frame=REDUCE_S_PER_FRAME)
+                for n, ds, t in SESSION_PLANS]
+    return scans, dark, sessions, budget
+
+
+def bench_service() -> dict:
+    from repro.core.fabric import BGQ, Fabric
+    from repro.hedm.pipeline import (pack_reduced, reduce_frames,
+                                     run_interactive_hedm)
+
+    scans, dark, sessions, budget = _scenario()
+    fab = Fabric(n_hosts=N_HOSTS, constants=BGQ)
+    res = run_interactive_hedm(fab, scans, dark, sessions, budget)
+    svc, st = res.service, res.service.stats
+
+    # coalescing invariant: one stage per residency, per dataset
+    stage_once = True
+    per_dataset = {}
+    for entry in svc.catalog:
+        residencies = sum(1 for _, s in entry.history if s.value == "resident")
+        ok = (entry.stage_count == residencies
+              and entry.acquires == entry.stage_count + entry.coalesced
+              + entry.hits)
+        stage_once &= ok
+        per_dataset[entry.name] = {
+            "residencies": residencies, "stage_count": entry.stage_count,
+            "acquires": entry.acquires, "coalesced": entry.coalesced,
+            "hits": entry.hits, "invariant_ok": ok,
+        }
+    assert stage_once, f"stage-per-residency invariant broken: {per_dataset}"
+    # the OBSERVABLE form of the same invariant: collective staging reads
+    # each dataset exactly once per residency off the shared FS, so total
+    # FS read traffic must equal sum(stage_count * nbytes) — a coalesce
+    # path that secretly re-staged would show up here as extra bytes
+    expect_fs = sum(e.stage_count * e.nbytes for e in svc.catalog)
+    assert fab.fs.bytes_read == expect_fs, \
+        (f"FS read traffic {fab.fs.bytes_read} != one read per residency "
+         f"{expect_fs}: a coalesced acquire re-staged")
+    assert st.coalesced > 0, "scenario exercised no request coalescing"
+    assert st.evictions > 0 and st.restages > 0, \
+        "scenario exercised no eviction/re-staging"
+
+    # byte-exactness: session outputs AND landed write-back files
+    refs = {n: pack_reduced(reduce_frames(np.float32(f), dark,
+                                          use_kernel=False))
+            for n, f in scans.items()}
+    byte_exact = all(
+        np.array_equal(outs[n], refs[n])
+        for outs in res.outputs.values() for n in outs)
+    byte_exact &= all(
+        np.array_equal(fab.fs.files[p], refs[ds].view(np.uint8).ravel())
+        for paths in res.result_paths.values() for ds, p in paths.items())
+    assert byte_exact, "session outputs diverged from direct reduction"
+
+    return {
+        "stages": st.stages, "restages": st.restages,
+        "coalesced": st.coalesced, "hits": st.hits,
+        "evictions": st.evictions, "queue_waits": st.queue_waits,
+        "queue_wait_s": st.queue_wait_time,
+        "turnaround_s": res.turnaround,
+        "stage_once_per_residency": stage_once,
+        "fs_bytes_read": fab.fs.bytes_read,
+        "fs_bytes_expected": expect_fs,
+        "byte_exact": byte_exact,
+        "per_dataset": per_dataset,
+    }
+
+
+def bench_writeback() -> dict:
+    """Collective vs naive write-back of the sessions' result payloads at
+    P=1024, on idle fabrics (pure engine comparison)."""
+    from repro.core.fabric import BGQ, Fabric
+    from repro.core.staging import stage_out, stage_out_naive
+
+    rng = np.random.default_rng(0)
+    # one result archive per session: a full reduced scan (the paper's
+    # 8 MB frame -> ~1 MB binary, x frames), 16 MB each
+    outputs = {f"results/s{i}/scan.bin":
+               rng.integers(0, 255, 16 << 20, dtype=np.uint8)
+               for i in range(len(SESSION_PLANS))}
+    rep_c, _ = stage_out(Fabric(n_hosts=N_HOSTS, constants=BGQ), outputs)
+    rep_n, _ = stage_out_naive(Fabric(n_hosts=N_HOSTS, constants=BGQ),
+                               outputs)
+    total = sum(b.size for b in outputs.values())
+    assert rep_c.fs_write_bytes == total                  # 1x the results
+    assert rep_n.fs_write_bytes == N_HOSTS * total        # P x the results
+    return {
+        "n_hosts": N_HOSTS, "result_bytes": total,
+        "collective_s": rep_c.total_time, "naive_s": rep_n.total_time,
+        "speedup": rep_n.total_time / rep_c.total_time,
+    }
+
+
+def run_benchmarks() -> dict:
+    from repro.core.fabric import BGQ
+    report = {
+        "config": {
+            "calibration": BGQ.name,
+            "n_hosts": N_HOSTS, "n_datasets": len(DATASETS),
+            "n_sessions": len(SESSION_PLANS), "n_frames": N_FRAMES,
+            "frame_size": FRAME_SIZE,
+            "budget_bytes": _scenario()[3],
+            "reduce_s_per_frame": REDUCE_S_PER_FRAME,
+        },
+        "service": bench_service(),
+        "writeback": bench_writeback(),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def rows(report=None) -> List[Row]:
+    """Harness CSV rows (name, us_per_call, derived) for benchmarks.run.
+    us_per_call carries simulated seconds in µs."""
+    if report is None:
+        report = run_benchmarks()
+    svc, wb = report["service"], report["writeback"]
+    return [
+        ("bench_service_turnaround", svc["turnaround_s"] * 1e6,
+         f"stages={svc['stages']}_coalesced={svc['coalesced']}"
+         f"_evictions={svc['evictions']}"),
+        ("bench_service_stage_out_P1024", wb["collective_s"] * 1e6,
+         f"speedup_vs_naive={wb['speedup']:.1f}x"),
+    ]
+
+
+def main() -> None:
+    report = run_benchmarks()
+    svc, wb = report["service"], report["writeback"]
+    print(f"service: {svc['stages']} stages ({svc['restages']} re-stages), "
+          f"{svc['coalesced']} coalesced, {svc['evictions']} evictions, "
+          f"{svc['queue_waits']} queued admissions -> turnaround "
+          f"{svc['turnaround_s']:.2f}s (byte-exact: {svc['byte_exact']}, "
+          f"one stage per residency: {svc['stage_once_per_residency']})")
+    print(f"write-back @P={wb['n_hosts']}: naive {wb['naive_s']:.3f}s -> "
+          f"collective {wb['collective_s']:.3f}s "
+          f"({wb['speedup']:.1f}x)")
+    print(f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -163,9 +163,11 @@ def bench_labeling() -> dict:
 
 
 def run_benchmarks() -> dict:
+    from repro.core.fabric import BGQ
     staging = bench_stage_collective()
     labeling = bench_labeling()
-    report = {"staging": staging, "labeling": labeling}
+    report = {"calibration": BGQ.name, "staging": staging,
+              "labeling": labeling}
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)
     return report

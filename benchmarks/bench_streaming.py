@@ -94,8 +94,10 @@ def bench_turnaround() -> List[dict]:
 
 
 def run_benchmarks() -> dict:
+    from repro.core.fabric import BGQ
     report = {
         "config": {
+            "calibration": BGQ.name,
             "n_hosts": N_HOSTS, "n_frames": N_FRAMES,
             "frame_size": FRAME_SIZE, "window_frames": WINDOW,
             "cache_frames": CACHE_FRAMES,

@@ -1,37 +1,109 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (harness contract). The roofline
-table (EXPERIMENTS.md §Roofline) is produced separately by
-``python -m benchmarks.roofline`` from the dry-run artifacts, and the
-staging/labeling hot-path microbenchmark by ``--staging`` (also emits
-``BENCH_staging.json``; standalone: ``python -m benchmarks.bench_staging``).
-``--streaming`` runs the batch-vs-streaming turnaround comparison (emits
-``BENCH_streaming.json``; standalone: ``python -m benchmarks.bench_streaming``).
+Prints ``name,us_per_call,derived`` CSV on stdout (harness contract). The
+roofline table (EXPERIMENTS.md §Roofline) is produced separately by
+``python -m benchmarks.roofline`` from the dry-run artifacts; the
+staging/labeling hot-path microbenchmark by ``--staging``, the
+batch-vs-streaming turnaround comparison by ``--streaming``, and the
+multi-tenant staging-service scenario by ``--service`` (each also emits
+its ``BENCH_*.json``; standalone: ``python -m benchmarks.bench_<name>``).
+
+Every invocation ends with a consolidated summary of ALL ``BENCH_*.json``
+files present (on stderr, so the stdout CSV contract is preserved),
+including the fabric calibration each was measured under.
 """
 from __future__ import annotations
 
+import glob
+import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _headline(name: str, report: dict) -> str:
+    """One-line takeaway per known BENCH_*.json schema (generic fallback)."""
+    try:
+        if name == "BENCH_staging.json":
+            s = report["staging"][-1]          # largest host count
+            lab = report["labeling"]
+            return (f"{s['name']} {s['speedup']:.1f}x vs legacy; "
+                    f"labeling {lab['speedup']:.0f}x")
+        if name == "BENCH_streaming.json":
+            rs = report["turnaround"]
+            lo = min(r["speedup"] for r in rs)
+            hi = max(r["speedup"] for r in rs)
+            return (f"stream vs batch {lo:.2f}-{hi:.2f}x over "
+                    f"{len(rs)} rates, byte-exact")
+        if name == "BENCH_service.json":
+            svc, wb = report["service"], report["writeback"]
+            return (f"{svc['stages']} stages/{svc['coalesced']} coalesced/"
+                    f"{svc['evictions']} evictions; stage_out "
+                    f"{wb['speedup']:.1f}x vs naive @P{wb['n_hosts']}")
+    except Exception:
+        pass          # a malformed result file must never kill the summary
+    try:
+        return ", ".join(sorted(report)[:4])
+    except Exception:
+        return "-"
+
+
+def _calibration(report: dict) -> str:
+    try:
+        return (report.get("calibration")
+                or report.get("config", {}).get("calibration", "-"))
+    except Exception:
+        return "-"
+
+
+def print_summary(out=sys.stderr) -> None:
+    """Consolidated table across every BENCH_*.json in this directory."""
+    paths = sorted(glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json")))
+    if not paths:
+        return
+    rows = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                report = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            rows.append((os.path.basename(path), "-", "unreadable"))
+            continue
+        rows.append((os.path.basename(path), _calibration(report),
+                     _headline(os.path.basename(path), report)))
+    w_name = max(len(r[0]) for r in rows)
+    w_cal = max(max(len(r[1]) for r in rows), len("calibration"))
+    print(f"\n== BENCH summary ({len(rows)} result files) ==", file=out)
+    print(f"{'file':<{w_name}}  {'calibration':<{w_cal}}  headline", file=out)
+    for name, cal, head in rows:
+        print(f"{name:<{w_name}}  {cal:<{w_cal}}  {head}", file=out)
+
 
 def main() -> None:
     print("name,us_per_call,derived")
-    if "--staging" in sys.argv[1:]:
-        from benchmarks import bench_staging
-        for name, us, derived in bench_staging.rows():
-            print(f"{name},{us:.1f},{derived}")
-        return
-    if "--streaming" in sys.argv[1:]:
-        from benchmarks import bench_streaming
-        for name, us, derived in bench_streaming.rows():
-            print(f"{name},{us:.1f},{derived}")
-        return
-    from benchmarks import paper_figures
-    for fn in paper_figures.ALL:
-        for name, us, derived in fn():
-            print(f"{name},{us:.1f},{derived}")
+    try:
+        if "--staging" in sys.argv[1:]:
+            from benchmarks import bench_staging
+            for name, us, derived in bench_staging.rows():
+                print(f"{name},{us:.1f},{derived}")
+        elif "--streaming" in sys.argv[1:]:
+            from benchmarks import bench_streaming
+            for name, us, derived in bench_streaming.rows():
+                print(f"{name},{us:.1f},{derived}")
+        elif "--service" in sys.argv[1:]:
+            from benchmarks import bench_service
+            for name, us, derived in bench_service.rows():
+                print(f"{name},{us:.1f},{derived}")
+        else:
+            from benchmarks import paper_figures
+            for fn in paper_figures.ALL:
+                for name, us, derived in fn():
+                    print(f"{name},{us:.1f},{derived}")
+    finally:
+        print_summary()
 
 
 if __name__ == "__main__":

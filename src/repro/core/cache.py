@@ -18,7 +18,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.fabric import Fabric, NodeLocalStore
+from repro.core.fabric import Fabric, NodeLocalStore, pin_ref, unpin_ref
 
 
 @dataclass
@@ -34,6 +34,7 @@ class TaskInputCache:
     capacity_bytes: int = 1 << 34
     _mem: Dict[str, Any] = field(default_factory=dict)
     _sizes: Dict[str, int] = field(default_factory=dict)
+    _pins: Dict[str, int] = field(default_factory=dict)   # lease refcounts
     hits: int = 0
     misses: int = 0
     read_time_charged: float = 0.0      # simulated seconds spent on misses
@@ -62,12 +63,26 @@ class TaskInputCache:
 
     def _put(self, path: str, val: Any, size: int) -> None:
         total = sum(self._sizes.values()) + size
-        while total > self.capacity_bytes and self._mem:
-            victim = next(iter(self._mem))          # FIFO ~ LRU-ish
+        while total > self.capacity_bytes:
+            victim = next((p for p in self._mem if p not in self._pins),
+                          None)                     # FIFO ~ LRU-ish, unpinned
+            if victim is None:
+                break                               # everything left is pinned
             total -= self._sizes.pop(victim)
             del self._mem[victim]
         self._mem[path] = val
         self._sizes[path] = size
+
+    def pin(self, path: str) -> None:
+        """Exempt `path` from capacity eviction (lease-aware: a dataset
+        leased from the staging service stays deserialized across task
+        waves). Refcounted — each pin needs a matching :meth:`unpin`."""
+        pin_ref(self._pins, path)
+
+    def unpin(self, path: str) -> None:
+        """Drop one pin reference; the entry becomes evictable once the
+        last holder unpins. No-op when `path` is not pinned."""
+        unpin_ref(self._pins, path)
 
     @property
     def resident_bytes(self) -> int:

@@ -77,6 +77,27 @@ TPU_POD = FabricConstants(
 )
 
 
+def pin_ref(pins: Dict[str, int], path: str) -> None:
+    """Add one pin reference to `path` in the refcount map `pins` — the
+    shared idiom behind :meth:`NodeLocalStore.pin`, ``StreamStager.pin``
+    and ``TaskInputCache.pin`` (one implementation, one semantics)."""
+    pins[path] = pins.get(path, 0) + 1
+
+
+def unpin_ref(pins: Dict[str, int], path: str) -> bool:
+    """Drop one pin reference on `path`; returns True if the caller held
+    one (False = no-op — `path` was not pinned in `pins`). The entry
+    leaves the map when the last holder unpins."""
+    count = pins.get(path, 0)
+    if count == 0:
+        return False
+    if count == 1:
+        del pins[path]
+    else:
+        pins[path] = count - 1
+    return True
+
+
 @dataclass
 class SharedFilesystem:
     """Bandwidth-accounted shared parallel filesystem (GPFS stand-in)."""
@@ -85,6 +106,8 @@ class SharedFilesystem:
     busy_until: float = 0.0           # shared-resource serialization point
     bytes_read: int = 0
     read_requests: int = 0
+    bytes_written: int = 0            # time-accounted writes (write-back path)
+    write_requests: int = 0
     metadata_ops: int = 0
 
     def put(self, path: str, data: np.ndarray) -> None:
@@ -155,6 +178,54 @@ class SharedFilesystem:
         hi = max((off + sz for off, sz in stripes), default=0)
         return self.files[path][lo:hi], t_done
 
+    def write(self, path: str, data: np.ndarray, t: float,
+              coordinated: bool = False) -> float:
+        """Time-accounted write of `data` (any dtype, flattened to uint8)
+        to `path`, issued at simulated time `t`. Returns the completion
+        time. Unlike :meth:`put` (the un-accounted producer-side install),
+        this is the WRITE-BACK path: analysis results flushed to the
+        shared FS pay bandwidth and latency like any read.
+
+        `coordinated` selects the regime exactly as for reads: disjoint
+        collective stripes stream at ``fs_seq_bw``; uncoordinated
+        full-replica writes contend at ``fs_rand_bw``. Bandwidth
+        serializes on the shared busy stream; the per-request latency
+        overlaps (charged to this caller's completion only).
+        """
+        buf = np.ascontiguousarray(data).view(np.uint8).ravel()
+        bw = (self.constants.fs_seq_bw if coordinated
+              else self.constants.fs_rand_bw)
+        start = max(t, self.busy_until)
+        self.busy_until = start + buf.size / bw
+        t_done = self.busy_until + self.constants.fs_op_latency
+        self.files[path] = buf
+        self.bytes_written += buf.size
+        self.write_requests += 1
+        return t_done
+
+    def write_gather(self, path: str, data: np.ndarray,
+                     stripes: List[Tuple[int, int]], t: float,
+                     coordinated: bool = True) -> float:
+        """Batched form of P concurrent disjoint-stripe writes issued at
+        `t` — the data-gather + write half of a two-phase
+        ``MPI_File_write_all`` (the write-back mirror of
+        :meth:`read_striped`). Time-model equivalent to one :meth:`write`
+        per stripe (bandwidth serializes, per-request latencies overlap)
+        at O(1) Python cost; the file's final content is installed whole.
+        Returns the completion time of the last stripe.
+        """
+        buf = np.ascontiguousarray(data).view(np.uint8).ravel()
+        total = sum(sz for _, sz in stripes)
+        bw = (self.constants.fs_seq_bw if coordinated
+              else self.constants.fs_rand_bw)
+        start = max(t, self.busy_until)
+        self.busy_until = start + total / bw
+        t_done = self.busy_until + self.constants.fs_op_latency
+        self.files[path] = buf
+        self.bytes_written += total
+        self.write_requests += len(stripes)
+        return t_done
+
 
 @dataclass
 class Interconnect:
@@ -215,7 +286,11 @@ class NodeLocalStore:
     bytes_written: int = 0
     hits: int = 0
     misses: int = 0
-    pinned: set = field(default_factory=set)
+    # pin REFCOUNTS: several holders (I/O-hook directives, stream pins,
+    # dataset-service leases) may pin the same path; it stays exempt from
+    # eviction until every holder unpins. Membership tests (`p in pinned`)
+    # behave as the former set.
+    pinned: Dict[str, int] = field(default_factory=dict)
 
     def write(self, path: str, data: np.ndarray, t: float) -> float:
         """Store `data` (uint8 buffer/view) at `path`, starting at
@@ -244,13 +319,25 @@ class NodeLocalStore:
         return None
 
     def pin(self, path: str) -> None:
-        """Exempt `path` from eviction (human-in-the-loop reuse, §VI-B)."""
-        self.pinned.add(path)
+        """Exempt `path` from eviction (human-in-the-loop reuse, §VI-B).
+        Pins are refcounted: each :meth:`pin` needs a matching
+        :meth:`unpin` before the entry becomes evictable again."""
+        pin_ref(self.pinned, path)
+
+    def unpin(self, path: str) -> None:
+        """Drop one pin reference on `path` (lease release); the entry
+        becomes evictable once the last holder unpins. Unpinning a path
+        that is not pinned is a no-op (the holder may have been evicted
+        through `drop`, which clears pins)."""
+        unpin_ref(self.pinned, path)
 
     def drop(self, path: str) -> None:
         """Evict `path` if present. Pure bookkeeping — eviction frees
-        memory, it is not an I/O, so no simulated time is charged."""
+        memory, it is not an I/O, so no simulated time is charged. Any
+        pin refs go with the entry (a forced drop must not leave stale
+        pins that would shield a later re-staged copy)."""
         self.data.pop(path, None)
+        self.pinned.pop(path, None)
 
     def evict_lru(self, budget_bytes: int) -> None:
         """Drop unpinned entries (insertion order ~ LRU) until resident

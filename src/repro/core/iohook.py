@@ -25,6 +25,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.fabric import Fabric
+from repro.core.leader import LeaderGroup
 from repro.core.staging import BATCH_STAGE_FNS, StagingReport
 from repro.core.streaming import stage_stream
 
@@ -69,35 +70,59 @@ class HookResult:
     reports: List[StagingReport]
     metadata_time: float
     total_time: float
+    # catalog-backed mode only: the leases this hook acquired, one per
+    # broadcast entry. The CALLER owns them — release each via
+    # ``service.release(lease.session_id, lease.dataset, t)`` when done,
+    # or the datasets stay pinned/unevictable forever.
+    leases: List = field(default_factory=list)
 
     @property
     def staged_bytes(self) -> int:
         return sum(r.total_bytes for r in self.reports)
 
 
-def resolve_manifest(fabric: Fabric, patterns: Sequence[str], t0: float
-                     ) -> Tuple[List[str], float]:
-    """Leader-rank metadata resolution: ONE process runs the globs, then the
-    list is broadcast (a naive implementation runs the glob on every rank,
-    congesting the FS — paper §IV).
+def resolve_manifest_timed(fabric: Fabric, patterns: Sequence[str], t0: float
+                           ) -> Tuple[List[str], float, float]:
+    """Leader-rank metadata resolution with a phase breakdown.
+
+    ONE process (the leader-group root) runs the globs, then the resolved
+    list is broadcast to the other leaders via
+    :meth:`repro.core.leader.LeaderGroup.on_root` (a naive implementation
+    runs the glob on every rank, congesting the FS — paper §IV).
 
     `patterns` are fnmatch globs against the shared FS; `t0` the simulated
-    start time (s). Returns ``(resolved paths, completion time)``, the
-    broadcast of the (small) manifest included."""
-    files: List[str] = []
-    t = t0
-    for pattern in patterns:
-        names, t = fabric.fs.glob(pattern, t)
-        files.extend(names)
-    # broadcast the (small) manifest to all leaders
-    manifest_bytes = sum(len(f) for f in files) + 8 * len(files)
-    t += fabric.net.broadcast_time(max(manifest_bytes, 1), fabric.n_hosts)
+    start time (s). Returns ``(resolved paths, completion time,
+    broadcast seconds)`` — the broadcast is included in the completion
+    time AND reported separately so callers can charge it into
+    ``StagingReport.broadcast_time``."""
+    leaders = LeaderGroup(fabric)
+    glob_done = [t0]
+
+    def root_globs() -> List[str]:
+        files: List[str] = []
+        t = t0
+        for pattern in patterns:
+            names, t = fabric.fs.glob(pattern, t)
+            files.extend(names)
+        glob_done[0] = t
+        return files
+
+    files, bcast = leaders.on_root(root_globs)
+    return files, glob_done[0] + bcast, bcast
+
+
+def resolve_manifest(fabric: Fabric, patterns: Sequence[str], t0: float
+                     ) -> Tuple[List[str], float]:
+    """:func:`resolve_manifest_timed` without the breakdown — returns
+    ``(resolved paths, completion time)``, broadcast included."""
+    files, t, _ = resolve_manifest_timed(fabric, patterns, t0)
     return files, t
 
 
 def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
                 collective: bool = True, mode: Optional[str] = None,
-                stage_kw: Optional[Dict] = None) -> HookResult:
+                stage_kw: Optional[Dict] = None,
+                service=None, session: str = "iohook") -> HookResult:
     """Execute the hook: resolve globs once, broadcast the manifest, stage.
 
     Parameters: `spec` is the declarative staging spec (Fig. 6); `t0` the
@@ -107,7 +132,27 @@ def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
     engine-specific keywords (e.g. ``{"chunk_bytes": 1 << 20}`` for
     pipelined, ``{"rate_hz": 10.0, "window_bytes": ...}`` for stream).
     Returns a :class:`HookResult` whose times are simulated seconds.
+
+    The leader metadata broadcast (the root's resolved manifest pushed to
+    the other leaders) is charged into each report's ``broadcast_time``;
+    ``metadata_time`` covers the glob phase only, so
+    ``metadata_time + sum(report total_times) == total_time``.
+
+    **Catalog-backed mode**: pass ``service`` (a
+    :class:`repro.core.datasvc.StagingService`) to route each broadcast
+    entry through the long-lived dataset catalog instead of staging
+    directly — the entry registers as a dataset (named by its pattern
+    tuple) and is acquired under ``session``. Concurrent hook runs
+    against the same service COALESCE into one collective stage, replicas
+    stay lease-pinned until the session releases them, and the staging
+    engine/params are the service's (``mode``/``stage_kw`` are ignored).
+    The acquired leases come back in ``HookResult.leases`` and belong to
+    the caller: release them (``service.release(lease.session_id,
+    lease.dataset, t)``) when the session is done, or the datasets stay
+    unevictable and later admissions can wedge.
     """
+    if service is not None:
+        return _run_io_hook_catalog(fabric, spec, t0, service, session)
     if mode is None:
         mode = "collective" if collective else "naive"
     if mode not in _STAGE_FNS:
@@ -120,8 +165,9 @@ def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
     t = t0
     all_files: List[str] = []
     for entry in spec.broadcasts:
-        files, t_resolved = resolve_manifest(fabric, entry.files, t)
-        t_meta += t_resolved - t
+        files, t_resolved, bcast = resolve_manifest_timed(
+            fabric, entry.files, t)
+        t_meta += t_resolved - t - bcast     # glob phase only
         t = t_resolved
         kw = stage_kw
         if mode == "stream" and entry.pin:
@@ -129,6 +175,7 @@ def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
             # window, post-hoc pinning would mark already-evicted files
             kw = dict(stage_kw, pin_paths=files)
         rep, t = stage(fabric, files, t, **kw)
+        rep.broadcast_time = bcast           # on_root manifest broadcast
         reports.append(rep)
         all_files.extend(files)
         if entry.pin:
@@ -137,6 +184,39 @@ def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
                     host.store.pin(f)
     return HookResult(resolved_files=all_files, reports=reports,
                       metadata_time=t_meta, total_time=t - t0)
+
+
+def _run_io_hook_catalog(fabric: Fabric, spec: StagingSpec, t0: float,
+                         service, session: str) -> HookResult:
+    """Catalog-backed hook execution: register + acquire through a
+    :class:`repro.core.datasvc.StagingService`. Reports are the datasets'
+    last staging reports — SHARED across coalesced hook runs (a second
+    hook that joins an in-flight stage sees the same report object), so
+    the per-hook accounting identity of the direct modes (metadata_time +
+    report totals == total_time) does not apply here; ``metadata_time``
+    still covers the registration glob phase only (the manifest broadcast
+    lands in ``service.stats.broadcast_time``)."""
+    reports: List[StagingReport] = []
+    leases: List = []
+    all_files: List[str] = []
+    t_meta = 0.0
+    t = t0
+    t_end = t0
+    for entry in spec.broadcasts:
+        name = "|".join(entry.files)
+        bcast0 = service.stats.broadcast_time
+        ds, t_reg = service.register(name, patterns=entry.files, t=t)
+        t_meta += (t_reg - t) - (service.stats.broadcast_time - bcast0)
+        lease = service.acquire(session, name, t_reg)
+        leases.append(lease)
+        t = t_reg
+        t_end = max(t_end, lease.t_ready)
+        if ds.last_report is not None:
+            reports.append(ds.last_report)
+        all_files.extend(ds.paths)
+    return HookResult(resolved_files=all_files, reports=reports,
+                      metadata_time=t_meta, total_time=t_end - t0,
+                      leases=leases)
 
 
 def naive_per_rank_globs(fabric: Fabric, patterns: Sequence[str],

@@ -8,11 +8,18 @@ root and broadcast. In the JAX runtime this maps to "one process per host"
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Sequence, TypeVar
+from typing import Callable, List, Optional, Sequence, Tuple, TypeVar
 
 from repro.core.fabric import Fabric
 
 T = TypeVar("T")
+
+
+def manifest_bytes(files: Sequence[str]) -> int:
+    """Wire size of a resolved file manifest: the path strings plus an
+    8-byte (size/offset) header per entry — the payload ``on_root``
+    broadcasts after the root's glob."""
+    return sum(len(f) for f in files) + 8 * len(files)
 
 
 @dataclass
@@ -31,9 +38,22 @@ class LeaderGroup:
     def is_leader(self, rank: int) -> bool:
         return rank in set(self.members)
 
-    def on_root(self, fn: Callable[[], T]) -> T:
-        """Run a metadata operation once (root), conceptually broadcast."""
-        return fn()
+    def on_root(self, fn: Callable[[], T],
+                payload_bytes: Optional[int] = None) -> Tuple[T, float]:
+        """Run a metadata operation once (root) and broadcast its result
+        to the other leaders.
+
+        Returns ``(result, broadcast seconds)`` — the broadcast duration
+        is simulated time the CALLER must place on its timeline and
+        charge into ``StagingReport.broadcast_time`` (it is real wire
+        traffic, accounted in ``Interconnect.bytes_moved`` here).
+        ``payload_bytes`` overrides the wire-size estimate; by default
+        the result is treated as a file manifest (:func:`manifest_bytes`).
+        """
+        result = fn()
+        if payload_bytes is None:
+            payload_bytes = manifest_bytes(result)  # type: ignore[arg-type]
+        return result, self.broadcast_time(max(int(payload_bytes), 1))
 
     def broadcast_time(self, nbytes: int) -> float:
         return self.fabric.net.broadcast_time(nbytes, self.fabric.n_hosts)

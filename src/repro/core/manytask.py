@@ -40,6 +40,9 @@ class Task:
     not_before: float = 0.0                   # earliest eligibility (sim s):
     #   a frame future — set to FrameRecord.t_avail so the task becomes
     #   runnable the moment its frame lands, not when the dataset closes
+    session: Optional[str] = None             # analysis-session tenant tag
+    #   (AnalysisSession.tag); per-session accounting lands in
+    #   EngineStats.sessions
     retries: int = 0
     result: Any = None
 
@@ -54,6 +57,15 @@ class TaskEvent:
 
 
 @dataclass
+class SessionStats:
+    """Per-analysis-session slice of an engine run (multi-tenant view)."""
+    tasks: int = 0
+    input_read_time: float = 0.0      # simulated input time, this session
+    busy_time: float = 0.0            # sum of event durations
+    makespan: float = 0.0             # last completion of a session task
+
+
+@dataclass
 class EngineStats:
     makespan: float = 0.0
     events: List[TaskEvent] = field(default_factory=list)
@@ -64,9 +76,13 @@ class EngineStats:
     input_read_time: float = 0.0      # total simulated input time
     cache_hits: int = 0
     cache_misses: int = 0
+    sessions: Dict[str, SessionStats] = field(default_factory=dict)
 
     def cpu_seconds(self) -> float:
         return sum(e.end - e.start for e in self.events)
+
+    def session(self, session_id: str) -> SessionStats:
+        return self.sessions.setdefault(session_id, SessionStats())
 
 
 class ManyTaskEngine:
@@ -205,6 +221,8 @@ class ManyTaskEngine:
                     continue
                 t_in = self._input_time(task, w, stats)
                 stats.input_read_time += t_in
+                if task.session:
+                    stats.session(task.session).input_read_time += t_in
                 dur = self._duration(task)
                 durations_seen.append(dur)
                 start, end = t_now, t_now + t_in + dur
@@ -288,6 +306,11 @@ class ManyTaskEngine:
                 else:
                     running.pop(tid, None)
                 stats.events.append(TaskEvent(tid, w, start, now, runkind))
+                if by_id[tid].session:
+                    s = stats.session(by_id[tid].session)
+                    s.tasks += 1
+                    s.busy_time += now - start
+                    s.makespan = max(s.makespan, now)
                 idle.append(w)
                 for dep in dependents.get(tid, ()):  # release dependents
                     remaining_deps[dep].discard(tid)

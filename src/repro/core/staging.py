@@ -46,15 +46,18 @@ class StagingReport:
     stage_time: float = 0.0       # FS read phase (simulated s)
     comm_time: float = 0.0        # interconnect replication phase (exposed)
     write_time: float = 0.0       # node-local write phase
+    broadcast_time: float = 0.0   # leader metadata-broadcast (on_root) phase
     fs_bytes: int = 0             # bytes actually read from shared FS
+    fs_write_bytes: int = 0       # bytes written BACK to shared FS (stage_out)
     net_bytes: int = 0            # bytes moved on the interconnect
-    mode: str = "collective"      # collective | pipelined | naive
+    mode: str = "collective"      # collective|pipelined|naive|stream|stage_out
     n_chunks: int = 0             # pipelined: total all-gather segments
     overlap_saved: float = 0.0    # pipelined: phase time hidden by overlap
 
     @property
     def total_time(self) -> float:
-        return self.stage_time + self.comm_time + self.write_time
+        return (self.stage_time + self.comm_time + self.write_time
+                + self.broadcast_time)
 
     @property
     def delivered_bandwidth(self) -> float:
@@ -240,6 +243,79 @@ def stage_naive(fabric: Fabric, paths: Sequence[str],
     rep.write_time = total / fabric.constants.local_bw
     rep.fs_bytes = fabric.fs.bytes_read - fs0
     return rep, t0 + rep.total_time
+
+
+# ---------------------------------------------------------------------------
+# write-back: staging OUT — dirty results flushed to the shared FS
+# ---------------------------------------------------------------------------
+
+def _as_uint8(outputs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    return {p: np.ascontiguousarray(d).view(np.uint8).ravel()
+            for p, d in outputs.items()}
+
+
+def stage_out(fabric: Fabric, outputs: Dict[str, np.ndarray],
+              t0: float = 0.0) -> Tuple[StagingReport, float]:
+    """Collective write-back: ``MPI_File_write_all`` over the fabric.
+
+    `outputs` maps shared-FS destination paths to result buffers (any
+    dtype; flattened to uint8). Each file is written as P disjoint 1/P
+    stripes by the leader group through
+    :meth:`repro.core.fabric.SharedFilesystem.write_gather` — aggregate
+    FS traffic is 1x the result bytes at the coordinated sequential rate,
+    plus the per-file collective sync overhead, exactly mirroring
+    ``stage_collective`` on the read side. Analysis results are
+    REPLICATED on the nodes (every host holds the full buffer), so the
+    data-gather half of the two-phase write moves no interconnect bytes —
+    each leader already owns its stripe.
+
+    Returns ``(report, completion time)``; the report's ``stage_time`` is
+    the FS write phase and ``fs_write_bytes`` the bytes landed.
+    """
+    P_ = fabric.n_hosts
+    w0 = fabric.fs.bytes_written
+    bufs = _as_uint8(outputs)
+    total = sum(b.size for b in bufs.values())
+    rep = StagingReport(n_hosts=P_, total_bytes=total, mode="stage_out")
+
+    coll_overhead = _coll_overhead(fabric)
+    t_done = t0
+    for path, buf in bufs.items():
+        # stripes issue concurrently; the FS serializes bandwidth only
+        t_file = fabric.fs.write_gather(path, buf, _stripes(buf.size, P_),
+                                        t0, coordinated=True)
+        t_done = max(t_done, t_file) + coll_overhead
+    rep.stage_time = t_done - t0
+    rep.fs_write_bytes = fabric.fs.bytes_written - w0
+    return rep, t0 + rep.total_time
+
+
+def stage_out_naive(fabric: Fabric, outputs: Dict[str, np.ndarray],
+                    t0: float = 0.0) -> Tuple[StagingReport, float]:
+    """Baseline write-back: every host writes each FULL result file to the
+    shared FS, uncoordinated (the congested regime — P x the bytes at
+    ``fs_rand_bw``). Final file contents are identical to ``stage_out``;
+    only the traffic and time differ, which is the comparison the
+    write-back benchmark measures."""
+    P_ = fabric.n_hosts
+    w0 = fabric.fs.bytes_written
+    bufs = _as_uint8(outputs)
+    total = sum(b.size for b in bufs.values())
+    rep = StagingReport(n_hosts=P_, total_bytes=total, mode="stage_out_naive")
+    t_done = t0
+    for path, buf in bufs.items():
+        for _ in range(P_):
+            # concurrent uncoordinated writes: bandwidth serializes on the
+            # shared FS, per-request latency overlaps across hosts
+            t_w = fabric.fs.write(path, buf, t0, coordinated=False)
+            t_done = max(t_done, t_w)
+    rep.stage_time = t_done - t0
+    rep.fs_write_bytes = fabric.fs.bytes_written - w0
+    return rep, t0 + rep.total_time
+
+
+# The write-back engines, keyed like BATCH_STAGE_FNS (collective flag name).
+WRITEBACK_STAGE_FNS = {"collective": stage_out, "naive": stage_out_naive}
 
 
 # The batch staging engines, by I/O-hook mode name. Single source of truth

@@ -48,7 +48,8 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.fabric import BGQ, Fabric, FabricConstants
+from repro.core.fabric import (BGQ, Fabric, FabricConstants, pin_ref,
+                               unpin_ref)
 from repro.core.staging import StagingReport, readonly_view
 
 
@@ -176,7 +177,7 @@ class StreamStager:
         self.peak_resident = 0
         self._resident: Dict[str, int] = {}     # path -> bytes, arrival order
         self._released: Dict[str, float] = {}   # path -> simulated release t
-        self._pinned: set = set()
+        self._pinned: Dict[str, int] = {}       # path -> pin refcount
         self._nic_busy = t0                     # detector link serialization
         self._bcast_busy = t0                   # broadcast ring serialization
         self._net0 = fabric.net.bytes_moved
@@ -185,8 +186,17 @@ class StreamStager:
     def _resident_bytes(self) -> int:
         return sum(self._resident.values())
 
+    def _pinned_anywhere(self, path: str) -> bool:
+        """Pinned by this stager OR by any other holder in the node-local
+        stores (e.g. a dataset-service lease on the same paths) — window
+        eviction must respect foreign pins, not just its own. Store pins
+        are symmetric across hosts, so host 0 is representative."""
+        return (path in self._pinned
+                or (bool(self.fabric.hosts)
+                    and path in self.fabric.hosts[0].store.pinned))
+
     def _evictable(self, path: str, t: float) -> bool:
-        return (path not in self._pinned
+        return (not self._pinned_anywhere(path)
                 and self._released.get(path, float("inf")) <= t)
 
     def _drop(self, path: str) -> None:
@@ -214,8 +224,8 @@ class StreamStager:
             return t
         # backpressure: advance to consumer releases, oldest release first
         pending = sorted((rt, p) for p, rt in self._released.items()
-                         if p in self._resident and p not in self._pinned
-                         and rt > t)
+                         if p in self._resident
+                         and not self._pinned_anywhere(p) and rt > t)
         for rt, path in pending:
             t = rt
             self._drop(path)
@@ -269,11 +279,23 @@ class StreamStager:
         self._released[path] = t
 
     def pin(self, path: str) -> None:
-        """Exempt `path` from window eviction (counts against the budget
-        forever); also pins it in every node-local store."""
-        self._pinned.add(path)
+        """Exempt `path` from window eviction (it keeps counting against
+        the budget); also pins it in every node-local store. Pins are
+        refcounted (lease-aware): several holders — the I/O-hook pin
+        directive, dataset-service leases — may pin the same frame, and
+        it stays exempt until every one calls :meth:`unpin`."""
+        pin_ref(self._pinned, path)
         for host in self.fabric.hosts:
             host.store.pin(path)
+
+    def unpin(self, path: str) -> None:
+        """Drop one pin reference on `path` (and the matching node-local
+        store pin); after the last holder unpins, the frame is evictable
+        again the moment it is also released. No-op when this stager
+        holds no pin — other holders' store pins are never touched."""
+        if unpin_ref(self._pinned, path):
+            for host in self.fabric.hosts:
+                host.store.unpin(path)
 
     def finish(self) -> StreamReport:
         """Close the stream and return the acquisition's accounting."""

@@ -18,6 +18,13 @@ Online mode — ``reduce_frames_online`` / ``run_online_hedm`` run stage-1
 incrementally per sliding window over a streamed acquisition
 (`repro.core.streaming`): results are produced while the detector is still
 writing, and are bit-identical to the batch path (``run_batch_hedm``).
+
+Interactive mode — ``run_interactive_hedm`` drives N concurrent analysis
+sessions over M scans through the long-lived dataset catalog + staging
+service (`repro.core.datasvc`): sessions lease datasets (coalescing
+concurrent stages), reduce from the resident replicas, and write their
+results back to the shared FS with the collective ``stage_out`` — the
+"extended residency, various processing tasks" regime of §VI-B.
 """
 from __future__ import annotations
 
@@ -381,6 +388,124 @@ def run_batch_hedm(fabric: Fabric, frames: np.ndarray, dark: np.ndarray,
     dur = (reduce_time_per_frame * F
            if reduce_time_per_frame is not None else wall)
     return reduced, t_staged + dur, rep
+
+
+# ---------------------------------------------------------------------------
+# interactive (multi-session) mode over the dataset catalog + service
+# ---------------------------------------------------------------------------
+
+def pack_reduced(reduced: Sequence[ReducedFrame]) -> np.ndarray:
+    """Flat float32 write-back payload for a reduced scan: per frame a
+    ``[frame_id, n_signal_pixels, n_spots]`` header followed by the
+    ``(n_spots, 3)`` peak rows. Deterministic, so two sessions reducing
+    the same staged dataset produce byte-identical buffers — the
+    write-back byte-exactness criterion."""
+    parts = []
+    for r in reduced:
+        parts.append(np.array([r.frame_id, r.n_signal_pixels, r.n_spots],
+                              np.float32))
+        parts.append(np.ascontiguousarray(r.peaks, np.float32).ravel())
+    return (np.concatenate(parts) if parts else np.zeros(0, np.float32))
+
+
+@dataclass
+class SessionScript:
+    """One tenant's plan: which datasets it reduces, in order, starting at
+    ``t_start`` (simulated s). ``reduce_s_per_frame`` is the declared
+    stage-1 cost (the ManyTaskEngine duration idiom — keeps multi-session
+    schedules deterministic)."""
+    name: str
+    datasets: List[str]
+    t_start: float = 0.0
+    reduce_s_per_frame: float = 0.15
+
+
+@dataclass
+class InteractiveHEDMResult:
+    """Outcome of a multi-session interactive run (times simulated s)."""
+    outputs: Dict[str, Dict[str, np.ndarray]]   # session -> dataset -> packed
+    result_paths: Dict[str, Dict[str, str]]     # session -> dataset -> FS path
+    session_done: Dict[str, float]              # flush completion per session
+    writeback: Dict[str, "object"]              # session -> StagingReport
+    service: "object"                           # the StagingService (stats)
+    turnaround: float                           # last session flush
+
+
+def run_interactive_hedm(fabric: Fabric, scans: Dict[str, np.ndarray],
+                         dark: np.ndarray,
+                         sessions: Sequence[SessionScript],
+                         budget_bytes: int, threshold: float = 200.0,
+                         use_kernel: bool = False, mode: str = "collective",
+                         collective_writeback: bool = True
+                         ) -> InteractiveHEDMResult:
+    """N concurrent analysis sessions over M scans through the staging
+    service — the paper's interactive regime (§VI-B) plus write-back.
+
+    Every scan lands on the shared FS (stage 0) and registers in the
+    catalog. Sessions then interleave round-robin: each leases its next
+    dataset (concurrent requests COALESCE into one collective stage;
+    unleased residents evict under ``budget_bytes`` and re-stage
+    transparently on a later miss), reduces stage-1 FROM THE RESIDENT
+    NODE-LOCAL REPLICA (charged: replica read at ``local_read_bw`` +
+    ``reduce_s_per_frame`` per frame), installs the packed result as a
+    dirty replica, and releases the lease. When a session's script is
+    done it FLUSHES its results to the shared FS (collective
+    ``stage_out`` or the naive baseline).
+
+    Outputs are bit-identical to reducing each scan directly — eviction
+    and re-staging never change bytes, only times (tests assert this).
+    """
+    from repro.core.datasvc import StagingService
+
+    scans32 = {n: np.ascontiguousarray(f, dtype=np.float32)
+               for n, f in scans.items()}
+    for name, frames in scans32.items():
+        stream_to_fs(fabric, frames, prefix=name)
+    svc = StagingService(fabric, budget_bytes, mode=mode)
+    for name in scans32:
+        svc.register(name, patterns=[f"{name}/frame_*.bin"])
+
+    handles = {s.name: svc.session(s.name) for s in sessions}
+    clocks = {s.name: s.t_start for s in sessions}
+    outputs: Dict[str, Dict[str, np.ndarray]] = {s.name: {} for s in sessions}
+    result_paths: Dict[str, Dict[str, str]] = {s.name: {} for s in sessions}
+    c = fabric.constants
+
+    for step in range(max(len(s.datasets) for s in sessions)):
+        for script in sessions:
+            if step >= len(script.datasets):
+                continue
+            ds = script.datasets[step]
+            sess = handles[script.name]
+            lease = sess.acquire(ds, clocks[script.name])
+            entry = svc.catalog[ds]
+            F, H, W = scans32[ds].shape
+            store = fabric.hosts[0].store
+            stack = np.stack([store.data[p].view(np.float32).reshape(H, W)
+                              for p in entry.paths])
+            reduced = reduce_frames(stack, dark, threshold=threshold,
+                                    use_kernel=use_kernel)
+            packed = pack_reduced(reduced)
+            t_compute = (lease.t_ready
+                         + entry.nbytes / c.local_read_bw     # replica read
+                         + script.reduce_s_per_frame * F)
+            path, t_put = sess.put_result(ds, packed, t_compute)
+            sess.release(ds, t_put)
+            clocks[script.name] = t_put
+            outputs[script.name][ds] = packed
+            result_paths[script.name][ds] = path
+
+    session_done: Dict[str, float] = {}
+    writeback: Dict[str, object] = {}
+    for script in sessions:
+        rep, t_done = handles[script.name].flush(
+            clocks[script.name], collective=collective_writeback)
+        writeback[script.name] = rep
+        session_done[script.name] = t_done
+    return InteractiveHEDMResult(
+        outputs=outputs, result_paths=result_paths,
+        session_done=session_done, writeback=writeback, service=svc,
+        turnaround=max(session_done.values()) if session_done else 0.0)
 
 
 # ---------------------------------------------------------------------------

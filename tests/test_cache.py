@@ -33,3 +33,83 @@ def test_task_input_cache_capacity_eviction():
     cache = TaskInputCache(store, capacity_bytes=1000)
     cache.get("a"); cache.get("b"); cache.get("c")
     assert cache.resident_bytes <= 1000
+
+
+def test_task_input_cache_fifo_eviction_order():
+    """Capacity-bounded FIFO: the OLDEST entries evict first, and an
+    evicted entry faults back in as a fresh miss."""
+    store = NodeLocalStore(0, BGQ)
+    for name in "abcd":
+        store.write(name, np.ones(400, np.uint8), 0.0)
+    cache = TaskInputCache(store, capacity_bytes=1000)
+    cache.get("a"); cache.get("b")
+    cache.get("c")                        # evicts a (oldest), keeps b, c
+    assert set(cache._mem) == {"b", "c"}
+    cache.get("d")                        # evicts b
+    assert set(cache._mem) == {"c", "d"}
+    assert cache.misses == 4 and cache.hits == 0
+    cache.get("a")                        # re-fault: a miss again
+    assert cache.misses == 5
+
+
+def test_task_input_cache_deserialize_called_once_per_miss():
+    store = NodeLocalStore(0, BGQ)
+    store.write("x", np.arange(256, dtype=np.uint8), 0.0)
+    calls = []
+
+    def parse(raw):
+        calls.append(raw.size)
+        return raw.astype(np.float64)
+
+    cache = TaskInputCache(store)
+    v1 = cache.get("x", parse)
+    v2 = cache.get("x", parse)
+    v3 = cache.get("x", parse)
+    assert len(calls) == 1                # parsed once, on the faulting miss
+    assert v1 is v2 is v3                 # the deserialized object is shared
+    assert v1.dtype == np.float64
+    # a miss for an absent path deserializes nothing
+    assert cache.get("nope", parse) is None
+    assert len(calls) == 1
+
+
+def test_task_input_cache_read_time_charged_accounting():
+    """Misses charge size / local_read_bw simulated seconds; hits and
+    absent paths charge nothing."""
+    store = NodeLocalStore(0, BGQ)
+    store.write("x", np.ones(1 << 20, np.uint8), 0.0)
+    store.write("y", np.ones(1 << 19, np.uint8), 0.0)
+    cache = TaskInputCache(store)
+    assert cache.get("nope") is None
+    assert cache.read_time_charged == 0.0
+    cache.get("x")
+    expect_x = (1 << 20) / BGQ.local_read_bw
+    assert cache.read_time_charged == expect_x
+    cache.get("x")                        # hit: free
+    assert cache.read_time_charged == expect_x
+    cache.get("y")
+    assert cache.read_time_charged == \
+        expect_x + (1 << 19) / BGQ.local_read_bw
+    assert cache.misses == 2 and cache.hits == 1
+
+
+def test_task_input_cache_pin_survives_capacity_eviction():
+    """Lease-aware pinning: pinned entries are exempt from FIFO eviction
+    until the last holder unpins."""
+    store = NodeLocalStore(0, BGQ)
+    for name in "abc":
+        store.write(name, np.ones(400, np.uint8), 0.0)
+    cache = TaskInputCache(store, capacity_bytes=900)
+    cache.get("a")
+    cache.pin("a")
+    cache.pin("a")
+    cache.get("b")
+    cache.get("c")                        # would evict a; must take b
+    assert "a" in cache._mem and "b" not in cache._mem
+    cache.unpin("a")
+    cache.get("b")                        # still pinned by one holder
+    assert "a" in cache._mem
+    cache.unpin("a")
+    store.write("d", np.ones(400, np.uint8), 0.0)
+    cache.get("d")                        # now a is the FIFO victim
+    assert "a" not in cache._mem

@@ -223,6 +223,36 @@ def test_iohook_stages_glob_matches_and_pins():
         assert "other/data.bin" not in host.store.data
 
 
+def test_hook_charges_leader_broadcast_into_report():
+    """The on_root metadata broadcast is real wire time: it lands in
+    StagingReport.broadcast_time (counted by total_time), while
+    HookResult.metadata_time keeps only the glob phase — the two sum to
+    the hook's end-to-end time."""
+    from repro.core.leader import LeaderGroup, manifest_bytes
+    fab = Fabric(n_hosts=64, constants=BGQ)
+    files = []
+    for i in range(5):
+        fab.fs.put(f"scans/s{i}.bin", np.ones(1 << 10, np.uint8))
+        files.append(f"scans/s{i}.bin")
+    res = run_io_hook(fab, StagingSpec([BroadcastEntry(("scans/*.bin",))]))
+    rep = res.reports[0]
+    expect = fab.net.broadcast_time(manifest_bytes(files), fab.n_hosts)
+    assert rep.broadcast_time == pytest.approx(expect)
+    assert rep.broadcast_time > 0.0
+    assert rep.total_time == pytest.approx(
+        rep.stage_time + rep.comm_time + rep.write_time + rep.broadcast_time)
+    # accounting closes: glob metadata + per-entry report times = total
+    assert res.metadata_time + rep.total_time == pytest.approx(res.total_time)
+    # the engine alone (no hook) never charges a broadcast
+    fab2, paths = make_fabric()
+    rep2, _ = stage_collective(fab2, paths)
+    assert rep2.broadcast_time == 0.0
+    # on_root returns the broadcast duration alongside the result
+    lead = LeaderGroup(fab)
+    result, bcast = lead.on_root(lambda: files)
+    assert result == files and bcast == pytest.approx(expect)
+
+
 def test_leader_glob_beats_per_rank_glob():
     """§IV: one rank globs + broadcast << every rank globbing."""
     fab = Fabric(n_hosts=64, ranks_per_host=16, constants=BGQ)
