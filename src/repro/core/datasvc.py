@@ -1,0 +1,452 @@
+"""Multi-tenant dataset catalog + staging service (long-lived residency).
+
+The paper's interactivity claim rests on data being "staged into and
+cached in compute node memory for EXTENDED PERIODS, during which time
+VARIOUS PROCESSING TASKS may efficiently access it" — i.e. on a
+long-lived *service* managing resident datasets, not on any single
+one-shot transfer (the same lesson the streaming follow-ons draw:
+Welborn et al., Perlmutter detector streaming; Poeschel et al.,
+openPMD/ADIOS2 pipelines). The one-shot engines live in
+`repro.core.staging`; this module is the service above them:
+
+  * :class:`DataCatalog` — per-dataset lifecycle bookkeeping
+    (``REGISTERED -> STAGING -> RESIDENT -> EVICTING -> GONE``, with
+    ``GONE -> STAGING`` on transparent re-stage), lease counts held by
+    concurrent analysis sessions, stage/coalesce/hit counters, and a
+    transition history for every dataset.
+  * :class:`StagingService` — admission control over a global per-node
+    memory budget: requests for the same dataset COALESCE (two sessions
+    asking for one dataset share one collective stage), unleased
+    residents evict cheapest-to-restage-first under pressure, admissions
+    QUEUE on future lease releases when nothing is evictable yet, and
+    evicted datasets re-stage transparently on the next acquire. Staged
+    files are lease-pinned in every node-local store (refcounted —
+    `repro.core.fabric.NodeLocalStore.pin`), so a dataset leased by any
+    session can never be evicted under it.
+  * write-back — the missing output path: session results become dirty
+    node-local replicas (:meth:`StagingService.put_result`) and are
+    flushed to the shared FS with the collective
+    :func:`repro.core.staging.stage_out` (disjoint 1/P stripe writes via
+    ``SharedFilesystem.write_gather``; the naive every-host-writes
+    baseline is kept for comparison).
+  * :class:`AnalysisSession` — a tenant handle: leases, result writes,
+    and session-tagged `repro.core.manytask` tasks (``Task.session``).
+
+Driving model: like the rest of the simulator, the service is driven by
+callers passing explicit SIMULATED times ``t`` (seconds); it keeps no
+clock of its own. Interleave calls from several sessions in any program
+order — causality is carried by the time arguments, so a session
+acquiring at a ``t`` inside another session's in-flight stage window
+joins that stage (coalescing), and a release recorded with a future
+timestamp is what a queued admission waits on. Replicas move REAL bytes
+(zero-copy read-only views, byte-exact); see `repro.core.fabric` for the
+sim-vs-wall time discipline.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.fabric import Fabric
+from repro.core.staging import (BATCH_STAGE_FNS, StagingReport, _coll_overhead,
+                                readonly_view, stage_out, stage_out_naive)
+
+
+class DatasetState(enum.Enum):
+    """Dataset lifecycle. Legal transitions::
+
+        REGISTERED -> STAGING -> RESIDENT -> EVICTING -> GONE -> STAGING
+    """
+    REGISTERED = "registered"
+    STAGING = "staging"
+    RESIDENT = "resident"
+    EVICTING = "evicting"
+    GONE = "gone"
+
+
+_LEGAL = {
+    DatasetState.REGISTERED: {DatasetState.STAGING},
+    DatasetState.STAGING: {DatasetState.RESIDENT},
+    DatasetState.RESIDENT: {DatasetState.EVICTING},
+    DatasetState.EVICTING: {DatasetState.GONE},
+    DatasetState.GONE: {DatasetState.STAGING},
+}
+
+
+@dataclass
+class Lease:
+    """One session's hold on one resident dataset.
+
+    ``t_request`` is when the session asked (simulated s); ``t_ready``
+    when the replicas are usable on every node-local store — equal to
+    ``t_request`` for a residency hit, later for a (joined) stage."""
+    session_id: str
+    dataset: str
+    t_request: float
+    t_ready: float
+
+
+@dataclass
+class DatasetEntry:
+    """Catalog record for one dataset (a named set of shared-FS files)."""
+    name: str
+    paths: List[str]
+    nbytes: int                      # total dataset bytes (per-node cost)
+    state: DatasetState = DatasetState.REGISTERED
+    t_ready: float = 0.0             # completion of the in-flight/last stage
+    t_unleased: float = 0.0          # when the lease count last hit zero
+    leases: Dict[str, int] = field(default_factory=dict)   # session -> holds
+    stage_count: int = 0             # completed stagings (= residencies)
+    acquires: int = 0
+    hits: int = 0                    # served from residency
+    coalesced: int = 0               # joined an in-flight stage
+    last_report: Optional[StagingReport] = None
+    history: List[Tuple[float, DatasetState]] = field(default_factory=list)
+
+    def to_state(self, state: DatasetState, t: float) -> None:
+        if state not in _LEGAL[self.state]:
+            raise RuntimeError(f"illegal dataset transition "
+                               f"{self.state.value} -> {state.value} "
+                               f"({self.name!r} at t={t:.3f})")
+        self.state = state
+        self.history.append((t, state))
+
+    @property
+    def lease_count(self) -> int:
+        return sum(self.leases.values())
+
+    def state_at(self, t: float) -> DatasetState:
+        """The state as observed at simulated time `t`: a dataset whose
+        stage completes at ``t_ready > t`` is still STAGING then."""
+        if self.state is DatasetState.RESIDENT and t < self.t_ready:
+            return DatasetState.STAGING
+        return self.state
+
+
+class DataCatalog:
+    """Name -> :class:`DatasetEntry` bookkeeping (no I/O of its own)."""
+
+    def __init__(self) -> None:
+        self._entries: Dict[str, DatasetEntry] = {}
+
+    def add(self, entry: DatasetEntry) -> DatasetEntry:
+        if entry.name in self._entries:
+            raise ValueError(f"dataset {entry.name!r} already registered")
+        self._entries[entry.name] = entry
+        return entry
+
+    def __getitem__(self, name: str) -> DatasetEntry:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown dataset {name!r}; registered: "
+                f"{sorted(self._entries)}") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __iter__(self):
+        return iter(self._entries.values())
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes counted against the node budget: STAGING + RESIDENT."""
+        return sum(e.nbytes for e in self._entries.values()
+                   if e.state in (DatasetState.STAGING, DatasetState.RESIDENT))
+
+    def states(self) -> Dict[str, str]:
+        return {n: e.state.value for n, e in self._entries.items()}
+
+
+@dataclass
+class ServiceStats:
+    """Service-wide accounting (all times simulated seconds)."""
+    stages: int = 0              # collective stage operations actually run
+    restages: int = 0            # of those, re-stages of evicted datasets
+    coalesced: int = 0           # acquires that joined an in-flight stage
+    hits: int = 0                # acquires served from residency
+    evictions: int = 0
+    queue_waits: int = 0         # admissions that waited on a lease release
+    queue_wait_time: float = 0.0
+    stage_time: float = 0.0      # total stage engine time
+    metadata_time: float = 0.0   # registration glob phase
+    broadcast_time: float = 0.0  # registration manifest broadcasts (on_root)
+    writeback_reports: List[StagingReport] = field(default_factory=list)
+
+    @property
+    def writeback_time(self) -> float:
+        return sum(r.total_time for r in self.writeback_reports)
+
+
+def predict_stage_time(fabric: Fabric, nbytes: int, n_files: int) -> float:
+    """Predicted simulated seconds to collectively stage a dataset of
+    `nbytes` across `n_files` files — the eviction cost model (mirrors
+    the ``stage_collective`` formula on an idle fabric, without touching
+    any traffic counters)."""
+    c = fabric.constants
+    P = fabric.n_hosts
+    t_read = (nbytes / c.fs_seq_bw + n_files * _coll_overhead(fabric)
+              + c.fs_op_latency)
+    stripe = max(1, (nbytes + P - 1) // P)
+    t_comm = 0.0 if P <= 1 else (P - 1) * (stripe / c.link_bw
+                                           + c.link_latency)
+    return t_read + t_comm + nbytes / c.local_bw
+
+
+class StagingService:
+    """Long-lived staging service over one :class:`~repro.core.fabric.Fabric`.
+
+    ``budget_bytes`` bounds the PER-NODE memory the catalog may hold
+    resident (every staged dataset is fully replicated on every node, so
+    per-node and aggregate-fraction budgets coincide). ``mode`` selects
+    the batch staging engine ("collective"/"pipelined"/"naive") used for
+    every stage; ``stage_kw`` forwards engine keywords.
+
+    Dirty write-back replicas (:meth:`put_result`) are small reduced
+    results (the paper's 8 MB frame -> ~1 MB binary) and are tracked
+    outside the dataset budget; :meth:`flush` frees them.
+    """
+
+    def __init__(self, fabric: Fabric, budget_bytes: int,
+                 mode: str = "collective",
+                 stage_kw: Optional[Dict] = None):
+        if mode not in BATCH_STAGE_FNS:
+            raise ValueError(f"unknown staging mode {mode!r}; expected one "
+                             f"of {sorted(BATCH_STAGE_FNS)}")
+        self.fabric = fabric
+        self.budget_bytes = int(budget_bytes)
+        self.catalog = DataCatalog()
+        self.stats = ServiceStats()
+        self._stage_fn = BATCH_STAGE_FNS[mode]
+        self._stage_kw = stage_kw or {}
+        self._dirty: Dict[str, Dict[str, np.ndarray]] = {}  # session -> paths
+
+    # -- registration -------------------------------------------------------
+    def session(self, session_id: str) -> "AnalysisSession":
+        return AnalysisSession(self, session_id)
+
+    def register(self, name: str, patterns: Optional[Sequence[str]] = None,
+                 paths: Optional[Sequence[str]] = None, t: float = 0.0
+                 ) -> Tuple[DatasetEntry, float]:
+        """Register dataset `name`, idempotently.
+
+        Either `patterns` (fnmatch globs, resolved ONCE by the leader root
+        and broadcast — charges metadata + broadcast time) or explicit
+        `paths` (no metadata charge). Returns ``(entry, completion t)``;
+        a re-registration returns the existing entry at `t` unchanged.
+        """
+        if name in self.catalog:
+            return self.catalog[name], t
+        if (patterns is None) == (paths is None):
+            raise ValueError("register() needs exactly one of "
+                             "patterns= or paths=")
+        if patterns is not None:
+            from repro.core.iohook import resolve_manifest_timed
+            files, t_done, bcast = resolve_manifest_timed(
+                self.fabric, patterns, t)
+            self.stats.metadata_time += t_done - t - bcast
+            self.stats.broadcast_time += bcast
+        else:
+            files, t_done = list(paths), t
+        if not files:
+            raise ValueError(f"dataset {name!r} resolved to no files")
+        nbytes = sum(self.fabric.fs.size(p) for p in files)
+        if nbytes > self.budget_bytes:
+            raise ValueError(
+                f"dataset {name!r} ({nbytes} B) exceeds the service "
+                f"budget ({self.budget_bytes} B) and could never stage")
+        entry = DatasetEntry(name=name, paths=files, nbytes=nbytes)
+        entry.history.append((t_done, DatasetState.REGISTERED))
+        return self.catalog.add(entry), t_done
+
+    # -- lease lifecycle ----------------------------------------------------
+    def acquire(self, session_id: str, name: str, t: float) -> Lease:
+        """Lease dataset `name` for `session_id` at simulated time `t`.
+
+        RESIDENT at `t`  -> lease immediately (``t_ready == t``).
+        STAGING at `t`   -> coalesce: join the in-flight stage, share its
+                            completion time. No second stage is run.
+        REGISTERED/GONE  -> stage (transparent re-stage on miss), possibly
+                            evicting unleased datasets or queueing on a
+                            future lease release first.
+
+        The dataset's files are lease-pinned in every node-local store
+        until the matching :meth:`release`.
+        """
+        entry = self.catalog[name]
+        entry.acquires += 1
+        if entry.state is DatasetState.RESIDENT:
+            if t < entry.t_ready:            # the stage is still in flight
+                entry.coalesced += 1
+                self.stats.coalesced += 1
+            else:
+                entry.hits += 1
+                self.stats.hits += 1
+            t_ready = max(t, entry.t_ready)
+        else:                                # REGISTERED or GONE
+            restage = entry.state is DatasetState.GONE
+            t_admit = self._admit(entry, t)
+            entry.to_state(DatasetState.STAGING, t_admit)
+            rep, t_done = self._stage_fn(self.fabric, entry.paths, t_admit,
+                                         **self._stage_kw)
+            entry.last_report = rep
+            entry.t_ready = t_done
+            entry.stage_count += 1
+            entry.to_state(DatasetState.RESIDENT, t_done)
+            self.stats.stages += 1
+            self.stats.restages += int(restage)
+            self.stats.stage_time += rep.total_time
+            t_ready = t_done
+        entry.leases[session_id] = entry.leases.get(session_id, 0) + 1
+        for host in self.fabric.hosts:
+            for p in entry.paths:
+                host.store.pin(p)
+        return Lease(session_id=session_id, dataset=name,
+                     t_request=t, t_ready=t_ready)
+
+    def release(self, session_id: str, name: str, t: float) -> None:
+        """Return one lease on `name` at simulated time `t`. When the last
+        lease goes, the dataset becomes evictable from `t` on (queued
+        admissions may be waiting on exactly this moment)."""
+        entry = self.catalog[name]
+        held = entry.leases.get(session_id, 0)
+        if not held:
+            raise RuntimeError(f"session {session_id!r} holds no lease on "
+                               f"dataset {name!r}")
+        if held == 1:
+            del entry.leases[session_id]
+        else:
+            entry.leases[session_id] = held - 1
+        for host in self.fabric.hosts:
+            for p in entry.paths:
+                host.store.unpin(p)
+        if not entry.leases:
+            entry.t_unleased = max(entry.t_unleased, t)
+
+    # -- admission / eviction -----------------------------------------------
+    def _evict(self, entry: DatasetEntry, t: float) -> None:
+        entry.to_state(DatasetState.EVICTING, t)
+        for host in self.fabric.hosts:
+            for p in entry.paths:
+                host.store.drop(p)
+        entry.to_state(DatasetState.GONE, t)   # drop is free bookkeeping
+        self.stats.evictions += 1
+
+    def _admit(self, entry: DatasetEntry, t: float) -> float:
+        """Admission time for staging `entry` requested at `t`: evict
+        unleased residents cheapest-to-restage first; if pressure remains,
+        queue on the earliest already-recorded future lease release; if no
+        release can ever free enough memory, fail loudly."""
+        need = entry.nbytes
+        t_admit = t
+        while self.catalog.resident_bytes + need > self.budget_bytes:
+            free = [e for e in self.catalog
+                    if e.state is DatasetState.RESIDENT and not e.leases]
+            now = [e for e in free if e.t_unleased <= t_admit]
+            if now:
+                # cost-aware: cheapest to bring back if needed again
+                victim = min(now, key=lambda e: (predict_stage_time(
+                    self.fabric, e.nbytes, len(e.paths)), e.name))
+                self._evict(victim, t_admit)
+                continue
+            future = [e for e in free if e.t_unleased > t_admit]
+            if not future:
+                held = {e.name: sorted(e.leases) for e in self.catalog
+                        if e.state is DatasetState.RESIDENT and e.leases}
+                raise RuntimeError(
+                    f"staging service wedged admitting {entry.name!r} "
+                    f"({need} B): budget {self.budget_bytes} B holds "
+                    f"{self.catalog.resident_bytes} B, all leased: {held}")
+            # queued admission: wait for the earliest release, then evict
+            victim = min(future, key=lambda e: (e.t_unleased, e.name))
+            self.stats.queue_wait_time += victim.t_unleased - t_admit
+            t_admit = victim.t_unleased
+            self._evict(victim, t_admit)
+        if t_admit > t:
+            self.stats.queue_waits += 1
+        return t_admit
+
+    # -- write-back ---------------------------------------------------------
+    def put_result(self, session_id: str, name: str, data: np.ndarray,
+                   t: float) -> Tuple[str, float]:
+        """Install a session result as a DIRTY node-local replica.
+
+        Results are produced replicated (every host ran the same reduction
+        over the same staged replicas), so one shared read-only view lands
+        on every node-local store, charged at ``local_bw``; the buffer is
+        remembered for :meth:`flush`. Returns ``(result path, completion
+        t)``. Result replicas are pinned until flushed and tracked outside
+        the dataset budget (reduced outputs are small — paper §VI-A)."""
+        path = f"results/{session_id}/{name}.bin"
+        buf = np.ascontiguousarray(data).view(np.uint8).ravel()
+        view = readonly_view(buf)
+        t_done = t
+        for host in self.fabric.hosts:
+            t_done = max(t_done, host.store.write(path, view, t))
+            host.store.pin(path)
+        self._dirty.setdefault(session_id, {})[path] = buf
+        return path, t_done
+
+    def flush(self, session_id: str, t: float, collective: bool = True
+              ) -> Tuple[StagingReport, float]:
+        """Flush the session's dirty results to the shared FS.
+
+        ``collective=True`` uses :func:`repro.core.staging.stage_out`
+        (disjoint 1/P stripe writes, the ``MPI_File_write_all`` mirror);
+        ``False`` the naive every-host-writes-everything baseline. The
+        flushed node-local replicas are dropped (their memory returns to
+        the nodes). Returns ``(report, completion t)``; flushing with
+        nothing dirty returns an empty report at `t`."""
+        outputs = self._dirty.pop(session_id, {})
+        if not outputs:
+            return (StagingReport(n_hosts=self.fabric.n_hosts, total_bytes=0,
+                                  mode="stage_out"), t)
+        fn = stage_out if collective else stage_out_naive
+        rep, t_done = fn(self.fabric, outputs, t)
+        for host in self.fabric.hosts:
+            for path in outputs:
+                host.store.drop(path)
+        self.stats.writeback_reports.append(rep)
+        return rep, t_done
+
+    @property
+    def dirty_bytes(self) -> int:
+        return sum(b.size for bufs in self._dirty.values()
+                   for b in bufs.values())
+
+
+@dataclass
+class AnalysisSession:
+    """A tenant of the staging service: its leases, results, and tasks.
+
+    Thin sugar over the service with the session id filled in, plus
+    :meth:`tag` for session-tagged many-task work (the scheduler then
+    reports per-session accounting in ``EngineStats.sessions``)."""
+    service: StagingService
+    session_id: str
+
+    def acquire(self, name: str, t: float) -> Lease:
+        return self.service.acquire(self.session_id, name, t)
+
+    def release(self, name: str, t: float) -> None:
+        self.service.release(self.session_id, name, t)
+
+    def put_result(self, name: str, data: np.ndarray, t: float
+                   ) -> Tuple[str, float]:
+        return self.service.put_result(self.session_id, name, data, t)
+
+    def flush(self, t: float, collective: bool = True
+              ) -> Tuple[StagingReport, float]:
+        return self.service.flush(self.session_id, t, collective=collective)
+
+    def tag(self, task):
+        """Stamp a `repro.core.manytask.Task` with this session's id."""
+        task.session = self.session_id
+        return task
