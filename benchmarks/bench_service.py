@@ -36,6 +36,10 @@ Row = Tuple[str, float, str]
 JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          "BENCH_service.json")
 
+# which staging API surface this bench drives (run.py summary column):
+# run_interactive_hedm routes every lease through StagingClient sessions
+API_PATH = "client (service sessions)"
+
 N_HOSTS = 1024
 N_FRAMES = 16
 FRAME_SIZE = 128
@@ -157,6 +161,7 @@ def run_benchmarks() -> dict:
     report = {
         "config": {
             "calibration": BGQ.name,
+            "api_path": API_PATH,
             "n_hosts": N_HOSTS, "n_datasets": len(DATASETS),
             "n_sessions": len(SESSION_PLANS), "n_frames": N_FRAMES,
             "frame_size": FRAME_SIZE,

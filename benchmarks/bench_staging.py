@@ -11,8 +11,13 @@ re-implementations of the seed code paths:
     reported as such in the JSON).
 
 Byte-exactness of the staged replicas against the source FS is asserted on
-every configuration. Emits ``BENCH_staging.json`` next to this file and
-returns harness CSV rows via :func:`rows` (wired into ``benchmarks.run``).
+every configuration. The "new" side drives the unified client API
+(`repro.core.api.StagingClient`), and a dedicated ``hook_paths`` check
+runs one identical staging job through BOTH surfaces — the legacy
+``run_io_hook`` deprecation shim and ``client.stage`` — asserting
+identical simulated accounting, so a shim regression shows up here.
+Emits ``BENCH_staging.json`` next to this file and returns harness CSV
+rows via :func:`rows` (wired into ``benchmarks.run``).
 
 Run directly:  PYTHONPATH=src python -m benchmarks.bench_staging
 """
@@ -32,6 +37,9 @@ Row = Tuple[str, float, str]
 
 JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          "BENCH_staging.json")
+
+# which staging API surface this bench drives (run.py summary column)
+API_PATH = "client"
 
 HOST_COUNTS = (64, 256, 1024)
 STAGE_FILES = 4
@@ -96,12 +104,15 @@ def _check_replicas(fabric, paths):
 
 
 def bench_stage_collective() -> List[dict]:
-    from repro.core.staging import stage_collective
+    from repro.core.api import (BroadcastEntry, CollectiveConfig,
+                                StagingClient, StagingSpec)
     out = []
     for hosts in HOST_COUNTS:
         fab_new, paths = _make_fabric(hosts)
+        spec = StagingSpec([BroadcastEntry(tuple(paths), pin=False)])
+        client = StagingClient(fab_new)
         t0 = time.perf_counter()
-        stage_collective(fab_new, paths)
+        client.stage(spec, CollectiveConfig(), resolve=False)
         t_new = time.perf_counter() - t0
         _check_replicas(fab_new, paths)
 
@@ -162,12 +173,54 @@ def bench_labeling() -> dict:
     }
 
 
+def bench_hook_paths() -> dict:
+    """One identical hook-style staging job through the legacy
+    ``run_io_hook`` shim AND ``StagingClient.stage`` (twin fabrics):
+    asserts identical simulated accounting and byte-exact replicas, and
+    times both surfaces — a shim regression (semantic or wall-clock)
+    shows up here."""
+    import warnings
+
+    from repro.core.api import (BroadcastEntry, CollectiveConfig,
+                                StagingClient, StagingSpec)
+    from repro.core.iohook import run_io_hook
+
+    spec = StagingSpec([BroadcastEntry(("d/*.bin",))])
+    fab_shim, paths = _make_fabric(64)
+    t0 = time.perf_counter()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = run_io_hook(fab_shim, spec, mode="collective")
+    t_shim = time.perf_counter() - t0
+    _check_replicas(fab_shim, paths)
+
+    fab_cli, paths = _make_fabric(64)
+    t0 = time.perf_counter()
+    new = StagingClient(fab_cli).stage(spec, CollectiveConfig())
+    t_cli = time.perf_counter() - t0
+    _check_replicas(fab_cli, paths)
+
+    match = (old.total_time == new.total_time
+             and old.metadata_time == new.metadata_time
+             and old.resolved_files == new.resolved_files
+             and [r.total_time for r in old.reports]
+             == [r.total_time for r in new.reports])
+    assert match, "legacy run_io_hook shim diverged from StagingClient"
+    return {
+        "n_hosts": 64, "dataset_bytes": STAGE_FILES * STAGE_FILE_BYTES,
+        "legacy_shim_s": t_shim, "client_s": t_cli,
+        "simulated_accounting_match": match, "byte_exact": True,
+    }
+
+
 def run_benchmarks() -> dict:
     from repro.core.fabric import BGQ
     staging = bench_stage_collective()
     labeling = bench_labeling()
-    report = {"calibration": BGQ.name, "staging": staging,
-              "labeling": labeling}
+    hook_paths = bench_hook_paths()
+    report = {"calibration": BGQ.name, "api_path": API_PATH,
+              "staging": staging, "labeling": labeling,
+              "hook_paths": hook_paths}
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)
     return report
@@ -184,6 +237,9 @@ def rows(report=None) -> List[Row]:
     lab = report["labeling"]
     out.append((f"bench_{lab['name']}_vectorized", lab["vectorized_s"] * 1e6,
                 f"speedup_vs_legacy={lab['speedup']:.1f}x"))
+    hp = report["hook_paths"]
+    out.append(("bench_hook_shim_vs_client", hp["legacy_shim_s"] * 1e6,
+                f"accounting_match={hp['simulated_accounting_match']}"))
     return out
 
 
@@ -197,6 +253,10 @@ def main() -> None:
              f"frames)" if lab["legacy_extrapolated"] else "")
     print(f"{lab['name']}: legacy {lab['legacy_s']:.2f}s -> vectorized "
           f"{lab['vectorized_s']:.3f}s  ({lab['speedup']:.0f}x){extra}")
+    hp = report["hook_paths"]
+    print(f"hook paths @P64: legacy shim {hp['legacy_shim_s']:.3f}s wall, "
+          f"client {hp['client_s']:.3f}s wall, simulated accounting match: "
+          f"{hp['simulated_accounting_match']}")
     print(f"wrote {JSON_PATH}")
 
 

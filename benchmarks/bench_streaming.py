@@ -38,6 +38,10 @@ Row = Tuple[str, float, str]
 JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          "BENCH_streaming.json")
 
+# which staging API surface this bench drives (run.py summary column):
+# both HEDM runners wire their staging through the unified client
+API_PATH = "client (hedm runners)"
+
 N_HOSTS = 64
 N_FRAMES = 48
 FRAME_SIZE = 128
@@ -98,6 +102,7 @@ def run_benchmarks() -> dict:
     report = {
         "config": {
             "calibration": BGQ.name,
+            "api_path": API_PATH,
             "n_hosts": N_HOSTS, "n_frames": N_FRAMES,
             "frame_size": FRAME_SIZE, "window_frames": WINDOW,
             "cache_frames": CACHE_FRAMES,

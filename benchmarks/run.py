@@ -10,7 +10,9 @@ its ``BENCH_*.json``; standalone: ``python -m benchmarks.bench_<name>``).
 
 Every invocation ends with a consolidated summary of ALL ``BENCH_*.json``
 files present (on stderr, so the stdout CSV contract is preserved),
-including the fabric calibration each was measured under.
+including the fabric calibration each was measured under AND which
+staging API surface drove it (``legacy shim`` vs ``client``) — so a
+regression confined to the deprecation shim is visible at a glance.
 """
 from __future__ import annotations
 
@@ -30,8 +32,13 @@ def _headline(name: str, report: dict) -> str:
         if name == "BENCH_staging.json":
             s = report["staging"][-1]          # largest host count
             lab = report["labeling"]
-            return (f"{s['name']} {s['speedup']:.1f}x vs legacy; "
+            head = (f"{s['name']} {s['speedup']:.1f}x vs legacy; "
                     f"labeling {lab['speedup']:.0f}x")
+            hp = report.get("hook_paths")
+            if hp:
+                head += (f"; shim==client accounting: "
+                         f"{hp['simulated_accounting_match']}")
+            return head
         if name == "BENCH_streaming.json":
             rs = report["turnaround"]
             lo = min(r["speedup"] for r in rs)
@@ -59,6 +66,16 @@ def _calibration(report: dict) -> str:
         return "-"
 
 
+def _api_path(report: dict) -> str:
+    """Which staging API surface the bench drove: the unified client, the
+    legacy run_io_hook shim, or '-' for pre-redesign result files."""
+    try:
+        return (report.get("api_path")
+                or report.get("config", {}).get("api_path", "-"))
+    except Exception:
+        return "-"
+
+
 def print_summary(out=sys.stderr) -> None:
     """Consolidated table across every BENCH_*.json in this directory."""
     paths = sorted(glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json")))
@@ -70,16 +87,20 @@ def print_summary(out=sys.stderr) -> None:
             with open(path) as f:
                 report = json.load(f)
         except (OSError, json.JSONDecodeError):
-            rows.append((os.path.basename(path), "-", "unreadable"))
+            rows.append((os.path.basename(path), "-", "-", "unreadable"))
             continue
         rows.append((os.path.basename(path), _calibration(report),
+                     _api_path(report),
                      _headline(os.path.basename(path), report)))
     w_name = max(len(r[0]) for r in rows)
     w_cal = max(max(len(r[1]) for r in rows), len("calibration"))
+    w_api = max(max(len(r[2]) for r in rows), len("api_path"))
     print(f"\n== BENCH summary ({len(rows)} result files) ==", file=out)
-    print(f"{'file':<{w_name}}  {'calibration':<{w_cal}}  headline", file=out)
-    for name, cal, head in rows:
-        print(f"{name:<{w_name}}  {cal:<{w_cal}}  {head}", file=out)
+    print(f"{'file':<{w_name}}  {'calibration':<{w_cal}}  "
+          f"{'api_path':<{w_api}}  headline", file=out)
+    for name, cal, api, head in rows:
+        print(f"{name:<{w_name}}  {cal:<{w_cal}}  {api:<{w_api}}  {head}",
+              file=out)
 
 
 def main() -> None:
@@ -87,14 +108,20 @@ def main() -> None:
     try:
         if "--staging" in sys.argv[1:]:
             from benchmarks import bench_staging
+            print(f"[bench_staging] api_path={bench_staging.API_PATH}",
+                  file=sys.stderr)
             for name, us, derived in bench_staging.rows():
                 print(f"{name},{us:.1f},{derived}")
         elif "--streaming" in sys.argv[1:]:
             from benchmarks import bench_streaming
+            print(f"[bench_streaming] api_path={bench_streaming.API_PATH}",
+                  file=sys.stderr)
             for name, us, derived in bench_streaming.rows():
                 print(f"{name},{us:.1f},{derived}")
         elif "--service" in sys.argv[1:]:
             from benchmarks import bench_service
+            print(f"[bench_service] api_path={bench_service.API_PATH}",
+                  file=sys.stderr)
             for name, us, derived in bench_service.rows():
                 print(f"{name},{us:.1f},{derived}")
         else:

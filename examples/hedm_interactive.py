@@ -17,8 +17,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import (BroadcastEntry, CollectiveConfig, NaiveConfig,
+                            StagingClient, StagingSpec)
 from repro.core.fabric import BGQ, Fabric
-from repro.core.iohook import BroadcastEntry, StagingSpec, run_io_hook
 from repro.core.manytask import ManyTaskEngine, Task
 from repro.hedm.pipeline import (fit_grid, make_gvectors, reduce_frames,
                                  simulate_detector_frames, stream_to_fs,
@@ -36,17 +37,15 @@ def main():
     print(f"(1) detector: {n_frames} frames -> shared FS "
           f"({fabric.fs.size(paths[0]) >> 10} KB each)")
 
-    # (2) Swift I/O hook: collective staging to node-local stores
+    # (2) Swift I/O hook via the unified client: typed config picks the
+    # engine (the legacy run_io_hook(collective=...) shim still works)
     spec = StagingSpec([BroadcastEntry(files=("scan/*.bin",))])
-    res = run_io_hook(fabric, spec, collective=True)
+    res = StagingClient(fabric).stage(spec, CollectiveConfig())
     print(f"(2) I/O hook: staged {len(res.resolved_files)} files to "
           f"{fabric.n_hosts} nodes in {res.total_time:.3f}s (simulated)")
-    naive = run_io_hook(Fabric(n_hosts=128, ranks_per_host=16, constants=BGQ),
-                        spec, collective=False)
-    # second fabric has no files; restage for a fair naive measurement
     fab2 = Fabric(n_hosts=128, ranks_per_host=16, constants=BGQ)
     stream_to_fs(fab2, frames)
-    naive = run_io_hook(fab2, spec, collective=False)
+    naive = StagingClient(fab2).stage(spec, NaiveConfig())
     print(f"    naive per-node input would take {naive.total_time:.3f}s "
           f"({naive.total_time / res.total_time:.1f}x)")
 

@@ -20,6 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro.core.api import StagingClient
 from repro.core.fabric import BGQ, Fabric
 from repro.hedm.pipeline import (SessionScript, pack_reduced, reduce_frames,
                                  run_interactive_hedm,
@@ -69,6 +70,19 @@ def main():
         print(f"  {name}: {rep.fs_write_bytes >> 10} KB in "
               f"{rep.total_time * 1e3:.1f} ms "
               f"(done at {res.session_done[name]:.2f}s)")
+
+    # late-arriving tenant through the unified client API: a session
+    # SCOPE auto-releases its leases on exit — even under an exception —
+    # so a forgotten release can no longer wedge later admissions
+    client = StagingClient(fab, service=svc)
+    t_late = res.turnaround + 1.0
+    with client.session("emma") as emma:
+        lease = emma.acquire("scanA", t_late)
+        hit = "residency hit" if lease.t_ready == t_late else "re-stage"
+        print(f"\nlate session 'emma': scanA leased at t={t_late:.2f}s "
+              f"({hit}, ready {lease.t_ready:.2f}s) — no explicit release")
+    print(f"  after scope exit: scanA lease count "
+          f"{svc.catalog['scanA'].lease_count} (auto-released)")
 
     # every session's outputs are byte-exact vs direct reduction,
     # eviction/re-staging notwithstanding

@@ -1,0 +1,709 @@
+"""Unified staging client API: typed engine configs, a pluggable engine
+registry, and session-scoped campaigns.
+
+The paper exposes staging to scientists through ONE declarative surface
+(the Swift I/O hook of Fig. 6 over the MPI-IO staging library). After the
+one-shot engines (`repro.core.staging`), streamed ingestion
+(`repro.core.streaming`) and the multi-tenant catalog
+(`repro.core.datasvc`) grew their own entrypoints, that surface had
+fractured into mode strings, untyped ``stage_kw`` dicts, a legacy
+``collective`` boolean and a module-level engine table duplicated across
+consumers. This module re-unifies it — the shape the streaming-pipeline
+literature converges on (openPMD/ADIOS2 engine-agnostic APIs with
+pluggable transports selected by typed config; the Perlmutter
+detector-streaming client hiding batch-vs-stream delivery):
+
+  * **Typed engine configs** — :class:`CollectiveConfig`,
+    :class:`PipelinedConfig`, :class:`NaiveConfig`, :class:`StreamConfig`
+    and :class:`ServiceConfig`: one frozen dataclass per engine, validated
+    in ``__post_init__`` (no more silently-ignored ``stage_kw`` typos).
+  * **EngineRegistry** — name -> (config type, stage fn). The single
+    source of truth for the mode -> engine mapping (replaces the old
+    ``BATCH_STAGE_FNS`` table that was consumed by ``staging``/``iohook``/
+    ``hedm`` separately). Adding an engine is ONE ``register`` call — the
+    hook, the client, the dataset service and the HEDM runners all pick it
+    up from here.
+  * **StagingClient** — the facade: ``client.stage(spec_or_patterns,
+    config)`` drives any one-shot engine, streamed delivery
+    (:meth:`StagingClient.stream_stager`) or catalog-backed acquisition
+    (a :class:`ServiceConfig` / an attached
+    :class:`~repro.core.datasvc.StagingService`) and always returns one
+    unified :class:`Report`.
+  * **Session-scoped campaigns** — ``with client.session(name) as s:``
+    auto-releases every lease the session still holds on exit (even under
+    an exception), killing the forgotten-``service.release(...)`` wedge
+    footgun of the raw catalog API.
+
+`repro.core.iohook.run_io_hook` remains as a thin deprecation shim over
+the client (``mode``/``collective``/``stage_kw`` honored), and
+:class:`StagingSpec`/:class:`BroadcastEntry` live here now (re-exported
+from ``iohook`` for compatibility). All times are SIMULATED seconds (see
+`repro.core.fabric`); replicas move real bytes and stay byte-exact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from dataclasses import dataclass, field, fields
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
+
+from repro.core.fabric import Fabric
+from repro.core.staging import (StagingReport, stage_collective, stage_naive,
+                                stage_pipelined)
+from repro.core.streaming import StreamStager, stage_stream
+
+
+# ---------------------------------------------------------------------------
+# typed engine configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Base class for one-shot staging engine configs.
+
+    Subclasses are frozen dataclasses: one field per engine parameter,
+    validated in ``__post_init__`` with a clear message — the typed
+    replacement for the old untyped ``stage_kw`` dict. ``to_kw()`` maps
+    the fields onto the engine function's keyword arguments.
+    """
+
+    def to_kw(self) -> Dict[str, Any]:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+
+@dataclass(frozen=True)
+class CollectiveConfig(EngineConfig):
+    """Two-phase ``MPI_File_read_all`` staging (leader stripes + ring
+    all-gather) — `repro.core.staging.stage_collective`. No parameters."""
+
+
+@dataclass(frozen=True)
+class PipelinedConfig(EngineConfig):
+    """Chunked two-phase staging with read/all-gather overlap
+    (`repro.core.staging.stage_pipelined`). ``chunk_bytes`` is the
+    per-host segment size: smaller chunks overlap finer but round more."""
+    chunk_bytes: int = 8 << 20
+
+    def __post_init__(self) -> None:
+        if self.chunk_bytes <= 0:
+            raise ValueError(
+                f"chunk_bytes must be a positive per-host segment size in "
+                f"bytes, got {self.chunk_bytes}")
+
+
+@dataclass(frozen=True)
+class NaiveConfig(EngineConfig):
+    """Uncoordinated per-host full reads — the paper's congested baseline
+    (`repro.core.staging.stage_naive`). No parameters."""
+
+
+@dataclass(frozen=True)
+class StreamConfig(EngineConfig):
+    """Detector-push streamed ingestion (`repro.core.streaming`): the
+    shared FS is never read back. ``rate_hz`` is the acquisition rate in
+    frames per simulated second (``None`` = replay as fast as the fabric
+    delivers); ``window_bytes`` bounds the per-node sliding cache
+    (``None`` = the whole set stays resident)."""
+    rate_hz: Optional[float] = None
+    window_bytes: Optional[int] = None
+    # paths pinned AT INGEST (exempt from window eviction) in addition to
+    # whatever the broadcast entry's ``pin`` directive pins — the typed
+    # home of the legacy ``stage_kw={"pin_paths": [...]}`` escape hatch
+    pin_paths: Tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "pin_paths", tuple(self.pin_paths))
+        if self.rate_hz is not None and self.rate_hz <= 0:
+            raise ValueError(
+                f"rate_hz must be a positive acquisition rate in frames "
+                f"per simulated second (or None for replay), got "
+                f"{self.rate_hz}")
+        if self.window_bytes is not None and self.window_bytes <= 0:
+            raise ValueError(
+                f"window_bytes must be a positive per-node cache budget in "
+                f"bytes (or None to keep the whole set resident), got "
+                f"{self.window_bytes}")
+
+
+@dataclass(frozen=True)
+class ServiceConfig:
+    """Catalog-backed acquisition through a long-lived
+    :class:`~repro.core.datasvc.StagingService`: datasets register in the
+    catalog, concurrent requests coalesce, residents evict under
+    ``budget_bytes`` (per-node), and leases pin replicas until released.
+    ``engine`` is the typed config of the batch engine the service stages
+    with."""
+    budget_bytes: int
+    engine: EngineConfig = field(default_factory=CollectiveConfig)
+
+    def __post_init__(self) -> None:
+        if self.budget_bytes <= 0:
+            raise ValueError(
+                f"budget_bytes must be a positive per-node memory budget "
+                f"in bytes, got {self.budget_bytes}")
+        # fail fast on a KNOWN non-batch engine (the service re-stages on
+        # demand); configs only a custom registry knows are validated when
+        # the service is built against that registry
+        entry = ENGINES.lookup(self.engine)
+        if entry is not None and not entry.batch:
+            raise ValueError(
+                f"ServiceConfig.engine must be a batch engine (the "
+                f"service re-stages on demand); "
+                f"{type(self.engine).__name__} drives the non-batch "
+                f"{entry.name!r} engine")
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EngineEntry:
+    """One registered staging engine."""
+    name: str
+    config_type: type
+    stage_fn: Callable[..., Tuple[StagingReport, float]]
+    batch: bool = True          # False: streamed delivery (no FS read-back)
+
+
+class EngineRegistry:
+    """Name -> (config type, stage fn) — the pluggable engine table.
+
+    Engines register ONCE here; `repro.core.iohook.run_io_hook`,
+    :class:`StagingClient`, `repro.core.datasvc.StagingService` and the
+    HEDM runners all resolve modes through the same registry, so adding
+    an engine is a one-file change (define config + stage fn, register).
+    Stage functions follow the engine protocol
+    ``fn(fabric, paths, t0, **config_kw) -> (StagingReport, t_done)``.
+    """
+
+    def __init__(self) -> None:
+        self._by_name: Dict[str, EngineEntry] = {}
+        self._by_config: Dict[type, EngineEntry] = {}
+
+    @classmethod
+    def default(cls) -> "EngineRegistry":
+        """A fresh registry holding the four built-in engines."""
+        reg = cls()
+        reg.register("collective", CollectiveConfig, stage_collective)
+        reg.register("pipelined", PipelinedConfig, stage_pipelined)
+        reg.register("naive", NaiveConfig, stage_naive)
+        reg.register("stream", StreamConfig, stage_stream, batch=False)
+        return reg
+
+    def register(self, name: str, config_type: type,
+                 stage_fn: Callable[..., Tuple[StagingReport, float]],
+                 batch: bool = True) -> EngineEntry:
+        if name in self._by_name:
+            raise ValueError(f"engine {name!r} is already registered")
+        if config_type in self._by_config:
+            raise ValueError(
+                f"config type {config_type.__name__} is already registered "
+                f"(to engine {self._by_config[config_type].name!r})")
+        entry = EngineEntry(name=name, config_type=config_type,
+                            stage_fn=stage_fn, batch=batch)
+        self._by_name[name] = entry
+        self._by_config[config_type] = entry
+        return entry
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+    def entries(self) -> List[EngineEntry]:
+        return list(self._by_name.values())
+
+    def names(self, batch_only: bool = False) -> List[str]:
+        return sorted(n for n, e in self._by_name.items()
+                      if e.batch or not batch_only)
+
+    def entry(self, name: str, batch_only: bool = False) -> EngineEntry:
+        e = self._by_name.get(name)
+        if e is None:
+            raise ValueError(
+                f"unknown staging mode {name!r}; registered engines: "
+                f"{', '.join(self.names())}")
+        if batch_only and not e.batch:
+            raise ValueError(
+                f"staging mode {name!r} is registered but not "
+                f"batch-capable (this path needs a re-runnable one-shot "
+                f"engine); expected one of: "
+                f"{', '.join(self.names(batch_only=True))}")
+        return e
+
+    def lookup(self, config: EngineConfig) -> Optional[EngineEntry]:
+        """The entry for `config`'s type, or None if unregistered here."""
+        return self._by_config.get(type(config))
+
+    def entry_for(self, config: EngineConfig) -> EngineEntry:
+        e = self._by_config.get(type(config))
+        if e is None:
+            raise ValueError(
+                f"no engine registered for config type "
+                f"{type(config).__name__}; registered engines: "
+                f"{', '.join(self.names())}")
+        return e
+
+    def name_of(self, config: EngineConfig) -> str:
+        return self.entry_for(config).name
+
+    def stage_fn(self, name: str) -> Callable[..., Tuple[StagingReport, float]]:
+        return self.entry(name).stage_fn
+
+    def config_for(self, name: str, batch_only: bool = False,
+                   **params: Any) -> EngineConfig:
+        """Build the typed config for engine `name` from loose params —
+        the bridge from the legacy ``mode=...,(stage_kw={...})`` surface.
+        Unknown engine names and unknown parameters both raise
+        ``ValueError`` with the registered alternatives spelled out."""
+        entry = self.entry(name, batch_only=batch_only)
+        known = {f.name for f in fields(entry.config_type)}
+        bogus = sorted(set(params) - known)
+        if bogus:
+            raise ValueError(
+                f"unknown parameter(s) {', '.join(bogus)} for engine "
+                f"{name!r}; {entry.config_type.__name__} accepts: "
+                f"{', '.join(sorted(known)) or '(no parameters)'}")
+        return entry.config_type(**params)
+
+
+# The process-wide registry. Engines defined elsewhere plug in with
+# ``ENGINES.register(name, ConfigType, stage_fn)``.
+ENGINES = EngineRegistry.default()
+
+
+# ---------------------------------------------------------------------------
+# declarative staging spec (paper Fig. 6) — moved here from iohook
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BroadcastEntry:
+    """One broadcast directive: glob patterns -> node-local destination."""
+    files: Tuple[str, ...]
+    dest: str = "/tmp"
+    pin: bool = True
+
+
+@dataclass
+class StagingSpec:
+    """Fig. 6 analogue. JSON-serializable so it can ride an env var.
+
+    ``config`` optionally embeds the typed engine config in the spec
+    itself, so a declarative spec fully selects its transport — the
+    engine name and parameters round-trip through ``to_json``/
+    ``from_json`` via the :data:`ENGINES` registry."""
+    broadcasts: List[BroadcastEntry] = field(default_factory=list)
+    config: Optional[EngineConfig] = None
+
+    @classmethod
+    def from_json(cls, text: str,
+                  registry: Optional["EngineRegistry"] = None
+                  ) -> "StagingSpec":
+        raw = json.loads(text)
+        config = None
+        if raw.get("engine"):
+            reg = registry if registry is not None else ENGINES
+            config = reg.config_for(raw["engine"]["name"],
+                                    **raw["engine"].get("params", {}))
+        return cls(broadcasts=[
+            BroadcastEntry(files=tuple(b["files"]), dest=b.get("dest", "/tmp"),
+                           pin=b.get("pin", True))
+            for b in raw.get("broadcasts", [])], config=config)
+
+    def to_json(self, registry: Optional["EngineRegistry"] = None) -> str:
+        out: Dict[str, Any] = {"broadcasts": [
+            {"files": list(b.files), "dest": b.dest, "pin": b.pin}
+            for b in self.broadcasts]}
+        if self.config is not None:
+            reg = registry if registry is not None else ENGINES
+            out["engine"] = {"name": reg.name_of(self.config),
+                             "params": self.config.to_kw()}
+        return json.dumps(out)
+
+    @classmethod
+    def from_env(cls, env: str = "REPRO_IO_HOOK") -> Optional["StagingSpec"]:
+        text = os.environ.get(env)
+        return cls.from_json(text) if text else None
+
+
+Stageable = Union[StagingSpec, str, Sequence[str]]
+
+
+def as_spec(what: Stageable, pin: bool = True) -> StagingSpec:
+    """Normalize ``client.stage``'s first argument to a :class:`StagingSpec`:
+    a spec passes through, a pattern string or a sequence of patterns
+    becomes a single broadcast entry."""
+    if isinstance(what, StagingSpec):
+        return what
+    if isinstance(what, str):
+        return StagingSpec([BroadcastEntry(files=(what,), pin=pin)])
+    return StagingSpec([BroadcastEntry(files=tuple(what), pin=pin)])
+
+
+# ---------------------------------------------------------------------------
+# unified report
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Report:
+    """One staging operation's unified accounting, whatever the path.
+
+    Reconciles the per-engine :class:`~repro.core.staging.StagingReport`
+    rows (streamed delivery folds its ``StreamReport`` into one), the old
+    ``HookResult`` fields, and — on the catalog path — the service's
+    shared accounting, behind one protocol. All times are simulated
+    seconds.
+
+    Documented invariants (asserted by ``tests/test_api.py``):
+
+      * direct engines: ``total_time == metadata_time +
+        sum(r.total_time for r in reports)`` — the old ``HookResult``
+        identity, per-report ``total_time == stage + comm + write +
+        broadcast``;
+      * ``delivered_bytes == n_hosts * total_bytes`` (every node receives
+        a full replica);
+      * ``fs_bytes`` is 1x the dataset for collective/pipelined, P x for
+        naive, and **0** for stream (the FS is never read back).
+
+    On the catalog path (``engine == "service"``) the per-dataset reports
+    are SHARED across coalesced acquisitions, so the sum identity does
+    not apply; ``total_time`` is the wall span until every lease is ready
+    and the service-wide counters live in ``service.stats``.
+    """
+    engine: str
+    n_hosts: int
+    resolved_files: List[str]
+    reports: List[StagingReport]
+    metadata_time: float = 0.0
+    total_time: float = 0.0
+    leases: List = field(default_factory=list)
+    service: Optional[object] = None     # StagingService on the catalog path
+
+    # -- unified byte accounting -------------------------------------------
+    @property
+    def total_bytes(self) -> int:
+        """Dataset bytes (pre-replication), summed over entries."""
+        return sum(r.total_bytes for r in self.reports)
+
+    @property
+    def staged_bytes(self) -> int:       # HookResult-compatible alias
+        return self.total_bytes
+
+    @property
+    def delivered_bytes(self) -> int:
+        """Bytes landed on node-local stores: every host gets a replica."""
+        return self.n_hosts * self.total_bytes
+
+    @property
+    def fs_bytes(self) -> int:
+        return sum(r.fs_bytes for r in self.reports)
+
+    @property
+    def fs_write_bytes(self) -> int:
+        return sum(r.fs_write_bytes for r in self.reports)
+
+    @property
+    def net_bytes(self) -> int:
+        return sum(r.net_bytes for r in self.reports)
+
+    # -- unified time accounting -------------------------------------------
+    @property
+    def broadcast_time(self) -> float:
+        return sum(r.broadcast_time for r in self.reports)
+
+    @property
+    def stage_time(self) -> float:
+        return sum(r.stage_time for r in self.reports)
+
+    @property
+    def comm_time(self) -> float:
+        return sum(r.comm_time for r in self.reports)
+
+    @property
+    def write_time(self) -> float:
+        return sum(r.write_time for r in self.reports)
+
+    def accounting_closes(self, tol: float = 1e-9) -> bool:
+        """True when the direct-path identity holds: glob metadata plus
+        the per-entry report totals equals the end-to-end time."""
+        return abs(self.metadata_time + sum(r.total_time for r in
+                                            self.reports)
+                   - self.total_time) <= tol
+
+
+# ---------------------------------------------------------------------------
+# the client facade
+# ---------------------------------------------------------------------------
+
+class StagingClient:
+    """One handle over every way data reaches node-local memory.
+
+    ``client.stage(spec_or_patterns, config)`` runs any registered
+    one-shot engine (typed config selects it); with a
+    :class:`ServiceConfig` — or a client constructed with
+    ``service=`` — the same call routes through the long-lived dataset
+    catalog (registration, coalescing, leases). ``client.session(name)``
+    opens a context-managed analysis session whose leases auto-release
+    on exit. ``client.stream_stager(config)`` hands out the incremental
+    streamed-delivery driver for consumers that interleave ingest with
+    compute (the online HEDM loop).
+
+    `fabric` is the simulated cluster; `service` an optional
+    :class:`~repro.core.datasvc.StagingService` or :class:`ServiceConfig`
+    (built lazily); `registry` defaults to the process-wide
+    :data:`ENGINES`.
+    """
+
+    def __init__(self, fabric: Fabric,
+                 service: Optional[object] = None,
+                 registry: EngineRegistry = ENGINES):
+        self.fabric = fabric
+        self.registry = registry
+        self._service = None
+        self._service_config: Optional[ServiceConfig] = None
+        if isinstance(service, ServiceConfig):
+            self._service_config = service
+        elif service is not None:
+            self._service = service
+
+    # -- service plumbing ---------------------------------------------------
+    @property
+    def service(self):
+        """The attached :class:`~repro.core.datasvc.StagingService`
+        (built on first use when the client was given a
+        :class:`ServiceConfig`); None when the client is engine-only."""
+        if self._service is None and self._service_config is not None:
+            self._service = self._build_service(self._service_config)
+        return self._service
+
+    def _build_service(self, cfg: ServiceConfig):
+        from repro.core.datasvc import StagingService
+        return StagingService(self.fabric, cfg.budget_bytes,
+                              engine=cfg.engine, registry=self.registry)
+
+    def session(self, name: str) -> "ClientSession":
+        """A context-managed analysis session on the attached service:
+        every lease it still holds is released on ``__exit__`` (at the
+        last simulated time the session observed, or pass
+        ``close(t=...)`` explicitly), exception or not."""
+        svc = self.service
+        if svc is None:
+            raise ValueError(
+                "client has no staging service; construct it with "
+                "StagingClient(fabric, service=ServiceConfig(...)) or an "
+                "existing StagingService")
+        return ClientSession(self, svc.session(name))
+
+    # -- staging ------------------------------------------------------------
+    def stage(self, what: Stageable,
+              config: Optional[Union[EngineConfig, ServiceConfig]] = None,
+              t0: float = 0.0, session: str = "client",
+              resolve: bool = True, pin: bool = True) -> Report:
+        """Stage `what` (a :class:`StagingSpec`, a glob pattern, or a
+        sequence of patterns) starting at simulated time `t0`.
+
+        `config` selects the path: a typed engine config runs that
+        one-shot engine; ``None`` on a service-attached client routes
+        through the dataset catalog under `session` (the service's own
+        engine is used — a spec-embedded engine config is ignored there);
+        ``None`` otherwise defaults to the spec's embedded config, then
+        :class:`CollectiveConfig`. A :class:`ServiceConfig` belongs in
+        the CLIENT constructor, not here — passing one raises. With
+        ``resolve=False`` the entry file lists are taken as CONCRETE
+        shared-FS paths — no leader glob or manifest broadcast is run or
+        charged (the programmatic path the HEDM runners use). `pin`
+        applies only to the CONVENIENCE forms (a pattern or a path list,
+        which become a single broadcast entry): ``pin=False`` leaves the
+        replicas evictable, matching a bare engine call — a full
+        :class:`StagingSpec` carries pinning per entry instead.
+
+        Returns a unified :class:`Report`; on the catalog path its
+        ``leases`` belong to the caller (use :meth:`session` to scope
+        them so they can never leak).
+        """
+        spec = as_spec(what, pin=pin)
+        if isinstance(config, ServiceConfig):
+            # a per-call ServiceConfig would silently reroute LATER
+            # config-less calls through the catalog (and leak leases with
+            # no scope to release them) — the service is a property of
+            # the CLIENT, so demand it at construction
+            raise ValueError(
+                "ServiceConfig configures the client, not a single call: "
+                "construct StagingClient(fabric, service=ServiceConfig("
+                "...)), then stage(..., config=None) routes through the "
+                "catalog — ideally inside a `with client.session(name)` "
+                "scope so the leases auto-release")
+        has_service = (self._service is not None
+                       or self._service_config is not None)
+        if config is None and has_service:
+            # the attached service wins over any spec-embedded engine
+            # config: the service stages with ITS engine, and a session
+            # scope must never silently fall back to an unleased direct
+            # stage
+            if not resolve:
+                raise ValueError(
+                    "resolve=False is not supported on the catalog path: "
+                    "the service registers datasets by PATTERN (resolved "
+                    "once by the leader root); pass concrete paths via "
+                    "service.register(name, paths=...) instead")
+            return self._stage_catalog(spec, self.service, session, t0)
+        if config is None:
+            config = spec.config or CollectiveConfig()
+        return self._stage_direct(spec, config, t0, resolve)
+
+    def _stage_direct(self, spec: StagingSpec, config: EngineConfig,
+                      t0: float, resolve: bool) -> Report:
+        entry_ = self.registry.entry_for(config)
+        reports: List[StagingReport] = []
+        all_files: List[str] = []
+        t_meta = 0.0
+        t = t0
+        for entry in spec.broadcasts:
+            if resolve:
+                from repro.core.iohook import resolve_manifest_timed
+                files, t_resolved, bcast = resolve_manifest_timed(
+                    self.fabric, entry.files, t)
+                t_meta += t_resolved - t - bcast     # glob phase only
+                t = t_resolved
+            else:
+                files, bcast = list(entry.files), 0.0
+            kw = config.to_kw()
+            if isinstance(config, StreamConfig):
+                self._check_window(config, files)
+                if entry.pin:
+                    # the streaming engine must pin AT INGEST: with a
+                    # bounded window, post-hoc pinning would mark
+                    # already-evicted files
+                    kw["pin_paths"] = list(files) + [
+                        p for p in config.pin_paths if p not in files]
+            rep, t = entry_.stage_fn(self.fabric, files, t, **kw)
+            rep.broadcast_time = bcast               # on_root manifest push
+            reports.append(rep)
+            all_files.extend(files)
+            if entry.pin:
+                for host in self.fabric.hosts:
+                    for f in files:
+                        host.store.pin(f)
+        return Report(engine=entry_.name, n_hosts=self.fabric.n_hosts,
+                      resolved_files=all_files, reports=reports,
+                      metadata_time=t_meta, total_time=t - t0)
+
+    def _check_window(self, config: StreamConfig,
+                      files: Sequence[str]) -> None:
+        if config.window_bytes is None or not files:
+            return
+        biggest = max(self.fabric.fs.size(f) for f in files)
+        if config.window_bytes < biggest:
+            raise ValueError(
+                f"window_bytes ({config.window_bytes}) is smaller than the "
+                f"largest frame to be staged ({biggest} B): not even one "
+                f"frame fits the node cache")
+
+    def _stage_catalog(self, spec: StagingSpec, service, session,
+                       t0: float) -> Report:
+        """Catalog-backed staging: register + acquire through the service.
+        Per-dataset reports are SHARED across coalesced acquisitions, so
+        the direct-path accounting identity does not apply here;
+        ``metadata_time`` still covers the registration glob phase only
+        (the manifest broadcast lands in ``service.stats.broadcast_time``).
+        """
+        session_id = getattr(session, "session_id", session)
+        reports: List[StagingReport] = []
+        leases: List = []
+        all_files: List[str] = []
+        t_meta = 0.0
+        t = t0
+        t_end = t0
+        for entry in spec.broadcasts:
+            name = "|".join(entry.files)
+            bcast0 = service.stats.broadcast_time
+            ds, t_reg = service.register(name, patterns=entry.files, t=t)
+            t_meta += (t_reg - t) - (service.stats.broadcast_time - bcast0)
+            lease = service.acquire(session_id, name, t_reg)
+            leases.append(lease)
+            t = t_reg
+            t_end = max(t_end, lease.t_ready)
+            if ds.last_report is not None:
+                reports.append(ds.last_report)
+            all_files.extend(ds.paths)
+        return Report(engine="service", n_hosts=self.fabric.n_hosts,
+                      resolved_files=all_files, reports=reports,
+                      metadata_time=t_meta, total_time=t_end - t0,
+                      leases=leases, service=service)
+
+    # -- streamed delivery (incremental driver) -----------------------------
+    def stream_stager(self, config: StreamConfig,
+                      t0: float = 0.0) -> StreamStager:
+        """The incremental streamed-delivery driver configured by
+        `config` (``window_bytes`` is required here — an open-ended
+        stream has no "whole set" to default to). ``pin_paths`` are
+        pre-pinned on the stager (exempt from window eviction the moment
+        they land). ``rate_hz`` belongs to the DETECTOR, not the
+        delivery window: feed it to the
+        :class:`~repro.core.streaming.DetectorSource` the caller attaches
+        (as the online HEDM runner does). Use this when compute
+        interleaves with ingest; for whole-set delivery just call
+        :meth:`stage` with the same config."""
+        if not isinstance(config, StreamConfig):
+            raise ValueError(
+                f"stream_stager needs a StreamConfig, got "
+                f"{type(config).__name__}")
+        if config.window_bytes is None:
+            raise ValueError(
+                "StreamConfig.window_bytes is required for an incremental "
+                "stream stager (there is no dataset to default it to)")
+        stager = StreamStager(self.fabric, window_bytes=config.window_bytes,
+                              t0=t0)
+        for p in config.pin_paths:
+            stager.pin(p)
+        return stager
+
+
+class ClientSession:
+    """A session-scoped campaign: an
+    :class:`~repro.core.datasvc.AnalysisSession` bound to its client.
+
+    Context manager — ``__exit__`` releases every lease the session still
+    holds (exception or not) at the last simulated time it observed, so a
+    forgotten ``release`` can no longer wedge later admissions.
+    ``stage(...)`` routes a spec through the catalog under this session,
+    with the resulting leases owned (and therefore auto-released) here.
+    Everything else (``acquire``/``release``/``put_result``/``flush``/
+    ``tag``/``close``) delegates to the underlying session.
+    """
+
+    def __init__(self, client: StagingClient, session) -> None:
+        self._client = client
+        self._session = session
+
+    def __getattr__(self, name: str):
+        return getattr(self._session, name)
+
+    def stage(self, what: Stageable, t0: Optional[float] = None) -> Report:
+        """Catalog-backed stage under this session at `t0` (default: the
+        last simulated time this session observed). ALWAYS routes through
+        the service — a spec-embedded engine config is ignored here (the
+        service stages with its own engine), so the session's lease
+        guarantees can never be silently bypassed."""
+        t = self._session._t_last if t0 is None else t0
+        rep = self._client._stage_catalog(as_spec(what),
+                                          self._session.service,
+                                          self._session, t)
+        self._session.note(t + rep.total_time)
+        return rep
+
+    def __enter__(self) -> "ClientSession":
+        self._session.__enter__()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return self._session.__exit__(exc_type, exc, tb)
+
+
+def deprecated_call(old: str, new: str) -> None:
+    """Emit the one shared deprecation message for a legacy surface."""
+    warnings.warn(
+        f"{old} is a compatibility shim over the unified staging client "
+        f"API; migrate to {new} (see docs/api.md)",
+        DeprecationWarning, stacklevel=3)

@@ -10,6 +10,13 @@ Futures + deferred task graph. Building blocks:
     detector frame (`repro.core.streaming.FrameRecord`): it becomes
     eligible the moment the frame lands on the node-local stores
     (``record.t_avail``), while acquisition is still in flight.
+  * ``Dataflow(fabric, stage=...)`` -> the graph declares its input
+    dataset ONCE (a `repro.core.api.StagingSpec`, a glob pattern, or a
+    pattern list, with an optional typed engine config via
+    ``stage_config``); :meth:`Dataflow.run` has the unified
+    `repro.core.api.StagingClient` stage it before execution, and no
+    task starts before the staged replicas are resident (the I/O-hook
+    discipline, expressed at graph level).
 
 Execution is delegated to the ManyTaskEngine (simulated time + optional real
 payloads), preserving dataflow ordering.
@@ -36,13 +43,18 @@ class Future:
 
 
 class Dataflow:
-    def __init__(self, fabric: Fabric, **engine_kw):
+    def __init__(self, fabric: Fabric, stage: Any = None,
+                 stage_config: Any = None, **engine_kw):
         self.fabric = fabric
         self.engine_kw = engine_kw
         self._tasks: List[Task] = []
         self._fns: Dict[int, Callable] = {}
         self._results: Dict[int, Any] = {}
         self.executed = False
+        # declared-once staged inputs: spec/pattern(s) + typed engine config
+        self._stage = stage
+        self._stage_config = stage_config
+        self.stage_report = None     # repro.core.api.Report after run()
 
     # -- graph construction -------------------------------------------------
     def task(self, fn: Callable[..., Any], *args: Any,
@@ -113,6 +125,15 @@ class Dataflow:
 
     # -- execution -----------------------------------------------------------
     def run(self, n_workers: Optional[int] = None) -> EngineStats:
+        if self._stage is not None and self.stage_report is None:
+            from repro.core.api import StagingClient
+            self.stage_report = StagingClient(self.fabric).stage(
+                self._stage, self._stage_config)
+            # staged inputs gate the whole graph: nothing starts before
+            # the replicas are resident on the node-local stores
+            t_staged = self.stage_report.total_time
+            for task in self._tasks:
+                task.not_before = max(task.not_before, t_staged)
         engine = ManyTaskEngine(self.fabric, n_workers=n_workers,
                                 **self.engine_kw)
         stats = engine.run(self._tasks)

@@ -50,8 +50,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.api import ENGINES
 from repro.core.fabric import Fabric
-from repro.core.staging import (BATCH_STAGE_FNS, StagingReport, _coll_overhead,
+from repro.core.staging import (StagingReport, _coll_overhead,
                                 readonly_view, stage_out, stage_out_naive)
 
 
@@ -205,9 +206,11 @@ class StagingService:
 
     ``budget_bytes`` bounds the PER-NODE memory the catalog may hold
     resident (every staged dataset is fully replicated on every node, so
-    per-node and aggregate-fraction budgets coincide). ``mode`` selects
-    the batch staging engine ("collective"/"pipelined"/"naive") used for
-    every stage; ``stage_kw`` forwards engine keywords.
+    per-node and aggregate-fraction budgets coincide). The staging engine
+    used for every stage comes from the `repro.core.api.ENGINES`
+    registry: pass either a typed config via ``engine=`` (e.g.
+    ``PipelinedConfig(chunk_bytes=...)``) or the legacy ``mode`` name
+    ("collective"/"pipelined"/"naive") plus ``stage_kw`` keywords.
 
     Dirty write-back replicas (:meth:`put_result`) are small reduced
     results (the paper's 8 MB frame -> ~1 MB binary) and are tracked
@@ -216,16 +219,31 @@ class StagingService:
 
     def __init__(self, fabric: Fabric, budget_bytes: int,
                  mode: str = "collective",
-                 stage_kw: Optional[Dict] = None):
-        if mode not in BATCH_STAGE_FNS:
-            raise ValueError(f"unknown staging mode {mode!r}; expected one "
-                             f"of {sorted(BATCH_STAGE_FNS)}")
+                 stage_kw: Optional[Dict] = None,
+                 engine=None, registry=None):
+        reg = registry if registry is not None else ENGINES
+        if engine is not None:
+            if mode != "collective" or stage_kw is not None:
+                raise ValueError(
+                    "pass either engine= (a typed config) or the legacy "
+                    "mode=/stage_kw= arguments, not both — the loose "
+                    "keywords would be silently discarded")
+            entry = reg.entry_for(engine)
+            # re-resolve with the batch constraint: a registered non-batch
+            # engine (e.g. stream) gets the "not batch-capable" message,
+            # not a misleading "unknown mode"
+            entry = reg.entry(entry.name, batch_only=True)
+            self._stage_fn = entry.stage_fn
+            self._stage_kw = engine.to_kw()
+        else:
+            config = reg.config_for(mode, batch_only=True,
+                                    **(stage_kw or {}))
+            self._stage_fn = reg.stage_fn(mode)
+            self._stage_kw = config.to_kw()
         self.fabric = fabric
         self.budget_bytes = int(budget_bytes)
         self.catalog = DataCatalog()
         self.stats = ServiceStats()
-        self._stage_fn = BATCH_STAGE_FNS[mode]
-        self._stage_kw = stage_kw or {}
         self._dirty: Dict[str, Dict[str, np.ndarray]] = {}  # session -> paths
 
     # -- registration -------------------------------------------------------
@@ -428,25 +446,68 @@ class AnalysisSession:
 
     Thin sugar over the service with the session id filled in, plus
     :meth:`tag` for session-tagged many-task work (the scheduler then
-    reports per-session accounting in ``EngineStats.sessions``)."""
+    reports per-session accounting in ``EngineStats.sessions``).
+
+    A context manager: ``__exit__`` calls :meth:`close`, releasing every
+    lease this session still holds — even when the body raised — so a
+    direct ``datasvc`` user can no longer leak leases and wedge later
+    admissions. The release time is caller-supplied (``close(t=...)``)
+    or defaults to the last simulated time the session observed
+    (floored per dataset at its ``t_ready``: a lease cannot be returned
+    before its replicas exist)."""
     service: StagingService
     session_id: str
+    _t_last: float = field(default=0.0, repr=False, compare=False)
+
+    def note(self, t: float) -> float:
+        """Record `t` as the latest simulated time this session observed
+        (the default :meth:`close` release time). Returns `t`."""
+        if t > self._t_last:
+            self._t_last = t
+        return t
 
     def acquire(self, name: str, t: float) -> Lease:
-        return self.service.acquire(self.session_id, name, t)
+        lease = self.service.acquire(self.session_id, name, t)
+        self.note(lease.t_ready)
+        return lease
 
     def release(self, name: str, t: float) -> None:
-        self.service.release(self.session_id, name, t)
+        self.service.release(self.session_id, name, self.note(t))
 
     def put_result(self, name: str, data: np.ndarray, t: float
                    ) -> Tuple[str, float]:
-        return self.service.put_result(self.session_id, name, data, t)
+        path, t_done = self.service.put_result(self.session_id, name, data, t)
+        return path, self.note(t_done)
 
     def flush(self, t: float, collective: bool = True
               ) -> Tuple[StagingReport, float]:
-        return self.service.flush(self.session_id, t, collective=collective)
+        rep, t_done = self.service.flush(self.session_id, t,
+                                         collective=collective)
+        return rep, self.note(t_done)
 
     def tag(self, task):
         """Stamp a `repro.core.manytask.Task` with this session's id."""
         task.session = self.session_id
         return task
+
+    def held(self) -> Dict[str, int]:
+        """Dataset name -> lease count this session currently holds."""
+        return {e.name: e.leases[self.session_id]
+                for e in self.service.catalog
+                if self.session_id in e.leases}
+
+    def close(self, t: Optional[float] = None) -> None:
+        """Release every lease this session still holds, at simulated
+        time `t` (default: the last time this session observed), floored
+        per dataset at its ``t_ready``. Idempotent."""
+        t_close = self._t_last if t is None else self.note(t)
+        for name, count in self.held().items():
+            t_ds = max(t_close, self.service.catalog[name].t_ready)
+            for _ in range(count):
+                self.service.release(self.session_id, name, t_ds)
+
+    def __enter__(self) -> "AnalysisSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

@@ -8,64 +8,40 @@ destination" — executed by the runtime before tasks run. Mirrors the paper:
   * glob resolution happens ONCE (leader rank 0) and the resolved list is
     broadcast — metadata contention avoidance (§IV: "only one process
     performs any globs");
-  * transfers default to collective staging; ``mode`` selects the engine —
-    ``"collective"`` (two-phase MPI_File_read_all), ``"pipelined"``
-    (chunked read/all-gather overlap), ``"naive"`` (uncoordinated per-host
-    reads, the baseline), or ``"stream"`` (detector-push ingestion that
-    never reads the shared FS back — `repro.core.streaming`);
+  * transfers default to collective staging; every engine registered in
+    `repro.core.api.ENGINES` is selectable;
   * files are pinned in the node-local store for reuse across task waves.
+
+Since the unified client API landed, this module is the COMPATIBILITY
+layer: :func:`run_io_hook` is a thin shim over
+`repro.core.api.StagingClient` (its ``mode``/``collective``/``stage_kw``
+arguments are deprecated but honored), and
+:class:`~repro.core.api.StagingSpec` / :class:`~repro.core.api.BroadcastEntry`
+live in ``repro.core.api`` (re-exported here). New code should call
+``StagingClient.stage(spec, config)`` with a typed engine config directly
+— see ``docs/api.md`` for the migration table. The leader-side metadata
+resolution (:func:`resolve_manifest_timed`) still lives here and is what
+the client charges for glob + manifest broadcast.
 
 All times returned are SIMULATED seconds (see `repro.core.fabric`).
 """
 from __future__ import annotations
 
-import json
-import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+# Compatibility re-exports: the spec types moved to the unified API.
+from repro.core.api import (ENGINES, BroadcastEntry, StagingClient,  # noqa: F401
+                            StagingSpec, deprecated_call)
 from repro.core.fabric import Fabric
 from repro.core.leader import LeaderGroup
-from repro.core.staging import BATCH_STAGE_FNS, StagingReport
-from repro.core.streaming import stage_stream
-
-_STAGE_FNS = {**BATCH_STAGE_FNS, "stream": stage_stream}
-
-
-@dataclass(frozen=True)
-class BroadcastEntry:
-    """One broadcast directive: glob patterns -> node-local destination."""
-    files: Tuple[str, ...]
-    dest: str = "/tmp"
-    pin: bool = True
-
-
-@dataclass
-class StagingSpec:
-    """Fig. 6 analogue. JSON-serializable so it can ride an env var."""
-    broadcasts: List[BroadcastEntry] = field(default_factory=list)
-
-    @classmethod
-    def from_json(cls, text: str) -> "StagingSpec":
-        raw = json.loads(text)
-        return cls(broadcasts=[
-            BroadcastEntry(files=tuple(b["files"]), dest=b.get("dest", "/tmp"),
-                           pin=b.get("pin", True))
-            for b in raw.get("broadcasts", [])])
-
-    def to_json(self) -> str:
-        return json.dumps({"broadcasts": [
-            {"files": list(b.files), "dest": b.dest, "pin": b.pin}
-            for b in self.broadcasts]})
-
-    @classmethod
-    def from_env(cls, env: str = "REPRO_IO_HOOK") -> Optional["StagingSpec"]:
-        text = os.environ.get(env)
-        return cls.from_json(text) if text else None
+from repro.core.staging import StagingReport
 
 
 @dataclass
 class HookResult:
+    """Legacy hook accounting — the pre-client shape of
+    `repro.core.api.Report`, kept for the shim's callers."""
     resolved_files: List[str]
     reports: List[StagingReport]
     metadata_time: float
@@ -73,7 +49,8 @@ class HookResult:
     # catalog-backed mode only: the leases this hook acquired, one per
     # broadcast entry. The CALLER owns them — release each via
     # ``service.release(lease.session_id, lease.dataset, t)`` when done,
-    # or the datasets stay pinned/unevictable forever.
+    # or the datasets stay pinned/unevictable forever. (The client API's
+    # ``client.session(...)`` context manager does this automatically.)
     leases: List = field(default_factory=list)
 
     @property
@@ -120,103 +97,56 @@ def resolve_manifest(fabric: Fabric, patterns: Sequence[str], t0: float
 
 
 def run_io_hook(fabric: Fabric, spec: StagingSpec, t0: float = 0.0,
-                collective: bool = True, mode: Optional[str] = None,
+                collective: Optional[bool] = None, mode: Optional[str] = None,
                 stage_kw: Optional[Dict] = None,
                 service=None, session: str = "iohook") -> HookResult:
     """Execute the hook: resolve globs once, broadcast the manifest, stage.
 
-    Parameters: `spec` is the declarative staging spec (Fig. 6); `t0` the
-    simulated start time (s); ``mode`` selects the staging engine
-    ("collective", "pipelined", "naive", "stream") and overrides the
-    legacy ``collective`` flag when given; ``stage_kw`` forwards
-    engine-specific keywords (e.g. ``{"chunk_bytes": 1 << 20}`` for
-    pipelined, ``{"rate_hz": 10.0, "window_bytes": ...}`` for stream).
-    Returns a :class:`HookResult` whose times are simulated seconds.
+    .. deprecated:: compatibility shim over
+       `repro.core.api.StagingClient` — prefer ``StagingClient(fabric)
+       .stage(spec, config)`` with a typed engine config
+       (``CollectiveConfig``/``PipelinedConfig``/``NaiveConfig``/
+       ``StreamConfig``), or ``StagingClient(fabric, service=...)`` with a
+       ``client.session(...)`` scope for the catalog path. The legacy
+       arguments keep working: ``mode`` (an engine name from the
+       `repro.core.api.ENGINES` registry) overrides the ``collective``
+       boolean, and ``stage_kw`` loose keywords are validated into the
+       engine's typed config (unknown modes and unknown parameters raise
+       ``ValueError`` listing the registered alternatives). A spec that
+       embeds its own engine config is honored — exactly as the client
+       honors it — when none of ``mode``/``collective``/``stage_kw`` are
+       given.
 
-    The leader metadata broadcast (the root's resolved manifest pushed to
-    the other leaders) is charged into each report's ``broadcast_time``;
-    ``metadata_time`` covers the glob phase only, so
-    ``metadata_time + sum(report total_times) == total_time``.
+    `spec` is the declarative staging spec (Fig. 6); `t0` the simulated
+    start time (s). Returns a :class:`HookResult` whose times are
+    simulated seconds. The leader metadata broadcast is charged into each
+    report's ``broadcast_time``; ``metadata_time`` covers the glob phase
+    only, so ``metadata_time + sum(report total_times) == total_time``.
 
     **Catalog-backed mode**: pass ``service`` (a
     :class:`repro.core.datasvc.StagingService`) to route each broadcast
-    entry through the long-lived dataset catalog instead of staging
-    directly — the entry registers as a dataset (named by its pattern
-    tuple) and is acquired under ``session``. Concurrent hook runs
-    against the same service COALESCE into one collective stage, replicas
-    stay lease-pinned until the session releases them, and the staging
-    engine/params are the service's (``mode``/``stage_kw`` are ignored).
-    The acquired leases come back in ``HookResult.leases`` and belong to
-    the caller: release them (``service.release(lease.session_id,
-    lease.dataset, t)``) when the session is done, or the datasets stay
-    unevictable and later admissions can wedge.
+    entry through the long-lived dataset catalog under ``session`` —
+    concurrent hook runs coalesce, the service's engine is used
+    (``mode``/``stage_kw`` are ignored), and the acquired leases come
+    back in ``HookResult.leases``, owned by the caller.
     """
+    deprecated_call("run_io_hook", "repro.core.api.StagingClient.stage")
+    client = StagingClient(fabric, service=service)
     if service is not None:
-        return _run_io_hook_catalog(fabric, spec, t0, service, session)
-    if mode is None:
-        mode = "collective" if collective else "naive"
-    if mode not in _STAGE_FNS:
-        raise ValueError(f"unknown staging mode {mode!r}; expected one of "
-                         f"{sorted(_STAGE_FNS)}")
-    stage = _STAGE_FNS[mode]
-    stage_kw = stage_kw or {}
-    reports: List[StagingReport] = []
-    t_meta = 0.0
-    t = t0
-    all_files: List[str] = []
-    for entry in spec.broadcasts:
-        files, t_resolved, bcast = resolve_manifest_timed(
-            fabric, entry.files, t)
-        t_meta += t_resolved - t - bcast     # glob phase only
-        t = t_resolved
-        kw = stage_kw
-        if mode == "stream" and entry.pin:
-            # the streaming engine must pin AT INGEST: with a bounded
-            # window, post-hoc pinning would mark already-evicted files
-            kw = dict(stage_kw, pin_paths=files)
-        rep, t = stage(fabric, files, t, **kw)
-        rep.broadcast_time = bcast           # on_root manifest broadcast
-        reports.append(rep)
-        all_files.extend(files)
-        if entry.pin:
-            for host in fabric.hosts:
-                for f in files:
-                    host.store.pin(f)
-    return HookResult(resolved_files=all_files, reports=reports,
-                      metadata_time=t_meta, total_time=t - t0)
-
-
-def _run_io_hook_catalog(fabric: Fabric, spec: StagingSpec, t0: float,
-                         service, session: str) -> HookResult:
-    """Catalog-backed hook execution: register + acquire through a
-    :class:`repro.core.datasvc.StagingService`. Reports are the datasets'
-    last staging reports — SHARED across coalesced hook runs (a second
-    hook that joins an in-flight stage sees the same report object), so
-    the per-hook accounting identity of the direct modes (metadata_time +
-    report totals == total_time) does not apply here; ``metadata_time``
-    still covers the registration glob phase only (the manifest broadcast
-    lands in ``service.stats.broadcast_time``)."""
-    reports: List[StagingReport] = []
-    leases: List = []
-    all_files: List[str] = []
-    t_meta = 0.0
-    t = t0
-    t_end = t0
-    for entry in spec.broadcasts:
-        name = "|".join(entry.files)
-        bcast0 = service.stats.broadcast_time
-        ds, t_reg = service.register(name, patterns=entry.files, t=t)
-        t_meta += (t_reg - t) - (service.stats.broadcast_time - bcast0)
-        lease = service.acquire(session, name, t_reg)
-        leases.append(lease)
-        t = t_reg
-        t_end = max(t_end, lease.t_ready)
-        if ds.last_report is not None:
-            reports.append(ds.last_report)
-        all_files.extend(ds.paths)
-    return HookResult(resolved_files=all_files, reports=reports,
-                      metadata_time=t_meta, total_time=t_end - t0,
-                      leases=leases)
+        rep = client.stage(spec, t0=t0, session=session)
+    elif (mode is None and stage_kw is None and collective is None
+          and spec.config is not None):
+        # the spec fully selects its transport (engine block in the
+        # JSON): honor it, exactly as the client does
+        rep = client.stage(spec, t0=t0)
+    else:
+        if mode is None:
+            mode = "naive" if collective is False else "collective"
+        config = ENGINES.config_for(mode, **(stage_kw or {}))
+        rep = client.stage(spec, config, t0=t0)
+    return HookResult(resolved_files=rep.resolved_files, reports=rep.reports,
+                      metadata_time=rep.metadata_time,
+                      total_time=rep.total_time, leases=rep.leases)
 
 
 def naive_per_rank_globs(fabric: Fabric, patterns: Sequence[str],

@@ -314,17 +314,12 @@ def stage_out_naive(fabric: Fabric, outputs: Dict[str, np.ndarray],
     return rep, t0 + rep.total_time
 
 
-# The write-back engines, keyed like BATCH_STAGE_FNS (collective flag name).
-WRITEBACK_STAGE_FNS = {"collective": stage_out, "naive": stage_out_naive}
-
-
-# The batch staging engines, by I/O-hook mode name. Single source of truth
-# for the mode -> engine mapping: the hook extends it with the streaming
-# engine (`repro.core.iohook._STAGE_FNS`), the HEDM batch baseline consumes
-# it directly — new engines register here once.
-BATCH_STAGE_FNS = {"collective": stage_collective,
-                   "pipelined": stage_pipelined,
-                   "naive": stage_naive}
+# The mode -> engine mapping lives in the pluggable registry
+# `repro.core.api.ENGINES` (this module's engines register there under
+# "collective"/"pipelined"/"naive"; the streaming engine under "stream").
+# The I/O hook, the StagingClient, the dataset service and the HEDM
+# runners all resolve engines through it — new engines register once with
+# a typed config instead of editing per-consumer tables.
 
 
 # ---------------------------------------------------------------------------

@@ -27,10 +27,12 @@ Pieces:
     only unconsumed/pinned frames, admission of the next frame stalls
     until a consumer release frees space (the DAQ-buffer stall of a real
     streaming deployment).
-  * :func:`stage_stream` — an iohook-compatible staging engine
-    (``run_io_hook(..., mode="stream")``): the dataset is ingested from
-    the source stream and never read back from the shared FS
-    (``fs_bytes == 0``).
+  * :func:`stage_stream` — a one-shot staging engine registered as
+    ``"stream"`` in `repro.core.api.ENGINES` (typed config:
+    ``StreamConfig``; selectable via ``StagingClient.stage`` or the
+    legacy ``run_io_hook(..., mode="stream")`` shim): the dataset is
+    ingested from the source stream and never read back from the shared
+    FS (``fs_bytes == 0``).
   * :class:`StreamScenario` — a simulator scenario bundling fabric +
     acquisition parameters (hosts, frame geometry, rate, consumer window),
     used by the examples, benchmarks and tests.

@@ -19,8 +19,9 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core.api import (BroadcastEntry, CollectiveConfig, NaiveConfig,
+                            StagingClient, StagingSpec)
 from repro.core.fabric import Fabric
-from repro.core.iohook import BroadcastEntry, StagingSpec, run_io_hook
 from repro.core.staging import StagingReport
 
 
@@ -48,10 +49,15 @@ class StagedLoader:
     staging_time: float = 0.0
     _data: Optional[np.ndarray] = None
 
-    def stage(self, collective: bool = True) -> StagingReport:
-        """Run the I/O hook; returns the staging report (simulated time)."""
+    def stage(self, collective: bool = True, config=None) -> StagingReport:
+        """Stage the shard manifest through the unified client; returns the
+        staging report (simulated time). `config` is an optional typed
+        engine config (`repro.core.api`); the legacy ``collective``
+        boolean maps to Collective/NaiveConfig when `config` is None."""
+        if config is None:
+            config = CollectiveConfig() if collective else NaiveConfig()
         spec = StagingSpec([BroadcastEntry(files=(self.pattern,), pin=True)])
-        res = run_io_hook(self.fabric, spec, collective=collective)
+        res = StagingClient(self.fabric).stage(spec, config)
         self.staging_time = res.total_time
         store = self.fabric.hosts[self.host_id].store
         blobs = [store.data[p] for p in sorted(res.resolved_files)]

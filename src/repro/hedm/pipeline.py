@@ -308,7 +308,8 @@ def run_online_hedm(fabric: Fabric, frames: np.ndarray, dark: np.ndarray,
     (the `ManyTaskEngine` payload idiom). Outputs are bit-identical to
     ``reduce_frames`` over the same stack.
     """
-    from repro.core.streaming import DetectorSource, StreamStager
+    from repro.core.api import StagingClient, StreamConfig
+    from repro.core.streaming import DetectorSource
 
     if cache_frames is not None and cache_frames < window:
         raise ValueError(
@@ -320,9 +321,10 @@ def run_online_hedm(fabric: Fabric, frames: np.ndarray, dark: np.ndarray,
     frames = np.ascontiguousarray(frames, dtype=np.float32)
     F, H, W = frames.shape
     frame_bytes = H * W * 4
-    window_bytes = (cache_frames or F) * frame_bytes
-    src = DetectorSource.from_frames(frames, rate_hz=rate_hz)
-    stager = StreamStager(fabric, window_bytes=window_bytes)
+    config = StreamConfig(rate_hz=rate_hz,
+                          window_bytes=(cache_frames or F) * frame_bytes)
+    src = DetectorSource.from_frames(frames, rate_hz=config.rate_hz)
+    stager = StagingClient(fabric).stream_stager(config)
 
     reduced: List[ReducedFrame] = []
     window_done: List[float] = []
@@ -364,19 +366,23 @@ def run_batch_hedm(fabric: Fabric, frames: np.ndarray, dark: np.ndarray,
     The detector writes every frame to the shared FS first (acquisition
     completes at ``F / rate_hz`` simulated s; the producer write itself is
     not charged, which favors this baseline), the whole scan is staged with
-    the batch engine `mode`, then stage-1 runs over the staged node-local
-    replicas in one pass. Returns ``(reduced, turnaround, StagingReport)``.
+    the batch engine `mode` through the unified client (concrete paths, no
+    glob resolution or pinning — ``resolve=False``), then stage-1 runs
+    over the staged node-local replicas in one pass. Returns
+    ``(reduced, turnaround, StagingReport)``.
     """
-    from repro.core.staging import BATCH_STAGE_FNS
-    if mode not in BATCH_STAGE_FNS:
-        raise ValueError(f"unknown staging mode {mode!r}; expected one of "
-                         f"{sorted(BATCH_STAGE_FNS)}")
-    stage = BATCH_STAGE_FNS[mode]
+    from repro.core.api import (BroadcastEntry, ENGINES, StagingClient,
+                                StagingSpec)
+    config = ENGINES.config_for(mode, batch_only=True)
 
     F, H, W = frames.shape
     paths = stream_to_fs(fabric, frames)
     t_acq = F / rate_hz if rate_hz else 0.0
-    rep, t_staged = stage(fabric, paths, t0=t_acq)
+    spec = StagingSpec([BroadcastEntry(files=tuple(paths), pin=False)])
+    crep = StagingClient(fabric).stage(spec, config, t0=t_acq, resolve=False)
+    # same arithmetic as the engine's returned completion time (bit-exact)
+    rep = crep.reports[0]
+    t_staged = t_acq + rep.total_time
 
     store = fabric.hosts[0].store
     stack = np.stack([store.data[p].view(np.float32).reshape(H, W)
@@ -455,53 +461,62 @@ def run_interactive_hedm(fabric: Fabric, scans: Dict[str, np.ndarray],
     Outputs are bit-identical to reducing each scan directly — eviction
     and re-staging never change bytes, only times (tests assert this).
     """
-    from repro.core.datasvc import StagingService
+    from contextlib import ExitStack
+
+    from repro.core.api import ENGINES, ServiceConfig, StagingClient
 
     scans32 = {n: np.ascontiguousarray(f, dtype=np.float32)
                for n, f in scans.items()}
     for name, frames in scans32.items():
         stream_to_fs(fabric, frames, prefix=name)
-    svc = StagingService(fabric, budget_bytes, mode=mode)
+    client = StagingClient(fabric, service=ServiceConfig(
+        budget_bytes=budget_bytes,
+        engine=ENGINES.config_for(mode, batch_only=True)))
+    svc = client.service
     for name in scans32:
         svc.register(name, patterns=[f"{name}/frame_*.bin"])
 
-    handles = {s.name: svc.session(s.name) for s in sessions}
     clocks = {s.name: s.t_start for s in sessions}
     outputs: Dict[str, Dict[str, np.ndarray]] = {s.name: {} for s in sessions}
     result_paths: Dict[str, Dict[str, str]] = {s.name: {} for s in sessions}
     c = fabric.constants
 
-    for step in range(max(len(s.datasets) for s in sessions)):
-        for script in sessions:
-            if step >= len(script.datasets):
-                continue
-            ds = script.datasets[step]
-            sess = handles[script.name]
-            lease = sess.acquire(ds, clocks[script.name])
-            entry = svc.catalog[ds]
-            F, H, W = scans32[ds].shape
-            store = fabric.hosts[0].store
-            stack = np.stack([store.data[p].view(np.float32).reshape(H, W)
-                              for p in entry.paths])
-            reduced = reduce_frames(stack, dark, threshold=threshold,
-                                    use_kernel=use_kernel)
-            packed = pack_reduced(reduced)
-            t_compute = (lease.t_ready
-                         + entry.nbytes / c.local_read_bw     # replica read
-                         + script.reduce_s_per_frame * F)
-            path, t_put = sess.put_result(ds, packed, t_compute)
-            sess.release(ds, t_put)
-            clocks[script.name] = t_put
-            outputs[script.name][ds] = packed
-            result_paths[script.name][ds] = path
-
     session_done: Dict[str, float] = {}
     writeback: Dict[str, object] = {}
-    for script in sessions:
-        rep, t_done = handles[script.name].flush(
-            clocks[script.name], collective=collective_writeback)
-        writeback[script.name] = rep
-        session_done[script.name] = t_done
+    with ExitStack() as stack:
+        # session-scoped campaigns: any lease a tenant still holds when
+        # the stack unwinds (including on error) is auto-released
+        handles = {s.name: stack.enter_context(client.session(s.name))
+                   for s in sessions}
+        for step in range(max(len(s.datasets) for s in sessions)):
+            for script in sessions:
+                if step >= len(script.datasets):
+                    continue
+                ds = script.datasets[step]
+                sess = handles[script.name]
+                lease = sess.acquire(ds, clocks[script.name])
+                entry = svc.catalog[ds]
+                F, H, W = scans32[ds].shape
+                store = fabric.hosts[0].store
+                stack_ = np.stack([store.data[p].view(np.float32)
+                                   .reshape(H, W) for p in entry.paths])
+                reduced = reduce_frames(stack_, dark, threshold=threshold,
+                                        use_kernel=use_kernel)
+                packed = pack_reduced(reduced)
+                t_compute = (lease.t_ready
+                             + entry.nbytes / c.local_read_bw  # replica read
+                             + script.reduce_s_per_frame * F)
+                path, t_put = sess.put_result(ds, packed, t_compute)
+                sess.release(ds, t_put)
+                clocks[script.name] = t_put
+                outputs[script.name][ds] = packed
+                result_paths[script.name][ds] = path
+
+        for script in sessions:
+            rep, t_done = handles[script.name].flush(
+                clocks[script.name], collective=collective_writeback)
+            writeback[script.name] = rep
+            session_done[script.name] = t_done
     return InteractiveHEDMResult(
         outputs=outputs, result_paths=result_paths,
         session_done=session_done, writeback=writeback, service=svc,

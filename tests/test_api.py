@@ -1,0 +1,655 @@
+"""Unified staging client API: typed configs, engine registry, client
+parity with the pre-redesign entrypoints, and session-scoped campaigns."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.api import (ENGINES, BroadcastEntry, ClientSession,
+                            CollectiveConfig, EngineConfig, EngineRegistry,
+                            NaiveConfig, PipelinedConfig, Report,
+                            ServiceConfig, StagingClient, StagingSpec,
+                            StreamConfig, as_spec)
+from repro.core.fabric import BGQ, Fabric
+
+
+def make_fabric(n_hosts=8, n_files=4, size=1 << 14, seed=0, prefix="d"):
+    fab = Fabric(n_hosts=n_hosts, constants=BGQ)
+    rng = np.random.default_rng(seed)
+    paths = []
+    for i in range(n_files):
+        p = f"{prefix}/f{i}.bin"
+        fab.fs.put(p, rng.integers(0, 255, size, dtype=np.uint8))
+        paths.append(p)
+    return fab, paths
+
+
+def assert_replicas_exact(fab, paths):
+    for host in fab.hosts:
+        for p in paths:
+            assert np.array_equal(host.store.data[p], fab.fs.files[p])
+
+
+# ---------------------------------------------------------------------------
+# typed config validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [0, -1, -(8 << 20)])
+def test_pipelined_config_rejects_bad_chunk(bad):
+    with pytest.raises(ValueError, match="chunk_bytes must be a positive"):
+        PipelinedConfig(chunk_bytes=bad)
+
+
+@pytest.mark.parametrize("bad", [0.0, -2.0])
+def test_stream_config_rejects_bad_rate(bad):
+    with pytest.raises(ValueError, match="rate_hz must be a positive"):
+        StreamConfig(rate_hz=bad)
+
+
+@pytest.mark.parametrize("bad", [0, -1024])
+def test_stream_config_rejects_bad_window(bad):
+    with pytest.raises(ValueError, match="window_bytes must be a positive"):
+        StreamConfig(window_bytes=bad)
+
+
+@pytest.mark.parametrize("bad", [0, -1, -(1 << 30)])
+def test_service_config_rejects_bad_budget(bad):
+    with pytest.raises(ValueError, match="budget_bytes must be a positive"):
+        ServiceConfig(budget_bytes=bad)
+
+
+def test_service_config_rejects_non_batch_engine_at_construction():
+    """A known non-batch engine fails FAST — at config construction, not
+    at the first (lazily-built) service touch."""
+    with pytest.raises(ValueError, match="must be a batch engine"):
+        ServiceConfig(budget_bytes=1 << 20, engine=StreamConfig())
+
+
+def test_stage_pin_knob_on_convenience_forms():
+    """pin=False on a bare pattern/path list keeps the replicas
+    evictable — the bare-engine-call semantics of the migration table."""
+    fab, paths = make_fabric(n_hosts=2)
+    rep = StagingClient(fab).stage("d/*.bin", CollectiveConfig(), pin=False)
+    assert rep.resolved_files == paths
+    for host in fab.hosts:
+        assert not host.store.pinned
+    fab2, _ = make_fabric(n_hosts=2)
+    StagingClient(fab2).stage("d/*.bin", CollectiveConfig())  # default pins
+    assert all(p in fab2.hosts[0].store.pinned for p in paths)
+
+
+def test_stream_window_smaller_than_one_frame_rejected():
+    """A bounded window that cannot hold even the largest frame is a
+    config error surfaced BEFORE ingest wedges."""
+    fab, paths = make_fabric(n_hosts=2, n_files=3, size=1 << 12)
+    client = StagingClient(fab)
+    with pytest.raises(ValueError, match="smaller than the largest frame"):
+        client.stage(paths, StreamConfig(window_bytes=1 << 10),
+                     resolve=False)
+
+
+def test_valid_configs_construct():
+    CollectiveConfig()
+    NaiveConfig()
+    PipelinedConfig(chunk_bytes=1 << 20)
+    StreamConfig()                                   # replay, unbounded
+    StreamConfig(rate_hz=10.0, window_bytes=1 << 20)
+    ServiceConfig(budget_bytes=1 << 20, engine=PipelinedConfig())
+
+
+# ---------------------------------------------------------------------------
+# spec round-trip through typed configs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("config", [
+    None,
+    CollectiveConfig(),
+    NaiveConfig(),
+    PipelinedConfig(chunk_bytes=1 << 20),
+    StreamConfig(rate_hz=4.0, window_bytes=1 << 16),
+])
+def test_spec_json_roundtrip_with_config(config):
+    spec = StagingSpec([BroadcastEntry(files=("scan/*.bin",), pin=False),
+                        BroadcastEntry(files=("dark/*.bin",))],
+                       config=config)
+    spec2 = StagingSpec.from_json(spec.to_json())
+    assert spec2 == spec
+    assert spec2.config == config                    # typed config survives
+
+
+def test_spec_json_legacy_payload_still_loads():
+    """Pre-redesign JSON (no engine block) parses with config=None."""
+    spec = StagingSpec.from_json(
+        json.dumps({"broadcasts": [{"files": ["a/*.bin"]}]}))
+    assert spec.broadcasts[0].files == ("a/*.bin",)
+    assert spec.config is None
+
+
+def test_spec_json_invalid_engine_params_loud():
+    with pytest.raises(ValueError, match="rate_hz must be a positive"):
+        StagingSpec.from_json(json.dumps({
+            "broadcasts": [{"files": ["a"]}],
+            "engine": {"name": "stream", "params": {"rate_hz": -1.0}}}))
+
+
+def test_as_spec_normalizes_patterns():
+    assert as_spec("a/*.bin").broadcasts[0].files == ("a/*.bin",)
+    assert as_spec(["a", "b"]).broadcasts[0].files == ("a", "b")
+    spec = StagingSpec([BroadcastEntry(("x",))])
+    assert as_spec(spec) is spec
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+def test_registry_holds_builtin_engines():
+    assert ENGINES.names() == ["collective", "naive", "pipelined", "stream"]
+    assert ENGINES.names(batch_only=True) == ["collective", "naive",
+                                              "pipelined"]
+    assert ENGINES.name_of(PipelinedConfig()) == "pipelined"
+    cfg = ENGINES.config_for("pipelined", chunk_bytes=123)
+    assert cfg == PipelinedConfig(chunk_bytes=123)
+
+
+def test_registry_unknown_mode_lists_registered_engines():
+    with pytest.raises(ValueError, match="unknown staging mode") as exc:
+        ENGINES.config_for("two_phase")
+    for name in ("collective", "naive", "pipelined", "stream"):
+        assert name in str(exc.value)
+
+
+def test_registry_unknown_parameter_loud():
+    with pytest.raises(ValueError, match="unknown parameter"):
+        ENGINES.config_for("pipelined", chunk_byte=1)  # typo'd stage_kw
+
+
+def test_registry_duplicate_registration_rejected():
+    reg = EngineRegistry.default()
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("collective", CollectiveConfig, lambda *a, **k: None)
+
+
+def test_registry_batch_only_excludes_stream():
+    with pytest.raises(ValueError, match="not batch-capable"):
+        ENGINES.config_for("stream", batch_only=True)
+
+
+def test_custom_engine_plugs_in_through_registry():
+    """Adding an engine is one register() call: the client dispatches to
+    it straight from its typed config — on the direct path, as the
+    SERVICE engine, and through spec JSON (given the same registry)."""
+    from dataclasses import dataclass
+
+    from repro.core.staging import stage_naive
+
+    calls = {"n": 0}
+
+    @dataclass(frozen=True)
+    class EchoConfig(EngineConfig):
+        tag: str = "echo"
+
+    def stage_echo(fabric, paths, t0=0.0, tag="echo"):
+        calls["tag"] = tag
+        calls["n"] += 1
+        return stage_naive(fabric, paths, t0)
+
+    reg = EngineRegistry.default()
+    reg.register("echo", EchoConfig, stage_echo)
+    fab, paths = make_fabric(n_hosts=2)
+    rep = StagingClient(fab, registry=reg).stage(
+        paths, EchoConfig(tag="hi"), resolve=False)
+    assert calls["tag"] == "hi"
+    assert rep.engine == "echo"
+    assert_replicas_exact(fab, paths)
+
+    # the client's registry reaches the catalog path too: a custom engine
+    # can be the staging service's engine
+    fab2, paths2 = make_fabric(n_hosts=2, prefix="scans")
+    client = StagingClient(
+        fab2, service=ServiceConfig(budget_bytes=1 << 20,
+                                    engine=EchoConfig(tag="svc")),
+        registry=reg)
+    srep = client.stage("scans/*.bin", session="alice")
+    assert srep.engine == "service" and calls["tag"] == "svc"
+    assert_replicas_exact(fab2, paths2)
+
+    # and spec JSON round-trips the custom config through that registry
+    spec = StagingSpec([BroadcastEntry(("scans/*",))],
+                       config=EchoConfig(tag="wire"))
+    spec2 = StagingSpec.from_json(spec.to_json(registry=reg), registry=reg)
+    assert spec2 == spec
+
+
+def test_service_rejects_non_batch_engine_with_clear_message():
+    """A REGISTERED non-batch engine (stream) is not mislabeled as
+    unknown — the message says it is not batch-capable."""
+    from repro.core.datasvc import StagingService
+    fab, _ = make_fabric(n_hosts=2)
+    with pytest.raises(ValueError, match="not.*batch-capable"):
+        StagingService(fab, budget_bytes=1 << 20, engine=StreamConfig())
+    with pytest.raises(ValueError, match="not.*batch-capable"):
+        StagingService(fab, budget_bytes=1 << 20, mode="stream")
+    with pytest.raises(ValueError, match="unknown staging mode"):
+        StagingService(fab, budget_bytes=1 << 20, mode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# client parity vs the pre-redesign entrypoints
+# ---------------------------------------------------------------------------
+
+ENGINE_CASES = [
+    ("collective", None, CollectiveConfig()),
+    ("pipelined", {"chunk_bytes": 1 << 12},
+     PipelinedConfig(chunk_bytes=1 << 12)),
+    ("naive", None, NaiveConfig()),
+    ("stream", {"rate_hz": 5.0}, StreamConfig(rate_hz=5.0)),
+]
+
+
+@pytest.mark.parametrize("mode,stage_kw,config", ENGINE_CASES)
+def test_client_parity_with_legacy_hook(mode, stage_kw, config):
+    """Every engine reached through client.stage is byte-exact and
+    simulated-time-identical to the legacy run_io_hook signature."""
+    from repro.core.iohook import run_io_hook
+
+    fab_old, paths = make_fabric()
+    fab_new, _ = make_fabric()
+    spec = StagingSpec([BroadcastEntry(("d/*.bin",))])
+    with pytest.deprecated_call():
+        old = run_io_hook(fab_old, spec, mode=mode, stage_kw=stage_kw)
+    new = StagingClient(fab_new).stage(spec, config)
+
+    assert new.engine == mode
+    assert new.total_time == old.total_time
+    assert new.metadata_time == old.metadata_time
+    assert new.resolved_files == old.resolved_files
+    assert len(new.reports) == len(old.reports)
+    for a, b in zip(new.reports, old.reports):
+        assert a.total_time == b.total_time
+        assert a.stage_time == b.stage_time
+        assert a.comm_time == b.comm_time
+        assert a.write_time == b.write_time
+        assert a.broadcast_time == b.broadcast_time
+        assert (a.fs_bytes, a.net_bytes, a.mode) == \
+            (b.fs_bytes, b.net_bytes, b.mode)
+    assert_replicas_exact(fab_new, paths)
+    for host_old, host_new in zip(fab_old.hosts, fab_new.hosts):
+        for p in paths:
+            assert np.array_equal(host_old.store.data[p],
+                                  host_new.store.data[p])
+            assert (p in host_old.store.pinned) == (p in host_new.store.pinned)
+
+
+@pytest.mark.parametrize("mode,config", [
+    ("collective", CollectiveConfig()),
+    ("pipelined", PipelinedConfig()),
+    ("naive", NaiveConfig()),
+])
+def test_client_parity_with_direct_engine_call(mode, config):
+    """resolve=False runs the bare engine: no glob, no broadcast, no pin —
+    identical accounting to calling the stage function directly."""
+    fab_a, paths = make_fabric(n_hosts=4)
+    fab_b, _ = make_fabric(n_hosts=4)
+    rep_direct, t_direct = ENGINES.stage_fn(mode)(fab_a, paths, 1.5)
+    spec = StagingSpec([BroadcastEntry(tuple(paths), pin=False)])
+    crep = StagingClient(fab_b).stage(spec, config, t0=1.5, resolve=False)
+    assert crep.metadata_time == 0.0
+    assert crep.broadcast_time == 0.0
+    # the entry report carries the engine's exact accounting
+    assert crep.reports[0].total_time == rep_direct.total_time
+    assert 1.5 + crep.reports[0].total_time == t_direct
+    assert crep.total_time == pytest.approx(rep_direct.total_time)
+    assert crep.reports[0].fs_bytes == rep_direct.fs_bytes
+    assert not fab_b.hosts[0].store.pinned          # pin=False honored
+    assert_replicas_exact(fab_b, paths)
+
+
+def test_client_service_path_parity_and_coalescing():
+    """The catalog path through the client matches the legacy
+    run_io_hook(service=...) accounting, and concurrent client calls
+    coalesce into one stage."""
+    from repro.core.datasvc import StagingService
+    from repro.core.iohook import run_io_hook
+
+    fab_old, paths = make_fabric(n_hosts=4, prefix="scans")
+    fab_new, _ = make_fabric(n_hosts=4, prefix="scans")
+    spec = StagingSpec([BroadcastEntry(("scans/*.bin",))])
+
+    svc_old = StagingService(fab_old, budget_bytes=1 << 20)
+    with pytest.deprecated_call():
+        old1 = run_io_hook(fab_old, spec, service=svc_old, session="alice")
+        old2 = run_io_hook(fab_old, spec, t0=old1.total_time / 2,
+                           service=svc_old, session="bob")
+
+    svc_new = StagingService(fab_new, budget_bytes=1 << 20)
+    client = StagingClient(fab_new, service=svc_new)
+    new1 = client.stage(spec, session="alice")
+    new2 = client.stage(spec, t0=new1.total_time / 2, session="bob")
+
+    assert new1.engine == "service" and new1.service is svc_new
+    for old, new in ((old1, new1), (old2, new2)):
+        assert new.total_time == old.total_time
+        assert new.metadata_time == old.metadata_time
+        assert new.resolved_files == old.resolved_files
+        assert [l.t_ready for l in new.leases] == \
+            [l.t_ready for l in old.leases]
+    assert svc_new.stats.stages == svc_old.stats.stages == 1
+    assert svc_new.stats.coalesced == 1              # second call joined
+    assert fab_new.fs.bytes_read == fab_old.fs.bytes_read
+    assert_replicas_exact(fab_new, paths)
+
+
+def test_client_builds_service_from_config():
+    fab, paths = make_fabric(n_hosts=2, prefix="scans")
+    client = StagingClient(fab, service=ServiceConfig(
+        budget_bytes=1 << 20, engine=PipelinedConfig(chunk_bytes=1 << 12)))
+    rep = client.stage("scans/*.bin", session="alice")
+    assert rep.engine == "service"
+    assert rep.reports[0].mode == "pipelined"        # service engine config
+    assert rep.reports[0].n_chunks > 1
+    assert_replicas_exact(fab, paths)
+
+
+def test_service_config_rejected_per_call():
+    """A per-call ServiceConfig would silently reroute later config-less
+    calls through the catalog (leaking unscoped leases) — it belongs in
+    the constructor, and stage() says so."""
+    fab, paths = make_fabric(n_hosts=2, prefix="scans")
+    client = StagingClient(fab)
+    with pytest.raises(ValueError, match="configures the client"):
+        client.stage("scans/*.bin", ServiceConfig(budget_bytes=1 << 20))
+    # the client stayed engine-only: config-less stage is still direct
+    rep = client.stage("scans/*.bin")
+    assert rep.engine == "collective" and rep.leases == []
+    assert client.service is None
+
+
+def test_attached_service_wins_over_spec_embedded_config():
+    """On a service-attached client a config-less stage routes through
+    the catalog even when the spec embeds an engine config — a session
+    must never silently fall back to an unleased direct stage."""
+    fab, paths = make_fabric(n_hosts=2, prefix="scans")
+    client = StagingClient(fab, service=ServiceConfig(budget_bytes=1 << 20))
+    spec = StagingSpec([BroadcastEntry(("scans/*.bin",))],
+                       config=CollectiveConfig())
+    with client.session("alice") as sess:
+        rep = sess.stage(spec)
+        assert rep.engine == "service"
+        assert len(rep.leases) == 1              # leased, scope-owned
+        assert len(client.service.catalog) == 1
+    assert client.service.catalog[rep.leases[0].dataset].lease_count == 0
+    # plain client.stage (no session scope) routes through the catalog too
+    rep2 = client.stage(spec, t0=rep.total_time + 1.0, session="bob")
+    assert rep2.engine == "service"
+    # an EXPLICIT engine config is the escape hatch to a direct stage
+    rep3 = client.stage(spec, NaiveConfig(), t0=rep.total_time + 2.0)
+    assert rep3.engine == "naive" and rep3.leases == []
+
+
+# ---------------------------------------------------------------------------
+# unified Report invariants
+# ---------------------------------------------------------------------------
+
+def test_report_accounting_invariants_direct_path():
+    fab, paths = make_fabric(n_hosts=16, n_files=3)
+    rep = StagingClient(fab).stage("d/*.bin", CollectiveConfig())
+    total = sum(fab.fs.size(p) for p in paths)
+    assert rep.total_bytes == rep.staged_bytes == total
+    assert rep.fs_bytes == total                     # 1x dataset
+    assert rep.delivered_bytes == 16 * total         # replica per host
+    assert rep.broadcast_time > 0.0                  # manifest push charged
+    assert rep.metadata_time > 0.0
+    assert rep.accounting_closes()
+    r = rep.reports[0]
+    assert r.total_time == pytest.approx(
+        rep.stage_time + rep.comm_time + rep.write_time + rep.broadcast_time)
+
+
+def test_report_stream_engine_reads_no_fs_bytes():
+    fab, paths = make_fabric(n_hosts=4)
+    rep = StagingClient(fab).stage("d/*.bin", StreamConfig(rate_hz=100.0))
+    assert rep.engine == "stream"
+    assert rep.fs_bytes == 0                         # never read back
+    assert rep.delivered_bytes == 4 * rep.total_bytes
+    assert rep.accounting_closes()
+    assert_replicas_exact(fab, paths)
+
+
+# ---------------------------------------------------------------------------
+# legacy shim behaviour
+# ---------------------------------------------------------------------------
+
+def test_run_io_hook_unknown_mode_lists_registered_engines():
+    from repro.core.iohook import run_io_hook
+    fab, _ = make_fabric(n_hosts=2)
+    spec = StagingSpec([BroadcastEntry(("d/*.bin",))])
+    with pytest.raises(ValueError, match="unknown staging mode") as exc:
+        with pytest.deprecated_call():
+            run_io_hook(fab, spec, mode="two_phase")
+    for name in ENGINES.names():
+        assert name in str(exc.value)
+
+
+def test_run_io_hook_legacy_collective_flag_honored():
+    from repro.core.iohook import run_io_hook
+    fab, paths = make_fabric(n_hosts=2)
+    with pytest.deprecated_call():
+        res = run_io_hook(fab, StagingSpec([BroadcastEntry(("d/*.bin",))]),
+                          collective=False)
+    assert res.reports[0].mode == "naive"
+    assert_replicas_exact(fab, paths)
+
+
+def test_run_io_hook_legacy_stream_pin_paths_stage_kw_honored():
+    """The pre-redesign escape hatch — explicit pin_paths in stage_kw for
+    mode='stream' with an unpinned entry — keeps working via the shim
+    (pinned AT INGEST, surviving window eviction)."""
+    from repro.core.iohook import run_io_hook
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    paths = []
+    for i in range(4):
+        p = f"p/{i}.bin"
+        fab.fs.put(p, np.full(1 << 10, i, np.uint8))
+        paths.append(p)
+    spec = StagingSpec([BroadcastEntry(("p/*.bin",), pin=False)])
+    with pytest.deprecated_call():
+        res = run_io_hook(fab, spec, mode="stream",
+                          stage_kw={"window_bytes": 2 << 10,
+                                    "pin_paths": [paths[0]]})
+    assert res.reports[0].n_chunks == 4
+    for host in fab.hosts:
+        assert paths[0] in host.store.data       # pinned frame survived
+        assert paths[0] in host.store.pinned
+        assert paths[1] not in host.store.data   # unpinned ones slid out
+
+
+def test_stream_config_pin_paths_normalizes_and_roundtrips():
+    cfg = StreamConfig(pin_paths=["a", "b"])     # list normalizes to tuple
+    assert cfg.pin_paths == ("a", "b")
+    assert cfg == StreamConfig(pin_paths=("a", "b"))
+    spec = StagingSpec([BroadcastEntry(("p/*",))], config=cfg)
+    assert StagingSpec.from_json(spec.to_json()) == spec
+
+
+def test_resolve_false_rejected_on_catalog_path():
+    """resolve=False must not be silently ignored (re-globbing concrete
+    paths as patterns); the catalog path refuses it loudly."""
+    fab, paths = make_fabric(n_hosts=2, prefix="scans")
+    client = StagingClient(fab, service=ServiceConfig(budget_bytes=1 << 20))
+    with pytest.raises(ValueError, match="resolve=False is not supported"):
+        client.stage(paths, resolve=False)
+
+
+def test_run_io_hook_honors_spec_embedded_config():
+    """A spec that fully selects its transport (the JSON engine block)
+    stages identically through the shim and the client; explicit legacy
+    arguments still override it."""
+    from repro.core.iohook import run_io_hook
+    fab_a, paths = make_fabric()
+    fab_b, _ = make_fabric()
+    spec = StagingSpec.from_json(StagingSpec(
+        [BroadcastEntry(("d/*.bin",))],
+        config=PipelinedConfig(chunk_bytes=512)).to_json())
+    with pytest.deprecated_call():
+        old = run_io_hook(fab_a, spec)
+    new = StagingClient(fab_b).stage(spec)
+    assert old.reports[0].mode == new.reports[0].mode == "pipelined"
+    assert old.reports[0].n_chunks == new.reports[0].n_chunks > 4
+    assert old.total_time == new.total_time
+    # explicit legacy args still win over the embedded config
+    fab_c, _ = make_fabric()
+    with pytest.deprecated_call():
+        res = run_io_hook(fab_c, spec, collective=False)
+    assert res.reports[0].mode == "naive"
+
+
+def test_service_rejects_conflicting_engine_and_legacy_args():
+    from repro.core.datasvc import StagingService
+    fab, _ = make_fabric(n_hosts=2)
+    with pytest.raises(ValueError, match="not both"):
+        StagingService(fab, budget_bytes=1 << 20, mode="pipelined",
+                       engine=NaiveConfig())
+    with pytest.raises(ValueError, match="not both"):
+        StagingService(fab, budget_bytes=1 << 20,
+                       stage_kw={"chunk_bytes": 1 << 12},
+                       engine=PipelinedConfig())
+
+
+def test_stream_stager_honors_config_pin_paths():
+    fab, _ = make_fabric(n_hosts=2)
+    client = StagingClient(fab)
+    stager = client.stream_stager(
+        StreamConfig(window_bytes=2 << 10, pin_paths=("s/0.bin",)))
+    recs = []
+    for i in range(4):
+        rec = stager.ingest(f"s/{i}.bin", np.full(1 << 10, i, np.uint8),
+                            float(i))
+        stager.release(rec.path, rec.t_avail)
+        recs.append(rec)
+    assert "s/0.bin" in stager._resident         # pre-pinned: survived
+    assert "s/1.bin" not in stager._resident     # unpinned: slid out
+    with pytest.raises(ValueError, match="needs a StreamConfig"):
+        client.stream_stager(CollectiveConfig())
+    with pytest.raises(ValueError, match="window_bytes is required"):
+        client.stream_stager(StreamConfig(rate_hz=1.0))
+
+
+def test_run_io_hook_bad_stage_kw_loud():
+    from repro.core.iohook import run_io_hook
+    fab, _ = make_fabric(n_hosts=2)
+    spec = StagingSpec([BroadcastEntry(("d/*.bin",))])
+    with pytest.raises(ValueError, match="unknown parameter"):
+        with pytest.deprecated_call():
+            run_io_hook(fab, spec, mode="pipelined",
+                        stage_kw={"chunk": 1 << 12})
+
+
+# ---------------------------------------------------------------------------
+# session-scoped campaigns (auto-released leases)
+# ---------------------------------------------------------------------------
+
+def service_client(n_hosts=4, budget_files=8):
+    fab, paths = make_fabric(n_hosts=n_hosts, prefix="scans")
+    client = StagingClient(
+        fab, service=ServiceConfig(budget_bytes=budget_files * (1 << 14)))
+    return fab, paths, client
+
+
+def test_client_session_releases_on_exit():
+    fab, paths, client = service_client()
+    with client.session("alice") as sess:
+        rep = sess.stage("scans/*.bin")
+        name = rep.leases[0].dataset
+        assert client.service.catalog[name].lease_count == 1
+    entry = client.service.catalog[name]
+    assert entry.lease_count == 0                    # auto-released
+    assert entry.t_unleased >= rep.leases[0].t_ready
+
+
+def test_client_session_releases_under_exception():
+    fab, paths, client = service_client()
+    with pytest.raises(RuntimeError, match="boom"):
+        with client.session("alice") as sess:
+            rep = sess.stage("scans/*.bin")
+            raise RuntimeError("boom")
+    name = rep.leases[0].dataset
+    assert client.service.catalog[name].lease_count == 0
+
+
+def test_client_session_kills_the_wedge_footgun():
+    """Two sessions that 'forget' to release: with context scoping, a
+    third admission that needs their memory no longer wedges."""
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    rng = np.random.default_rng(0)
+    for d in range(3):
+        for i in range(4):
+            fab.fs.put(f"d{d}/f{i}.bin",
+                       rng.integers(0, 255, 1 << 12, dtype=np.uint8))
+    client = StagingClient(fab,
+                           service=ServiceConfig(budget_bytes=8 * (1 << 12)))
+    svc = client.service
+    for d in range(3):
+        svc.register(f"d{d}", patterns=[f"d{d}/f*.bin"])
+    with client.session("alice") as a, client.session("bob") as b:
+        a.acquire("d0", 0.0)
+        b.acquire("d1", 0.0)
+        # no releases inside the scope — the old footgun
+    lease = svc.session("carol").acquire("d2", 100.0)  # would have wedged
+    assert lease.t_ready >= 100.0
+    assert svc.stats.evictions >= 1
+
+
+def test_client_session_delegates_to_analysis_session():
+    fab, paths, client = service_client()
+    with client.session("alice") as sess:
+        assert isinstance(sess, ClientSession)
+        assert sess.session_id == "alice"
+        srep = sess.stage("scans/*.bin")
+        out = np.arange(100, dtype=np.float32)
+        path, t_put = sess.put_result("r", out, srep.total_time + 1.0)
+        rep, t_done = sess.flush(t_put)
+        assert np.array_equal(fab.fs.files[path],
+                              out.view(np.uint8).ravel())
+    assert client.service.catalog["scans/*.bin"].lease_count == 0
+
+
+def test_session_required_for_sessionless_client():
+    fab, _ = make_fabric()
+    with pytest.raises(ValueError, match="no staging service"):
+        StagingClient(fab).session("alice")
+
+
+# ---------------------------------------------------------------------------
+# Dataflow stage= hook
+# ---------------------------------------------------------------------------
+
+def test_dataflow_stages_declared_inputs_before_execution():
+    from repro.core.dataflow import Dataflow
+
+    fab, paths = make_fabric(n_hosts=2, n_files=3)
+    flow = Dataflow(fab, stage="d/*.bin",
+                    stage_config=PipelinedConfig(chunk_bytes=1 << 12))
+    futs = flow.foreach(lambda p: p, paths, durations=[0.5] * len(paths),
+                        inputs_of=lambda p: [p])
+    stats = flow.run(n_workers=2)
+    assert flow.stage_report is not None
+    assert flow.stage_report.engine == "pipelined"
+    assert_replicas_exact(fab, paths)
+    # staged inputs gate execution: nothing starts before replicas land
+    t_staged = flow.stage_report.total_time
+    assert all(e.start >= t_staged for e in stats.events)
+    # and the staged replicas serve the inputs (no shared-FS fallback)
+    assert stats.cache_hits == len(paths)
+    assert stats.cache_misses == 0
+    assert [f.result() for f in futs] == paths
+
+
+def test_dataflow_without_stage_hook_unchanged():
+    from repro.core.dataflow import Dataflow
+    fab, _ = make_fabric(n_hosts=2)
+    flow = Dataflow(fab)
+    fut = flow.task(lambda: 41, duration=1.0)
+    flow.run(n_workers=1)
+    assert flow.stage_report is None
+    assert fut.result() == 41

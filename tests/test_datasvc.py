@@ -214,6 +214,52 @@ def test_release_without_lease_raises():
 
 
 # ---------------------------------------------------------------------------
+# session context manager (lease auto-release)
+# ---------------------------------------------------------------------------
+
+def test_session_context_manager_releases_held_leases():
+    fab, svc = make_service()
+    with svc.session("alice") as sess:
+        l0 = sess.acquire("d0", 0.0)
+        sess.acquire("d0", l0.t_ready + 1.0)         # two holds, same dataset
+        sess.acquire("d1", l0.t_ready + 2.0)
+        assert sess.held() == {"d0": 2, "d1": 1}
+    assert svc.catalog["d0"].lease_count == 0
+    assert svc.catalog["d1"].lease_count == 0
+    # released at the last-observed simulated time, not before
+    assert svc.catalog["d1"].t_unleased >= l0.t_ready + 2.0
+
+
+def test_session_exit_under_exception_still_releases():
+    fab, svc = make_service()
+    with pytest.raises(RuntimeError, match="boom"):
+        with svc.session("alice") as sess:
+            sess.acquire("d0", 0.0)
+            raise RuntimeError("boom")
+    entry = svc.catalog["d0"]
+    assert entry.lease_count == 0
+    # the store pins went with the lease: the dataset is evictable again
+    svc.acquire("bob", "d1", 100.0)
+    svc.acquire("bob", "d2", 101.0)                  # forces d0 out
+    assert entry.state is DatasetState.GONE
+
+
+def test_session_close_caller_supplied_time_and_idempotence():
+    fab, svc = make_service()
+    sess = svc.session("alice")
+    sess.acquire("d0", 0.0)
+    sess.close(t=42.0)
+    assert svc.catalog["d0"].lease_count == 0
+    assert svc.catalog["d0"].t_unleased == 42.0
+    sess.close()                                     # idempotent: no raise
+    # explicit releases inside the scope leave nothing for __exit__
+    with svc.session("bob") as bob:
+        lease = bob.acquire("d0", 50.0)
+        bob.release("d0", lease.t_ready)
+    assert svc.catalog["d0"].lease_count == 0
+
+
+# ---------------------------------------------------------------------------
 # lease-aware pinning
 # ---------------------------------------------------------------------------
 
