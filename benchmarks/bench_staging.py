@@ -16,10 +16,21 @@ every configuration. The "new" side drives the unified client API
 runs one identical staging job through BOTH surfaces — the legacy
 ``run_io_hook`` deprecation shim and ``client.stage`` — asserting
 identical simulated accounting, so a shim regression shows up here.
+
+Beyond wall clock, every staging row records its SIMULATED accounting
+(``sim`` block) under the FLAT topology, and a ``topology`` section
+compares the flat pipelined-ring broadcast against the planner's
+hierarchical/auto plans on the BGQ 5D-torus machine at P up to 8192 —
+asserting the hierarchical plan wins at P >= 4096, with per-tier bytes
+reported. ``--quick`` (via ``benchmarks.run --staging --quick``)
+recomputes only the simulated numbers and asserts they match the
+recorded ``BENCH_staging.json`` baseline exactly — the CI accounting-
+parity smoke (no wall-clock comparisons, runs in seconds).
+
 Emits ``BENCH_staging.json`` next to this file and returns harness CSV
 rows via :func:`rows` (wired into ``benchmarks.run``).
 
-Run directly:  PYTHONPATH=src python -m benchmarks.bench_staging
+Run directly:  PYTHONPATH=src python -m benchmarks.bench_staging [--quick]
 """
 from __future__ import annotations
 
@@ -47,6 +58,8 @@ STAGE_FILE_BYTES = 32 << 20          # 4 x 32 MiB dataset per config
 LABEL_FRAMES = 64
 LABEL_SIZE = 256
 LEGACY_LABEL_BUDGET_S = 10.0         # time legacy on a subset if slower
+TOPOLOGY_HOSTS = (1024, 4096, 8192)  # planner comparison (pure cost model)
+TOPOLOGY_NBYTES = 32 << 20           # one replica broadcast per plan
 
 
 # --------------------------------------------------------------------------
@@ -103,6 +116,32 @@ def _check_replicas(fabric, paths):
                 f"replica mismatch host={h} path={p}"
 
 
+def _sim_dict(rep) -> dict:
+    """A client Report reduced to its SIMULATED accounting — the ONE
+    shape both the recorded baseline and quick_check compare (strict
+    dict equality, so full-run and quick-run must share this builder)."""
+    r = rep.reports[0]
+    return {
+        "total_time": rep.total_time, "stage_time": r.stage_time,
+        "comm_time": r.comm_time, "write_time": r.write_time,
+        "fs_bytes": r.fs_bytes, "net_bytes": r.net_bytes,
+        "tier_bytes": dict(r.tier_bytes),
+    }
+
+
+def _stage_sim_accounting(hosts: int) -> dict:
+    """One FLAT-topology client staging run, reduced to its SIMULATED
+    accounting (deterministic — the quick-mode parity anchor). Returns
+    the sim dict; replicas are byte-checked as a side effect."""
+    from repro.core.api import (BroadcastEntry, CollectiveConfig,
+                                StagingClient, StagingSpec)
+    fab, paths = _make_fabric(hosts)
+    spec = StagingSpec([BroadcastEntry(tuple(paths), pin=False)])
+    rep = StagingClient(fab).stage(spec, CollectiveConfig(), resolve=False)
+    _check_replicas(fab, paths)
+    return _sim_dict(rep)
+
+
 def bench_stage_collective() -> List[dict]:
     from repro.core.api import (BroadcastEntry, CollectiveConfig,
                                 StagingClient, StagingSpec)
@@ -112,9 +151,10 @@ def bench_stage_collective() -> List[dict]:
         spec = StagingSpec([BroadcastEntry(tuple(paths), pin=False)])
         client = StagingClient(fab_new)
         t0 = time.perf_counter()
-        client.stage(spec, CollectiveConfig(), resolve=False)
+        rep = client.stage(spec, CollectiveConfig(), resolve=False)
         t_new = time.perf_counter() - t0
         _check_replicas(fab_new, paths)
+        sim = _sim_dict(rep)
 
         fab_old, paths = _make_fabric(hosts)
         t0 = time.perf_counter()
@@ -127,6 +167,43 @@ def bench_stage_collective() -> List[dict]:
             "dataset_bytes": STAGE_FILES * STAGE_FILE_BYTES,
             "legacy_s": t_old, "zero_copy_s": t_new,
             "speedup": t_old / t_new, "byte_exact": True,
+            "sim": sim,
+        })
+    return out
+
+
+def bench_topology_plans() -> List[dict]:
+    """Flat pipelined ring vs the collective planner on the BGQ 5D-torus
+    topology: one 32 MiB replica broadcast per plan, P up to 8192. Pure
+    simulated cost model (`repro.core.collectives`) — no wall clock, no
+    real bytes. Asserts the hierarchical plan (and a fortiori the auto
+    selection) beats the flat ring at P >= 4096; per-tier wire bytes are
+    recorded for every plan."""
+    from repro.core.collectives import CollectivePlanner
+    from repro.core.fabric import BGQ
+    from repro.core.topology import BGQ_TORUS
+    planner = CollectivePlanner(BGQ_TORUS, BGQ)
+    out = []
+    for hosts in TOPOLOGY_HOSTS:
+        flat = planner.plan_broadcast(TOPOLOGY_NBYTES, hosts,
+                                      algorithm="pipelined_ring")
+        hier = planner.plan_broadcast(TOPOLOGY_NBYTES, hosts,
+                                      algorithm="hierarchical")
+        auto = planner.plan_broadcast(TOPOLOGY_NBYTES, hosts)
+        if hosts >= 4096:
+            assert hier.time < flat.time, \
+                f"hierarchical lost to the flat ring at P={hosts}"
+            assert auto.time <= hier.time
+        out.append({
+            "name": f"broadcast_P{hosts}",
+            "topology": BGQ_TORUS.name, "nbytes": TOPOLOGY_NBYTES,
+            "flat_ring_s": flat.time,
+            "hierarchical_s": hier.time,
+            "auto_s": auto.time, "auto_algorithm": auto.algorithm,
+            "speedup_hier_vs_flat": flat.time / hier.time,
+            "flat_tier_bytes": flat.tier_bytes,
+            "hier_tier_bytes": hier.tier_bytes,
+            "auto_tier_bytes": auto.tier_bytes,
         })
     return out
 
@@ -218,16 +295,57 @@ def run_benchmarks() -> dict:
     staging = bench_stage_collective()
     labeling = bench_labeling()
     hook_paths = bench_hook_paths()
+    topology = bench_topology_plans()
     report = {"calibration": BGQ.name, "api_path": API_PATH,
               "staging": staging, "labeling": labeling,
-              "hook_paths": hook_paths}
+              "hook_paths": hook_paths, "topology": topology}
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)
     return report
 
 
-def rows(report=None) -> List[Row]:
-    """Harness CSV rows (name, us_per_call, derived) for benchmarks.run."""
+def quick_check() -> dict:
+    """CI smoke: recompute ONLY the simulated numbers (FLAT staging
+    accounting + topology plans — seconds of wall time, no legacy
+    engines, no labeling) and assert exact equality with the recorded
+    ``BENCH_staging.json`` baseline. Simulated accounting is
+    deterministic, so any drift is a real cost-model change — rerun the
+    full benchmark to re-baseline when it is intentional."""
+    with open(JSON_PATH) as f:
+        base = json.load(f)
+    checked = []
+    for s in base["staging"]:
+        hosts = int(s["name"].rsplit("P", 1)[1])
+        recorded = s.get("sim")
+        assert recorded is not None, (
+            f"{JSON_PATH} predates the sim-accounting baseline; rerun the "
+            f"full benchmark (python -m benchmarks.bench_staging)")
+        sim = _stage_sim_accounting(hosts)
+        assert sim == recorded, (
+            f"FLAT-topology simulated accounting drifted at P={hosts}:\n"
+            f"  recorded: {recorded}\n  computed: {sim}\n"
+            f"re-baseline with the full benchmark if this is intentional")
+        checked.append({"name": s["name"], "parity": True})
+    fresh = {t["name"]: t for t in bench_topology_plans()}
+    for t in base.get("topology", []):
+        now = fresh[t["name"]]
+        for key in ("flat_ring_s", "hierarchical_s", "auto_s",
+                    "auto_algorithm"):
+            assert now[key] == t[key], (
+                f"topology plan {t['name']} drifted on {key}: "
+                f"recorded {t[key]!r}, computed {now[key]!r}")
+        checked.append({"name": f"topology_{t['name']}", "parity": True})
+    return {"baseline": os.path.basename(JSON_PATH), "checked": checked}
+
+
+def rows(report=None, quick: bool = False) -> List[Row]:
+    """Harness CSV rows (name, us_per_call, derived) for benchmarks.run.
+    ``quick`` runs :func:`quick_check` against the recorded baseline
+    instead of the full wall-clock benchmark."""
+    if quick:
+        result = quick_check()
+        return [(f"bench_quick_{c['name']}", 0.0, "sim_parity=True")
+                for c in result["checked"]]
     if report is None:
         report = run_benchmarks()
     out: List[Row] = []
@@ -240,10 +358,21 @@ def rows(report=None) -> List[Row]:
     hp = report["hook_paths"]
     out.append(("bench_hook_shim_vs_client", hp["legacy_shim_s"] * 1e6,
                 f"accounting_match={hp['simulated_accounting_match']}"))
+    for t in report["topology"]:
+        out.append((f"bench_topology_{t['name']}",
+                    t["hierarchical_s"] * 1e6,
+                    f"hier_vs_flat_ring={t['speedup_hier_vs_flat']:.1f}x"))
     return out
 
 
 def main() -> None:
+    if "--quick" in sys.argv[1:]:
+        result = quick_check()
+        for c in result["checked"]:
+            print(f"{c['name']}: simulated accounting matches "
+                  f"{result['baseline']}")
+        print(f"quick parity OK ({len(result['checked'])} checks)")
+        return
     report = run_benchmarks()
     for s in report["staging"]:
         print(f"{s['name']}: legacy {s['legacy_s']:.3f}s -> zero-copy "
@@ -257,6 +386,12 @@ def main() -> None:
     print(f"hook paths @P64: legacy shim {hp['legacy_shim_s']:.3f}s wall, "
           f"client {hp['client_s']:.3f}s wall, simulated accounting match: "
           f"{hp['simulated_accounting_match']}")
+    for t in report["topology"]:
+        print(f"topology {t['name']} ({t['topology']}): flat ring "
+              f"{t['flat_ring_s']:.3f}s -> hierarchical "
+              f"{t['hierarchical_s']:.3f}s "
+              f"({t['speedup_hier_vs_flat']:.1f}x; auto picks "
+              f"{t['auto_algorithm']} at {t['auto_s']:.3f}s)")
     print(f"wrote {JSON_PATH}")
 
 

@@ -7,6 +7,10 @@ staging/labeling hot-path microbenchmark by ``--staging``, the
 batch-vs-streaming turnaround comparison by ``--streaming``, and the
 multi-tenant staging-service scenario by ``--service`` (each also emits
 its ``BENCH_*.json``; standalone: ``python -m benchmarks.bench_<name>``).
+``--staging --quick`` skips every wall-clock comparison and instead
+asserts the SIMULATED FLAT-topology accounting (plus the topology-plan
+costs) match the recorded ``BENCH_staging.json`` baseline exactly — the
+CI accounting-parity smoke.
 
 Every invocation ends with a consolidated summary of ALL ``BENCH_*.json``
 files present (on stderr, so the stdout CSV contract is preserved),
@@ -22,6 +26,9 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# the repo root, so `python benchmarks/run.py` resolves the benchmarks
+# package exactly like `python -m benchmarks.run`
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 
@@ -38,6 +45,11 @@ def _headline(name: str, report: dict) -> str:
             if hp:
                 head += (f"; shim==client accounting: "
                          f"{hp['simulated_accounting_match']}")
+            topo = report.get("topology")
+            if topo:
+                t = topo[-1]                   # largest host count
+                head += (f"; {t['name']} hier "
+                         f"{t['speedup_hier_vs_flat']:.1f}x vs flat ring")
             return head
         if name == "BENCH_streaming.json":
             rs = report["turnaround"]
@@ -108,9 +120,11 @@ def main() -> None:
     try:
         if "--staging" in sys.argv[1:]:
             from benchmarks import bench_staging
-            print(f"[bench_staging] api_path={bench_staging.API_PATH}",
+            quick = "--quick" in sys.argv[1:]
+            print(f"[bench_staging] api_path={bench_staging.API_PATH}"
+                  f"{' quick=sim-parity-only' if quick else ''}",
                   file=sys.stderr)
-            for name, us, derived in bench_staging.rows():
+            for name, us, derived in bench_staging.rows(quick=quick):
                 print(f"{name},{us:.1f},{derived}")
         elif "--streaming" in sys.argv[1:]:
             from benchmarks import bench_streaming

@@ -33,6 +33,12 @@ detector-streaming client hiding batch-vs-stream delivery):
     auto-releases every lease the session still holds on exit (even under
     an exception), killing the forgotten-``service.release(...)`` wedge
     footgun of the raw catalog API.
+  * **Topology-aware transport** — every built-in engine config carries a
+    ``topology`` field (a typed `repro.core.topology.TopologyConfig`,
+    JSON round-trippable): the stage's collectives are planned over that
+    machine model by the `repro.core.collectives.CollectivePlanner`
+    (exposed as :attr:`StagingClient.planner`), with per-tier wire
+    traffic in the report's ``tier_bytes``.
 
 `repro.core.iohook.run_io_hook` remains as a thin deprecation shim over
 the client (``mode``/``collective``/``stage_kw`` honored), and
@@ -49,10 +55,14 @@ from dataclasses import dataclass, field, fields
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
                     Union)
 
+from repro.core.collectives import CollectivePlan, CollectivePlanner  # noqa: F401 (re-export)
 from repro.core.fabric import Fabric
 from repro.core.staging import (StagingReport, stage_collective, stage_naive,
                                 stage_pipelined)
 from repro.core.streaming import StreamStager, stage_stream
+from repro.core.topology import (BGQ_TORUS, FLAT, TOPOLOGIES,  # noqa: F401
+                                 TPU_POD_ICI_DCN, Topology, TopologyConfig,
+                                 resolve_topology)
 
 
 # ---------------------------------------------------------------------------
@@ -67,7 +77,18 @@ class EngineConfig:
     validated in ``__post_init__`` with a clear message — the typed
     replacement for the old untyped ``stage_kw`` dict. ``to_kw()`` maps
     the fields onto the engine function's keyword arguments.
+
+    A subclass that declares a ``topology`` field gets loose spellings
+    (a canned name, a JSON dict, a registered
+    `repro.core.topology.Topology`) coerced to a typed
+    :class:`~repro.core.topology.TopologyConfig` here — subclasses with
+    their own ``__post_init__`` must call ``super().__post_init__()``.
     """
+
+    def __post_init__(self) -> None:
+        topo = getattr(self, "topology", None)
+        if topo is not None and not isinstance(topo, TopologyConfig):
+            object.__setattr__(self, "topology", TopologyConfig.coerce(topo))
 
     def to_kw(self) -> Dict[str, Any]:
         return {f.name: getattr(self, f.name) for f in fields(self)}
@@ -75,18 +96,24 @@ class EngineConfig:
 
 @dataclass(frozen=True)
 class CollectiveConfig(EngineConfig):
-    """Two-phase ``MPI_File_read_all`` staging (leader stripes + ring
-    all-gather) — `repro.core.staging.stage_collective`. No parameters."""
+    """Two-phase ``MPI_File_read_all`` staging (leader stripes + planned
+    all-gather) — `repro.core.staging.stage_collective`. ``topology``
+    selects the machine model the collectives are planned over for this
+    stage (``None``: whatever the fabric runs — FLAT by default)."""
+    topology: Optional[TopologyConfig] = None
 
 
 @dataclass(frozen=True)
 class PipelinedConfig(EngineConfig):
     """Chunked two-phase staging with read/all-gather overlap
     (`repro.core.staging.stage_pipelined`). ``chunk_bytes`` is the
-    per-host segment size: smaller chunks overlap finer but round more."""
+    per-host segment size: smaller chunks overlap finer but round more;
+    ``topology`` as on :class:`CollectiveConfig`."""
     chunk_bytes: int = 8 << 20
+    topology: Optional[TopologyConfig] = None
 
     def __post_init__(self) -> None:
+        super().__post_init__()
         if self.chunk_bytes <= 0:
             raise ValueError(
                 f"chunk_bytes must be a positive per-host segment size in "
@@ -96,7 +123,10 @@ class PipelinedConfig(EngineConfig):
 @dataclass(frozen=True)
 class NaiveConfig(EngineConfig):
     """Uncoordinated per-host full reads — the paper's congested baseline
-    (`repro.core.staging.stage_naive`). No parameters."""
+    (`repro.core.staging.stage_naive`). ``topology`` is accepted for
+    engine-protocol uniformity (the naive path never touches the
+    interconnect)."""
+    topology: Optional[TopologyConfig] = None
 
 
 @dataclass(frozen=True)
@@ -105,15 +135,20 @@ class StreamConfig(EngineConfig):
     shared FS is never read back. ``rate_hz`` is the acquisition rate in
     frames per simulated second (``None`` = replay as fast as the fabric
     delivers); ``window_bytes`` bounds the per-node sliding cache
-    (``None`` = the whole set stays resident)."""
+    (``None`` = the whole set stays resident); ``topology`` as on
+    :class:`CollectiveConfig` (the per-frame detector ingest hop is
+    charged to its ingest tier and each delivery broadcast planned over
+    it)."""
     rate_hz: Optional[float] = None
     window_bytes: Optional[int] = None
     # paths pinned AT INGEST (exempt from window eviction) in addition to
     # whatever the broadcast entry's ``pin`` directive pins — the typed
     # home of the legacy ``stage_kw={"pin_paths": [...]}`` escape hatch
     pin_paths: Tuple[str, ...] = ()
+    topology: Optional[TopologyConfig] = None
 
     def __post_init__(self) -> None:
+        super().__post_init__()
         object.__setattr__(self, "pin_paths", tuple(self.pin_paths))
         if self.rate_hz is not None and self.rate_hz <= 0:
             raise ValueError(
@@ -317,8 +352,11 @@ class StagingSpec:
             for b in self.broadcasts]}
         if self.config is not None:
             reg = registry if registry is not None else ENGINES
+            params = {k: (v.to_dict() if isinstance(v, TopologyConfig)
+                          else v)
+                      for k, v in self.config.to_kw().items()}
             out["engine"] = {"name": reg.name_of(self.config),
-                             "params": self.config.to_kw()}
+                             "params": params}
         return json.dumps(out)
 
     @classmethod
@@ -467,6 +505,14 @@ class StagingClient:
         elif service is not None:
             self._service = service
 
+    @property
+    def planner(self) -> CollectivePlanner:
+        """The `repro.core.collectives.CollectivePlanner` bound to the
+        fabric's current topology — pure cost queries (``plan_*`` touches
+        no traffic counters). A per-call ``TopologyConfig`` on an engine
+        config rebinds it for that stage only."""
+        return self.fabric.net.planner
+
     # -- service plumbing ---------------------------------------------------
     @property
     def service(self):
@@ -562,8 +608,12 @@ class StagingClient:
         for entry in spec.broadcasts:
             if resolve:
                 from repro.core.iohook import resolve_manifest_timed
-                files, t_resolved, bcast = resolve_manifest_timed(
-                    self.fabric, entry.files, t)
+                # the manifest broadcast is part of the stage op: plan it
+                # under the config's topology too (None -> fabric binding)
+                with self.fabric.net.scoped_topology(
+                        getattr(config, "topology", None)):
+                    files, t_resolved, bcast = resolve_manifest_timed(
+                        self.fabric, entry.files, t)
                 t_meta += t_resolved - t - bcast     # glob phase only
                 t = t_resolved
             else:
@@ -654,7 +704,7 @@ class StagingClient:
                 "StreamConfig.window_bytes is required for an incremental "
                 "stream stager (there is no dataset to default it to)")
         stager = StreamStager(self.fabric, window_bytes=config.window_bytes,
-                              t0=t0)
+                              t0=t0, topology=config.topology)
         for p in config.pin_paths:
             stager.pin(p)
         return stager

@@ -14,7 +14,7 @@ reuse across human-in-the-loop cycles.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Set, Tuple
 
 import numpy as np
 
@@ -35,6 +35,7 @@ class TaskInputCache:
     _mem: Dict[str, Any] = field(default_factory=dict)
     _sizes: Dict[str, int] = field(default_factory=dict)
     _pins: Dict[str, int] = field(default_factory=dict)   # lease refcounts
+    _faulted: Set[str] = field(default_factory=set)       # ever faulted in
     hits: int = 0
     misses: int = 0
     read_time_charged: float = 0.0      # simulated seconds spent on misses
@@ -54,22 +55,36 @@ class TaskInputCache:
             return self._mem[path]
         raw = self.store.read(path)
         if raw is None:
+            if path in self._faulted:
+                # a path this cache HELD is now resident nowhere: the
+                # backing store force-dropped it (NodeLocalStore.drop
+                # clears its pins) — mirror that, or the stale pin would
+                # shield a later re-staged copy from capacity eviction
+                # forever. A pin placed AHEAD of first staging (never
+                # faulted) is live intent and survives.
+                self._pins.pop(path, None)
+                self._faulted.discard(path)
             return None
         self.misses += 1
         self.read_time_charged += raw.size / self.store.constants.local_read_bw
         val = deserialize(raw)
         self._put(path, val, raw.size)
+        self._faulted.add(path)
         return val
 
     def _put(self, path: str, val: Any, size: int) -> None:
         total = sum(self._sizes.values()) + size
-        while total > self.capacity_bytes:
-            victim = next((p for p in self._mem if p not in self._pins),
-                          None)                     # FIFO ~ LRU-ish, unpinned
-            if victim is None:
-                break                               # everything left is pinned
-            total -= self._sizes.pop(victim)
-            del self._mem[victim]
+        if total > self.capacity_bytes:
+            # one ordered sweep (FIFO ~ LRU-ish, unpinned): the seed
+            # restarted the victim generator per eviction — O(n) per
+            # victim, O(n^2) per put on a cold cache full of small entries
+            for victim in list(self._mem):
+                if total <= self.capacity_bytes:
+                    break
+                if victim in self._pins:
+                    continue
+                total -= self._sizes.pop(victim)
+                del self._mem[victim]
         self._mem[path] = val
         self._sizes[path] = size
 
@@ -83,6 +98,16 @@ class TaskInputCache:
         """Drop one pin reference; the entry becomes evictable once the
         last holder unpins. No-op when `path` is not pinned."""
         unpin_ref(self._pins, path)
+
+    def drop(self, path: str) -> None:
+        """Force-drop `path` from this cache, mirroring
+        `repro.core.fabric.NodeLocalStore.drop`: any pin refs go with the
+        entry (a forced drop must not leave stale pins that would shield
+        a later re-faulted copy). Pure bookkeeping — no time charged."""
+        self._mem.pop(path, None)
+        self._sizes.pop(path, None)
+        self._pins.pop(path, None)
+        self._faulted.discard(path)
 
     @property
     def resident_bytes(self) -> int:

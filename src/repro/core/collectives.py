@@ -1,0 +1,350 @@
+"""Collective planner: explicit algorithms over a hierarchical topology.
+
+The pre-topology ``Interconnect`` hardcoded ONE algorithm per collective
+(pipelined ring broadcast, ring all-gather) on ONE link class. This module
+makes the choice explicit: a :class:`CollectivePlanner` bound to a
+`repro.core.topology.Topology` plans each collective as a named algorithm,
+selects by message size and host count via the cost model (unless the
+topology pins an algorithm — :data:`~repro.core.topology.FLAT` pins the
+legacy rings as a numeric regression anchor), and accounts the wire bytes
+PER TIER, which is what a flat model cannot express.
+
+Algorithms:
+
+  broadcast   ``pipelined_ring``    — the legacy ring: the buffer streams
+                                      once at the bottleneck tier plus
+                                      (P-2) one-segment pipeline fills.
+              ``binomial_tree``     — ceil(log2 P) doubling rounds; the
+                                      first ceil(log2 R) rounds cross
+                                      racks. Wins for small messages.
+              ``scatter_allgather`` — van de Geijn: binomial scatter of
+                                      1/P shards, then a ring all-gather.
+              ``hierarchical``      — inter-rack binomial tree among rack
+                                      leaders + parallel intra-rack
+                                      pipelined rings. Collapses to the
+                                      flat ring on a single rack.
+  allgather   ``ring``              — the legacy P-1 step ring.
+              ``hierarchical``      — intra-rack ring, leader ring of
+                                      rack blocks, intra-rack broadcast
+                                      of the foreign blocks.
+  scatter     ``binomial``          — halving rounds down a binomial tree.
+              ``hierarchical``      — inter-rack binomial of rack blocks,
+                                      then intra-rack binomial.
+
+Planning is PURE (no counters touched): ``plan_*`` returns a
+:class:`CollectivePlan` with the duration and per-tier byte map;
+`repro.core.fabric.Interconnect` executes plans and accumulates traffic.
+All durations are SIMULATED seconds (`repro.core.fabric`), sizes bytes.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.topology import LinkTier, Topology
+
+TierBytes = Dict[str, int]
+
+
+@dataclass
+class CollectivePlan:
+    """One planned collective: the algorithm picked, its modeled duration
+    and the wire traffic it will put on each topology tier.
+
+    ``nbytes`` is the op's payload parameter (broadcast: message bytes;
+    allgather: per-host shard bytes; scatter: total bytes at the root).
+    """
+    op: str
+    algorithm: str
+    nbytes: int
+    n_hosts: int
+    time: float
+    tier_bytes: TierBytes = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        """Wire bytes summed over tiers (the legacy ``bytes_moved``)."""
+        return sum(self.tier_bytes.values())
+
+
+def _add(bytes_: TierBytes, tier: LinkTier, nbytes: int) -> None:
+    if nbytes:
+        bytes_[tier.name] = bytes_.get(tier.name, 0) + int(nbytes)
+
+
+class CollectivePlanner:
+    """Plans broadcast/allgather/scatter over one topology + calibration.
+
+    `topology` is the machine shape; `constants` any object with
+    ``link_bw``/``link_latency`` (a `repro.core.fabric.FabricConstants`)
+    that tiers with unset bandwidth/latency inherit — how :data:`FLAT`
+    reproduces every calibration's legacy numbers exactly.
+    """
+
+    def __init__(self, topology: Topology, constants) -> None:
+        self.topology = topology
+        self.constants = constants
+
+    # -- tier primitives ----------------------------------------------------
+    def _bw(self, tier: LinkTier, concurrent: int = 1) -> float:
+        """Effective per-transfer bandwidth: the link rate, shared under
+        the tier's bisection cap when `concurrent` transfers cross it."""
+        bw = tier.bw if tier.bw is not None else self.constants.link_bw
+        cap = tier.bisection_cap
+        if cap is not None:
+            bw = min(bw, cap / max(concurrent, 1))
+        return bw
+
+    def _lat(self, tier: LinkTier) -> float:
+        return (tier.latency if tier.latency is not None
+                else self.constants.link_latency)
+
+    def _xfer(self, tier: LinkTier, nbytes: int, concurrent: int = 1
+              ) -> float:
+        """Duration of `concurrent` simultaneous `nbytes` transfers
+        across `tier` (they overlap; the cap shares bandwidth)."""
+        return nbytes / self._bw(tier, concurrent) + self._lat(tier)
+
+    # -- shared building blocks ---------------------------------------------
+    def _ring_bcast_piece(self, nbytes: int, m: int, tier: LinkTier,
+                          concurrent: int = 1) -> float:
+        """Pipelined ring broadcast of `nbytes` over `m` hosts all on one
+        `tier`: stream once + (m-2) one-segment pipeline fills."""
+        if m <= 1:
+            return 0.0
+        seg = min(nbytes, self.topology.seg_bytes)
+        step = seg / self._bw(tier, concurrent) + self._lat(tier)
+        return (nbytes / self._bw(tier, concurrent) + (m - 2) * step
+                + self._lat(tier))
+
+    def _tree_rounds(self, m: int) -> int:
+        return int(math.ceil(math.log2(m))) if m > 1 else 0
+
+    def _binomial_piece(self, m: int, size_of_round: Callable[[int], int],
+                        tier_of_round: Callable[[int], Tuple[LinkTier, int]]
+                        ) -> Tuple[float, TierBytes]:
+        """Generic binomial schedule over `m` participants: round ``j``
+        has ``min(2^j, m - 2^j)`` transfers of ``size_of_round(j)`` bytes
+        on ``tier_of_round(j) -> (tier, crossing concurrency)``."""
+        time, bytes_ = 0.0, {}
+        for j in range(self._tree_rounds(m)):
+            transfers = min(1 << j, m - (1 << j))
+            size = size_of_round(j)
+            tier, conc = tier_of_round(j)
+            time += self._xfer(tier, size, concurrent=min(transfers, conc))
+            _add(bytes_, tier, transfers * size)
+        return time, bytes_
+
+    def _round_tiers(self, m: int, inter_rounds: int
+                     ) -> Callable[[int], Tuple[LinkTier, int]]:
+        """Round -> tier map: the first `inter_rounds` rounds (largest
+        strides) cross racks, the rest stay intra-rack."""
+        topo = self.topology
+
+        def tier_of(j: int) -> Tuple[LinkTier, int]:
+            if j < inter_rounds and topo.inter is not None:
+                return topo.inter, 1 << j
+            return topo.intra, 1
+        return tier_of
+
+    # -- broadcast algorithms -----------------------------------------------
+    def _bcast_pipelined_ring(self, nbytes: int, P: int
+                              ) -> Tuple[float, TierBytes]:
+        """The legacy ring generalized: rack-major host order, so P-1 hops
+        of which R-1 cross racks; the pipeline rate is set by the slowest
+        step (FLAT: exactly the pre-topology formula)."""
+        topo = self.topology
+        R, _ = topo.racks(P)
+        crossings = R - 1
+        seg = min(nbytes, topo.seg_bytes)
+        candidates: List[Tuple[LinkTier, int]] = [(topo.intra, 1)]
+        if crossings and topo.inter is not None:
+            candidates.append((topo.inter, crossings))
+        tier, conc = max(
+            candidates,
+            key=lambda tc: seg / self._bw(tc[0], tc[1]) + self._lat(tc[0]))
+        step = seg / self._bw(tier, conc) + self._lat(tier)
+        time = (nbytes / self._bw(tier, conc) + (P - 2) * step
+                + self._lat(tier))
+        bytes_: TierBytes = {}
+        _add(bytes_, topo.intra, (P - 1 - crossings) * nbytes)
+        if crossings and topo.inter is not None:
+            _add(bytes_, topo.inter, crossings * nbytes)
+        return time, bytes_
+
+    def _bcast_binomial_tree(self, nbytes: int, P: int
+                             ) -> Tuple[float, TierBytes]:
+        R, _ = self.topology.racks(P)
+        inter_rounds = self._tree_rounds(R)
+        return self._binomial_piece(P, lambda j: nbytes,
+                                    self._round_tiers(P, inter_rounds))
+
+    def _bcast_scatter_allgather(self, nbytes: int, P: int
+                                 ) -> Tuple[float, TierBytes]:
+        shard = -(-nbytes // P)
+        t_sc, b_sc = self._scatter_binomial(nbytes, P)
+        t_ag, b_ag = self._allgather_ring(shard, P)
+        for k, v in b_ag.items():
+            b_sc[k] = b_sc.get(k, 0) + v
+        return t_sc + t_ag, b_sc
+
+    def _bcast_hierarchical(self, nbytes: int, P: int
+                            ) -> Tuple[float, TierBytes]:
+        """Inter-rack binomial tree among rack leaders, then parallel
+        intra-rack pipelined rings. Single rack: exactly the flat ring."""
+        topo = self.topology
+        R, H = topo.racks(P)
+        if R <= 1 or topo.inter is None:
+            return self._bcast_pipelined_ring(nbytes, P)
+        t_tree, bytes_ = self._binomial_piece(
+            R, lambda j: nbytes, lambda j: (topo.inter, 1 << j))
+        t_ring = self._ring_bcast_piece(nbytes, H, topo.intra)
+        _add(bytes_, topo.intra, (P - R) * nbytes)
+        return t_tree + t_ring, bytes_
+
+    # -- allgather algorithms -----------------------------------------------
+    def _allgather_ring(self, shard: int, P: int) -> Tuple[float, TierBytes]:
+        """The legacy ring: P-1 steps, every host forwarding one shard;
+        with R racks, R of the P ring edges cross racks every step."""
+        topo = self.topology
+        R, _ = topo.racks(P)
+        crossings = R if R > 1 else 0
+        candidates: List[Tuple[LinkTier, int]] = [(topo.intra, 1)]
+        if crossings and topo.inter is not None:
+            candidates.append((topo.inter, crossings))
+        step = max(self._xfer(t, shard, concurrent=c) for t, c in candidates)
+        time = (P - 1) * step
+        bytes_: TierBytes = {}
+        _add(bytes_, topo.intra, (P - crossings) * (P - 1) * shard)
+        if crossings and topo.inter is not None:
+            _add(bytes_, topo.inter, crossings * (P - 1) * shard)
+        return time, bytes_
+
+    def _allgather_hierarchical(self, shard: int, P: int
+                                ) -> Tuple[float, TierBytes]:
+        """Intra-rack ring all-gather, leader ring of rack blocks, then
+        intra-rack broadcast of the foreign blocks. Single rack: the
+        flat ring."""
+        topo = self.topology
+        R, H = topo.racks(P)
+        if R <= 1 or topo.inter is None:
+            return self._allgather_ring(shard, P)
+        sizes = [H] * (P // H) + ([P % H] if P % H else [])
+        bytes_: TierBytes = {}
+        # phase 1: ring all-gather of `shard` inside every rack (parallel)
+        t1 = (H - 1) * self._xfer(topo.intra, shard)
+        _add(bytes_, topo.intra, sum(h * (h - 1) for h in sizes) * shard)
+        # phase 2: leader ring of rack blocks (every block crosses R-1x)
+        t2 = (R - 1) * self._xfer(topo.inter, H * shard, concurrent=R)
+        _add(bytes_, topo.inter, (R - 1) * P * shard)
+        # phase 3: broadcast the (P - h) foreign shards inside each rack;
+        # the shortest rack receives the most, so it bounds the phase
+        t3 = max(self._ring_bcast_piece((P - h) * shard, h, topo.intra)
+                 for h in set(sizes))
+        _add(bytes_, topo.intra,
+             sum((h - 1) * (P - h) for h in sizes) * shard)
+        return t1 + t2 + t3, bytes_
+
+    # -- scatter algorithms --------------------------------------------------
+    def _scatter_binomial(self, nbytes: int, P: int
+                          ) -> Tuple[float, TierBytes]:
+        """Halving rounds: round j moves ceil(n / 2^(j+1)) per transfer —
+        total (P-1)/P of the buffer through the root's link."""
+        R, _ = self.topology.racks(P)
+        inter_rounds = self._tree_rounds(R)
+        return self._binomial_piece(
+            P, lambda j: -(-nbytes // (1 << (j + 1))),
+            self._round_tiers(P, inter_rounds))
+
+    def _scatter_hierarchical(self, nbytes: int, P: int
+                              ) -> Tuple[float, TierBytes]:
+        topo = self.topology
+        R, H = topo.racks(P)
+        if R <= 1 or topo.inter is None:
+            return self._scatter_binomial(nbytes, P)
+        t1, b1 = self._binomial_piece(
+            R, lambda j: -(-nbytes // (1 << (j + 1))),
+            lambda j: (topo.inter, 1 << j))
+        block = -(-nbytes // R)
+        t2, b2 = self._binomial_piece(
+            H, lambda j: -(-block // (1 << (j + 1))),
+            lambda j: (topo.intra, 1))
+        for k, v in b2.items():
+            b1[k] = b1.get(k, 0) + v * R          # every rack scatters
+        return t1 + t2, b1
+
+    # -- planning entrypoints -----------------------------------------------
+    _ALGORITHMS: Dict[str, Dict[str, str]] = {
+        "broadcast": {"pipelined_ring": "_bcast_pipelined_ring",
+                      "binomial_tree": "_bcast_binomial_tree",
+                      "scatter_allgather": "_bcast_scatter_allgather",
+                      "hierarchical": "_bcast_hierarchical"},
+        "allgather": {"ring": "_allgather_ring",
+                      "hierarchical": "_allgather_hierarchical"},
+        "scatter": {"binomial": "_scatter_binomial",
+                    "hierarchical": "_scatter_hierarchical"},
+    }
+
+    def algorithms(self, op: str) -> List[str]:
+        """The algorithm names this planner knows for `op`."""
+        return list(self._ALGORITHMS[op])
+
+    def _plan(self, op: str, nbytes: int, n_hosts: int,
+              algorithm: Optional[str]) -> CollectivePlan:
+        if nbytes < 0:
+            raise ValueError(f"{op} payload must be >= 0 bytes, "
+                             f"got {nbytes}")
+        if op not in self._ALGORITHMS:
+            raise ValueError(f"unknown collective {op!r}; planner knows: "
+                             f"{', '.join(self._ALGORITHMS)}")
+        if n_hosts <= 1:
+            # a single host (or none) moves nothing — every algorithm
+            # degenerates to the empty plan
+            return CollectivePlan(op=op, algorithm=algorithm or "none",
+                                  nbytes=nbytes, n_hosts=n_hosts, time=0.0)
+        if algorithm is None:
+            algorithm = self.topology.pinned_algorithms.get(op)
+        table = self._ALGORITHMS[op]
+        if algorithm is not None:
+            if algorithm not in table:
+                raise ValueError(
+                    f"unknown {op} algorithm {algorithm!r}; available: "
+                    f"{', '.join(table)}")
+            names = [algorithm]
+        else:
+            names = list(table)
+        best: Optional[CollectivePlan] = None
+        for name in names:
+            time, bytes_ = getattr(self, table[name])(nbytes, n_hosts)
+            plan = CollectivePlan(op=op, algorithm=name, nbytes=nbytes,
+                                  n_hosts=n_hosts, time=time,
+                                  tier_bytes=bytes_)
+            if best is None or plan.time < best.time:
+                best = plan
+        return best
+
+    def plan_broadcast(self, nbytes: int, n_hosts: int,
+                       algorithm: Optional[str] = None) -> CollectivePlan:
+        """Plan a one-root broadcast of `nbytes` to `n_hosts` hosts."""
+        return self._plan("broadcast", nbytes, n_hosts, algorithm)
+
+    def plan_allgather(self, shard_bytes: int, n_hosts: int,
+                       algorithm: Optional[str] = None) -> CollectivePlan:
+        """Plan an all-gather where each host contributes `shard_bytes`."""
+        return self._plan("allgather", shard_bytes, n_hosts, algorithm)
+
+    def plan_scatter(self, total_bytes: int, n_hosts: int,
+                     algorithm: Optional[str] = None) -> CollectivePlan:
+        """Plan a root scatter of `total_bytes` into 1/P shards."""
+        return self._plan("scatter", total_bytes, n_hosts, algorithm)
+
+    def plan_point_to_point(self, nbytes: int) -> CollectivePlan:
+        """One off-machine message (detector NIC -> leader host) over the
+        topology's ingest tier."""
+        tier = self.topology.ingest_tier
+        plan = CollectivePlan(op="point_to_point", algorithm="direct",
+                              nbytes=nbytes, n_hosts=1,
+                              time=self._xfer(tier, nbytes))
+        _add(plan.tier_bytes, tier, nbytes)
+        return plan

@@ -190,14 +190,16 @@ def predict_stage_time(fabric: Fabric, nbytes: int, n_files: int) -> float:
     """Predicted simulated seconds to collectively stage a dataset of
     `nbytes` across `n_files` files — the eviction cost model (mirrors
     the ``stage_collective`` formula on an idle fabric, without touching
-    any traffic counters)."""
+    any traffic counters). The replication phase is PLANNED through the
+    fabric topology's `repro.core.collectives` planner (pure cost query),
+    so the prediction tracks whatever collective algorithm the fabric's
+    machine model would actually pick."""
     c = fabric.constants
     P = fabric.n_hosts
     t_read = (nbytes / c.fs_seq_bw + n_files * _coll_overhead(fabric)
               + c.fs_op_latency)
     stripe = max(1, (nbytes + P - 1) // P)
-    t_comm = 0.0 if P <= 1 else (P - 1) * (stripe / c.link_bw
-                                           + c.link_latency)
+    t_comm = fabric.net.planner.plan_allgather(stripe, P).time
     return t_read + t_comm + nbytes / c.local_bw
 
 

@@ -28,10 +28,14 @@ return the operation's completion time on the same clock.
 from __future__ import annotations
 
 import fnmatch
+from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
+
+from repro.core.collectives import CollectivePlan, CollectivePlanner
+from repro.core.topology import FLAT, Topology, TopologyLike, resolve_topology
 
 
 @dataclass
@@ -164,8 +168,12 @@ class SharedFilesystem:
         serializes bandwidth; per-request latencies overlap, so completion is
         last-byte time + one latency) but with O(1) Python cost — the staging
         hot path at P=1024+ hosts. Returns a zero-copy view spanning the
-        stripes' covered byte range.
+        stripes' covered byte range. An EMPTY stripe list (degenerate P
+        slicing) is a true no-op: nothing read, no latency charged, the
+        busy stream untouched.
         """
+        if not stripes:
+            return self.files[path][:0], t
         total = sum(sz for _, sz in stripes)
         bw = (self.constants.fs_seq_bw if coordinated
               else self.constants.fs_rand_bw)
@@ -212,8 +220,12 @@ class SharedFilesystem:
         :meth:`read_striped`). Time-model equivalent to one :meth:`write`
         per stripe (bandwidth serializes, per-request latencies overlap)
         at O(1) Python cost; the file's final content is installed whole.
-        Returns the completion time of the last stripe.
+        Returns the completion time of the last stripe. An EMPTY stripe
+        list (degenerate P slicing) is a true no-op: nothing written or
+        installed, no latency charged, the busy stream untouched.
         """
+        if not stripes:
+            return t
         buf = np.ascontiguousarray(data).view(np.uint8).ravel()
         total = sum(sz for _, sz in stripes)
         bw = (self.constants.fs_seq_bw if coordinated
@@ -229,46 +241,112 @@ class SharedFilesystem:
 
 @dataclass
 class Interconnect:
-    """Torus/ICI-style interconnect: per-host links, ring collectives.
+    """Topology-aware interconnect: executes planned collectives.
 
-    Methods return the DURATION (simulated s) of one collective/message and
-    account the wire traffic in ``bytes_moved``; callers place the duration
-    on their own timeline (collectives from disjoint host groups may
-    overlap, so there is no global busy stream here)."""
+    The algorithms live in `repro.core.collectives.CollectivePlanner`,
+    bound to this fabric's `repro.core.topology.Topology` (default:
+    :data:`~repro.core.topology.FLAT`, which pins the legacy ring
+    algorithms and inherits the calibration's link constants — bit-for-bit
+    the pre-topology accounting). Methods return the DURATION (simulated
+    s) of one collective/message and account the wire traffic in
+    ``bytes_moved`` (total) and ``tier_bytes`` (per topology tier);
+    callers place the duration on their own timeline (collectives from
+    disjoint host groups may overlap, so there is no global busy stream
+    here)."""
     constants: FabricConstants
+    topology: Topology = FLAT
     bytes_moved: int = 0
+    tier_bytes: Dict[str, int] = field(default_factory=dict)
 
-    def ring_allgather_time(self, shard_bytes: int, n_hosts: int) -> float:
-        """Duration (s) of a ring all-gather where each of `n_hosts` hosts
-        contributes `shard_bytes`: P-1 steps of one shard each. Wire
-        traffic accounted: ``shard_bytes * P * (P-1)``."""
-        if n_hosts <= 1:
-            return 0.0
-        c = self.constants
-        per_step = shard_bytes / c.link_bw + c.link_latency
-        self.bytes_moved += shard_bytes * (n_hosts - 1) * n_hosts
-        return per_step * (n_hosts - 1)
+    def __post_init__(self) -> None:
+        self._planner = CollectivePlanner(self.topology, self.constants)
 
-    def broadcast_time(self, nbytes: int, n_hosts: int) -> float:
-        """Duration (s) of a pipelined ring broadcast of `nbytes` from one
-        root to the other ``n_hosts - 1`` hosts: the buffer streams once
-        at link bandwidth plus (P-2) one-segment (1 MB) pipeline fills.
-        Wire traffic accounted: ``nbytes * (P-1)``."""
-        if n_hosts <= 1:
-            return 0.0
-        c = self.constants
-        self.bytes_moved += nbytes * (n_hosts - 1)
-        # pipelined ring: ~ nbytes/bw + (P-2) segment fills (segment = 1 MB)
-        seg = min(nbytes, 1 << 20)
-        return nbytes / c.link_bw + (n_hosts - 2) * (
-            seg / c.link_bw + c.link_latency) + c.link_latency
+    # -- topology binding ---------------------------------------------------
+    @property
+    def planner(self) -> CollectivePlanner:
+        """The collective planner bound to the current topology — use its
+        ``plan_*`` methods for PURE cost queries (no traffic accounted).
+        Rebuilt whenever ``topology`` changes, so assigning the field
+        directly is as good as :meth:`set_topology`."""
+        if self._planner.topology is not self.topology:
+            self._planner = CollectivePlanner(self.topology, self.constants)
+        return self._planner
+
+    def set_topology(self, topology: TopologyLike) -> None:
+        """Rebind the interconnect to `topology` (any loose spelling —
+        name, config, or instance). Traffic counters are kept; tier names
+        from the previous topology remain in ``tier_bytes``."""
+        self.topology = resolve_topology(topology)
+
+    @contextmanager
+    def scoped_topology(self, topology: TopologyLike) -> Iterator[None]:
+        """Temporarily rebind to `topology` for one staging operation
+        (how a per-call ``TopologyConfig`` on an engine config takes
+        effect); ``None`` keeps the current binding — a no-op."""
+        if topology is None:
+            yield
+            return
+        prev = self.topology
+        self.set_topology(topology)
+        try:
+            yield
+        finally:
+            self.topology = prev
+
+    # -- execution: plan + account ------------------------------------------
+    def execute(self, plan: CollectivePlan) -> float:
+        """Account `plan`'s wire traffic and return its duration."""
+        for tier, nbytes in plan.tier_bytes.items():
+            self.tier_bytes[tier] = self.tier_bytes.get(tier, 0) + nbytes
+        self.bytes_moved += plan.total_bytes
+        return plan.time
+
+    def tier_snapshot(self) -> Dict[str, int]:
+        """Copy of the per-tier counters (pair with :meth:`tier_delta`)."""
+        return dict(self.tier_bytes)
+
+    def tier_delta(self, snapshot: Dict[str, int]) -> Dict[str, int]:
+        """Per-tier bytes moved since `snapshot` (zero deltas dropped)."""
+        return {k: v - snapshot.get(k, 0) for k, v in self.tier_bytes.items()
+                if v - snapshot.get(k, 0)}
+
+    def broadcast(self, nbytes: int, n_hosts: int,
+                  algorithm: Optional[str] = None) -> float:
+        """Duration (s) of a one-root broadcast of `nbytes` to `n_hosts`
+        hosts, planned over the bound topology (algorithm selected by the
+        cost model unless pinned or given)."""
+        return self.execute(
+            self.planner.plan_broadcast(nbytes, n_hosts, algorithm))
+
+    def allgather(self, shard_bytes: int, n_hosts: int,
+                  algorithm: Optional[str] = None) -> float:
+        """Duration (s) of an all-gather where each of `n_hosts` hosts
+        contributes `shard_bytes`, planned over the bound topology."""
+        return self.execute(
+            self.planner.plan_allgather(shard_bytes, n_hosts, algorithm))
+
+    def scatter(self, total_bytes: int, n_hosts: int,
+                algorithm: Optional[str] = None) -> float:
+        """Duration (s) of a root scatter of `total_bytes` into 1/P
+        shards, planned over the bound topology."""
+        return self.execute(
+            self.planner.plan_scatter(total_bytes, n_hosts, algorithm))
 
     def point_to_point_time(self, nbytes: int) -> float:
-        """Duration (s) of one `nbytes` message over one link (also the
-        detector->leader ingest hop in `repro.core.streaming`)."""
-        c = self.constants
-        self.bytes_moved += nbytes
-        return nbytes / c.link_bw + c.link_latency
+        """Duration (s) of one `nbytes` off-machine message (the
+        detector->leader ingest hop in `repro.core.streaming`), charged
+        to the topology's ingest tier."""
+        return self.execute(self.planner.plan_point_to_point(nbytes))
+
+    # -- deprecated aliases (pre-topology names) ----------------------------
+    def ring_allgather_time(self, shard_bytes: int, n_hosts: int) -> float:
+        """Deprecated alias of :meth:`allgather` (the algorithm is now
+        planned, not hardwired to the ring)."""
+        return self.allgather(shard_bytes, n_hosts)
+
+    def broadcast_time(self, nbytes: int, n_hosts: int) -> float:
+        """Deprecated alias of :meth:`broadcast`."""
+        return self.broadcast(nbytes, n_hosts)
 
 
 @dataclass
@@ -364,13 +442,20 @@ class Host:
 
 
 class Fabric:
-    """A simulated cluster: P hosts x R ranks, shared FS, interconnect."""
+    """A simulated cluster: P hosts x R ranks, shared FS, interconnect.
+
+    `topology` shapes the interconnect (any loose spelling — a
+    `repro.core.topology.Topology`, a ``TopologyConfig``, or a canned
+    name like ``"bgq_torus"``); the default ``None`` is the FLAT
+    backward-compat machine."""
 
     def __init__(self, n_hosts: int, ranks_per_host: int = 16,
-                 constants: FabricConstants = BGQ):
+                 constants: FabricConstants = BGQ,
+                 topology: TopologyLike = None):
         self.constants = constants
         self.fs = SharedFilesystem(constants)
-        self.net = Interconnect(constants)
+        self.net = Interconnect(constants,
+                                topology=resolve_topology(topology))
         self.hosts = [Host(i, ranks_per_host,
                            NodeLocalStore(i, constants))
                       for i in range(n_hosts)]

@@ -56,7 +56,10 @@ class LeaderGroup:
         return result, self.broadcast_time(max(int(payload_bytes), 1))
 
     def broadcast_time(self, nbytes: int) -> float:
-        return self.fabric.net.broadcast_time(nbytes, self.fabric.n_hosts)
+        """Duration of one leader-group broadcast of `nbytes`, planned
+        over the fabric's topology (`repro.core.collectives`) and
+        accounted on the interconnect's per-tier counters."""
+        return self.fabric.net.broadcast(nbytes, self.fabric.n_hosts)
 
 
 def jax_leader_process(process_index: int, processes_per_host: int = 1) -> bool:

@@ -3,9 +3,13 @@
 Host-level (``stage_collective`` / ``stage_pipelined`` / ``stage_naive``):
 the MPI-IO ``MPI_File_read_all`` two-phase pattern over the simulated fabric.
 Leaders read disjoint 1/P stripes (aggregate FS traffic = 1x the dataset, at
-the coordinated sequential rate), then a ring all-gather replicates stripes
-to every node-local store. The naive baseline has every host read the full
-dataset uncoordinated — the paper's measured 21 GB/s vs 101 GB/s regime.
+the coordinated sequential rate), then a planned all-gather (algorithm
+selected by the fabric topology's `repro.core.collectives` planner — the
+legacy ring on the FLAT machine) replicates stripes to every node-local
+store. The naive baseline has every host read the full dataset
+uncoordinated — the paper's measured 21 GB/s vs 101 GB/s regime. Every
+engine takes ``topology=`` (any `repro.core.topology` spelling) to rebind
+the machine model for that call; reports carry per-tier wire traffic.
 ``stage_pipelined`` chunks the two phases and overlaps stripe reads with
 all-gather segments (double-buffered two-phase I/O), hiding most of the FS
 read time behind the interconnect.
@@ -26,8 +30,8 @@ All modes byte-exact: tests assert staged replicas equal the source.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,6 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.compat import shard_map
 from repro.core.fabric import Fabric
+from repro.core.topology import TopologyLike
 
 
 @dataclass
@@ -50,6 +55,9 @@ class StagingReport:
     fs_bytes: int = 0             # bytes actually read from shared FS
     fs_write_bytes: int = 0       # bytes written BACK to shared FS (stage_out)
     net_bytes: int = 0            # bytes moved on the interconnect
+    # interconnect bytes per topology tier (e.g. {"torus": ..., "optical":
+    # ...}; FLAT reports everything under "link") — sums to net_bytes
+    tier_bytes: Dict[str, int] = field(default_factory=dict)
     mode: str = "collective"      # collective|pipelined|naive|stream|stage_out
     n_chunks: int = 0             # pipelined: total all-gather segments
     overlap_saved: float = 0.0    # pipelined: phase time hidden by overlap
@@ -127,47 +135,55 @@ def _coll_overhead(fabric: Fabric) -> float:
         0.0, math.log2(max(fabric.n_hosts, 2)))
 
 
-def stage_collective(fabric: Fabric, paths: Sequence[str],
-                     t0: float = 0.0) -> Tuple[StagingReport, float]:
+def stage_collective(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
+                     topology: TopologyLike = None
+                     ) -> Tuple[StagingReport, float]:
     """MPI_File_read_all-style staging of `paths` to every node-local store.
 
     Phase 1 (Staging): leaders read disjoint stripes — coordinated.
-    Phase 2 (Write):   ring all-gather + local write -> full replica per node.
-    Returns (report, completion time).
+    Phase 2 (Write):   planned all-gather + local write -> full replica per
+    node (the algorithm comes from the fabric topology's collective
+    planner; `topology` rebinds it for this call). Returns (report,
+    completion time).
     """
-    P_ = fabric.n_hosts
-    fs0 = fabric.fs.bytes_read
-    net0 = fabric.net.bytes_moved
-    total = sum(fabric.fs.size(p) for p in paths)
-    rep = StagingReport(n_hosts=P_, total_bytes=total, mode="collective")
+    with fabric.net.scoped_topology(topology):
+        P_ = fabric.n_hosts
+        fs0 = fabric.fs.bytes_read
+        net0 = fabric.net.bytes_moved
+        tier0 = fabric.net.tier_snapshot()
+        total = sum(fabric.fs.size(p) for p in paths)
+        rep = StagingReport(n_hosts=P_, total_bytes=total, mode="collective")
 
-    coll_overhead = _coll_overhead(fabric)
-    t_read_done = t0
-    for path in paths:
-        size = fabric.fs.size(path)
-        # stripes are issued concurrently; FS serializes bandwidth only
-        _, t_file = fabric.fs.read_striped(path, _stripes(size, P_), t0,
-                                           coordinated=True)
-        t_read_done = max(t_read_done, t_file) + coll_overhead
-    rep.stage_time = t_read_done - t0
+        coll_overhead = _coll_overhead(fabric)
+        t_read_done = t0
+        for path in paths:
+            size = fabric.fs.size(path)
+            # stripes are issued concurrently; FS serializes bandwidth only
+            _, t_file = fabric.fs.read_striped(path, _stripes(size, P_), t0,
+                                               coordinated=True)
+            t_read_done = max(t_read_done, t_file) + coll_overhead
+        rep.stage_time = t_read_done - t0
 
-    # phase 2: ring all-gather of the (max) stripe, all hosts in parallel
-    stripe_bytes = max(1, (total + P_ - 1) // P_)
-    rep.comm_time = fabric.net.ring_allgather_time(stripe_bytes, P_)
+        # phase 2: all-gather of the (max) stripe, all hosts in parallel
+        stripe_bytes = max(1, (total + P_ - 1) // P_)
+        rep.comm_time = fabric.net.allgather(stripe_bytes, P_)
 
-    rep.write_time = _deliver_replicas(fabric, paths)
-    rep.fs_bytes = fabric.fs.bytes_read - fs0
-    rep.net_bytes = fabric.net.bytes_moved - net0
-    return rep, t0 + rep.total_time
+        rep.write_time = _deliver_replicas(fabric, paths)
+        rep.fs_bytes = fabric.fs.bytes_read - fs0
+        rep.net_bytes = fabric.net.bytes_moved - net0
+        rep.tier_bytes = fabric.net.tier_delta(tier0)
+        return rep, t0 + rep.total_time
 
 
 def stage_pipelined(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
-                    chunk_bytes: int = 8 << 20
+                    chunk_bytes: int = 8 << 20,
+                    topology: TopologyLike = None
                     ) -> Tuple[StagingReport, float]:
     """Two-phase collective staging with chunked read/all-gather overlap.
 
     Each file's striped read is split into segments of ~``chunk_bytes`` per
-    host; the ring all-gather of segment k runs while the leaders read
+    host; the all-gather of segment k (algorithm planned over the fabric
+    topology, or `topology` for this call) runs while the leaders read
     segment k+1 (double-buffered two-phase I/O). The critical path is
 
         t_comm[k] = max(t_comm[k-1], t_read[k]) + allgather(seg_k)
@@ -178,50 +194,58 @@ def stage_pipelined(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     identical to ``stage_collective``; ``net_bytes`` can exceed it by up to
     P * n_chunks bytes of per-segment ceil-rounding in the stripe sizes.
     """
-    P_ = fabric.n_hosts
-    fs0 = fabric.fs.bytes_read
-    net0 = fabric.net.bytes_moved
-    total = sum(fabric.fs.size(p) for p in paths)
-    rep = StagingReport(n_hosts=P_, total_bytes=total, mode="pipelined")
+    with fabric.net.scoped_topology(topology):
+        P_ = fabric.n_hosts
+        fs0 = fabric.fs.bytes_read
+        net0 = fabric.net.bytes_moved
+        tier0 = fabric.net.tier_snapshot()
+        total = sum(fabric.fs.size(p) for p in paths)
+        rep = StagingReport(n_hosts=P_, total_bytes=total, mode="pipelined")
 
-    coll_overhead = _coll_overhead(fabric)
-    t_read_done = t0     # leader read stream completion (incl. sync)
-    t_comm = t0          # ring all-gather stream
-    comm_total = 0.0
-    for path in paths:
-        size = fabric.fs.size(path)
-        per_host = max(1, (size + P_ - 1) // P_)
-        n_seg = max(1, (per_host + chunk_bytes - 1) // chunk_bytes)
-        t_seg = t0
-        for off, seg in _stripes(size, n_seg):       # file-range segments
-            # all reads issue at t0: fs.busy_until serializes the bandwidth
-            # and per-request latencies overlap, exactly as in
-            # stage_collective — per-file sync overheads accumulate in
-            # t_read_done OUTSIDE the busy stream, so stage_time matches
-            # the collective engine for the same paths
-            _, t_seg = fabric.fs.read_striped(
-                path, [(off + o, s) for o, s in _stripes(seg, P_)],
-                t0, coordinated=True)
-            seg_stripe = max(1, (seg + P_ - 1) // P_)
-            dt = fabric.net.ring_allgather_time(seg_stripe, P_)
-            comm_total += dt
-            t_comm = max(t_comm, t_seg) + dt         # gather rides behind
-            rep.n_chunks += 1
-        t_read_done = max(t_read_done, t_seg) + coll_overhead
-    rep.stage_time = t_read_done - t0
-    rep.comm_time = max(0.0, t_comm - t_read_done)   # exposed (unhidden)
-    rep.overlap_saved = comm_total - rep.comm_time
+        coll_overhead = _coll_overhead(fabric)
+        t_read_done = t0     # leader read stream completion (incl. sync)
+        t_comm = t0          # all-gather stream
+        comm_total = 0.0
+        for path in paths:
+            size = fabric.fs.size(path)
+            per_host = max(1, (size + P_ - 1) // P_)
+            n_seg = max(1, (per_host + chunk_bytes - 1) // chunk_bytes)
+            t_seg = t0
+            for off, seg in _stripes(size, n_seg):   # file-range segments
+                # all reads issue at t0: fs.busy_until serializes the
+                # bandwidth and per-request latencies overlap, exactly as
+                # in stage_collective — per-file sync overheads accumulate
+                # in t_read_done OUTSIDE the busy stream, so stage_time
+                # matches the collective engine for the same paths
+                _, t_seg = fabric.fs.read_striped(
+                    path, [(off + o, s) for o, s in _stripes(seg, P_)],
+                    t0, coordinated=True)
+                seg_stripe = max(1, (seg + P_ - 1) // P_)
+                dt = fabric.net.allgather(seg_stripe, P_)
+                comm_total += dt
+                t_comm = max(t_comm, t_seg) + dt     # gather rides behind
+                rep.n_chunks += 1
+            t_read_done = max(t_read_done, t_seg) + coll_overhead
+        rep.stage_time = t_read_done - t0
+        rep.comm_time = max(0.0, t_comm - t_read_done)   # exposed (unhidden)
+        rep.overlap_saved = comm_total - rep.comm_time
 
-    rep.write_time = _deliver_replicas(fabric, paths)
-    rep.fs_bytes = fabric.fs.bytes_read - fs0
-    rep.net_bytes = fabric.net.bytes_moved - net0
-    return rep, t0 + rep.total_time
+        rep.write_time = _deliver_replicas(fabric, paths)
+        rep.fs_bytes = fabric.fs.bytes_read - fs0
+        rep.net_bytes = fabric.net.bytes_moved - net0
+        rep.tier_bytes = fabric.net.tier_delta(tier0)
+        return rep, t0 + rep.total_time
 
 
-def stage_naive(fabric: Fabric, paths: Sequence[str],
-                t0: float = 0.0) -> Tuple[StagingReport, float]:
+def stage_naive(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
+                topology: TopologyLike = None
+                ) -> Tuple[StagingReport, float]:
     """Baseline: every host independently reads each full file from the
-    shared FS (uncoordinated — the congested regime), then writes locally."""
+    shared FS (uncoordinated — the congested regime), then writes locally.
+    `topology` is accepted for engine-protocol uniformity only: the naive
+    path never touches the interconnect, so no collective is planned and
+    the report's tier accounting stays empty."""
+    del topology                    # no collective to plan on this path
     P_ = fabric.n_hosts
     fs0 = fabric.fs.bytes_read
     total = sum(fabric.fs.size(p) for p in paths)
@@ -255,7 +279,8 @@ def _as_uint8(outputs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
 
 
 def stage_out(fabric: Fabric, outputs: Dict[str, np.ndarray],
-              t0: float = 0.0) -> Tuple[StagingReport, float]:
+              t0: float = 0.0, topology: TopologyLike = None
+              ) -> Tuple[StagingReport, float]:
     """Collective write-back: ``MPI_File_write_all`` over the fabric.
 
     `outputs` maps shared-FS destination paths to result buffers (any
@@ -271,7 +296,11 @@ def stage_out(fabric: Fabric, outputs: Dict[str, np.ndarray],
 
     Returns ``(report, completion time)``; the report's ``stage_time`` is
     the FS write phase and ``fs_write_bytes`` the bytes landed.
+    `topology` is accepted for engine-protocol uniformity only: each
+    leader already owns its stripe, so no collective is planned and the
+    tier accounting stays empty.
     """
+    del topology                    # no collective to plan on this path
     P_ = fabric.n_hosts
     w0 = fabric.fs.bytes_written
     bufs = _as_uint8(outputs)
@@ -291,12 +320,15 @@ def stage_out(fabric: Fabric, outputs: Dict[str, np.ndarray],
 
 
 def stage_out_naive(fabric: Fabric, outputs: Dict[str, np.ndarray],
-                    t0: float = 0.0) -> Tuple[StagingReport, float]:
+                    t0: float = 0.0, topology: TopologyLike = None
+                    ) -> Tuple[StagingReport, float]:
     """Baseline write-back: every host writes each FULL result file to the
     shared FS, uncoordinated (the congested regime — P x the bytes at
     ``fs_rand_bw``). Final file contents are identical to ``stage_out``;
     only the traffic and time differ, which is the comparison the
-    write-back benchmark measures."""
+    write-back benchmark measures. `topology` is accepted for
+    engine-protocol uniformity (no interconnect traffic either way)."""
+    del topology                    # no collective to plan on this path
     P_ = fabric.n_hosts
     w0 = fabric.fs.bytes_written
     bufs = _as_uint8(outputs)

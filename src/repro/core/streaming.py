@@ -53,6 +53,7 @@ import numpy as np
 from repro.core.fabric import (BGQ, Fabric, FabricConstants, pin_ref,
                                unpin_ref)
 from repro.core.staging import StagingReport, readonly_view
+from repro.core.topology import TopologyLike, resolve_topology
 
 
 @dataclass
@@ -86,6 +87,8 @@ class StreamReport:
     evictions: int = 0             # frames dropped from the sliding window
     peak_resident_bytes: int = 0   # high-water mark of the node window
     net_bytes: int = 0             # interconnect traffic (scatter+broadcast)
+    # interconnect bytes per topology tier (sums to net_bytes)
+    tier_bytes: Dict[str, int] = field(default_factory=dict)
     mode: str = "stream"
 
 
@@ -165,7 +168,7 @@ class StreamStager:
 
     def __init__(self, fabric: Fabric, window_bytes: int,
                  high_watermark: float = 0.9, low_watermark: float = 0.5,
-                 t0: float = 0.0):
+                 t0: float = 0.0, topology: TopologyLike = None):
         if not 0.0 < low_watermark <= high_watermark <= 1.0:
             raise ValueError("need 0 < low_watermark <= high_watermark <= 1")
         self.fabric = fabric
@@ -173,6 +176,10 @@ class StreamStager:
         self.high_watermark = high_watermark
         self.low_watermark = low_watermark
         self.t0 = t0
+        # per-stager machine-model override: every delivery collective is
+        # planned under this topology (None -> whatever the fabric runs)
+        self._topology = (None if topology is None
+                          else resolve_topology(topology))
         self.records: List[FrameRecord] = []
         self.stall_time = 0.0
         self.evictions = 0
@@ -183,6 +190,7 @@ class StreamStager:
         self._nic_busy = t0                     # detector link serialization
         self._bcast_busy = t0                   # broadcast ring serialization
         self._net0 = fabric.net.bytes_moved
+        self._tier0 = fabric.net.tier_snapshot()
 
     # -- window bookkeeping -------------------------------------------------
     def _resident_bytes(self) -> int:
@@ -259,10 +267,11 @@ class StreamStager:
         self.stall_time += stalled
 
         owner = len(self.records) % self.fabric.n_hosts
-        self._nic_busy = t_admit + net.point_to_point_time(nbytes)
-        t_bc = max(self._nic_busy, self._bcast_busy)
-        self._bcast_busy = t_bc + net.broadcast_time(nbytes,
-                                                     self.fabric.n_hosts)
+        with net.scoped_topology(self._topology):
+            self._nic_busy = t_admit + net.point_to_point_time(nbytes)
+            t_bc = max(self._nic_busy, self._bcast_busy)
+            self._bcast_busy = t_bc + net.broadcast(nbytes,
+                                                    self.fabric.n_hosts)
         t_avail = self._bcast_busy + nbytes / c.local_bw
 
         for host in self.fabric.hosts:
@@ -313,6 +322,7 @@ class StreamStager:
         rep.evictions = self.evictions
         rep.peak_resident_bytes = self.peak_resident
         rep.net_bytes = self.fabric.net.bytes_moved - self._net0
+        rep.tier_bytes = self.fabric.net.tier_delta(self._tier0)
         return rep
 
     def stage(self, source: DetectorSource, release_on_delivery: bool = False
@@ -338,7 +348,8 @@ class StreamStager:
 def stage_stream(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
                  rate_hz: Optional[float] = None,
                  window_bytes: Optional[int] = None,
-                 pin_paths: Sequence[str] = ()
+                 pin_paths: Sequence[str] = (),
+                 topology: TopologyLike = None
                  ) -> Tuple[StagingReport, float]:
     """I/O-hook-compatible streaming engine (``mode="stream"``).
 
@@ -360,7 +371,7 @@ def stage_stream(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     bounded = window_bytes is not None and window_bytes < total
     src = DetectorSource.replay_fs(fabric, paths, rate_hz=rate_hz, t0=t0)
     stager = StreamStager(fabric, window_bytes=window_bytes or max(total, 1),
-                          t0=t0)
+                          t0=t0, topology=topology)
     pin_set = set(pin_paths)
     for _, path, buf, t_emit in src:
         rec = stager.ingest(path, buf, t_emit)
@@ -377,6 +388,7 @@ def stage_stream(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     rep.comm_time = max(0.0, srep.ingest_makespan - rep.write_time)
     rep.fs_bytes = 0
     rep.net_bytes = srep.net_bytes
+    rep.tier_bytes = dict(srep.tier_bytes)
     rep.n_chunks = srep.n_frames
     return rep, t0 + srep.ingest_makespan
 

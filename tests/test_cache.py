@@ -113,3 +113,93 @@ def test_task_input_cache_pin_survives_capacity_eviction():
     store.write("d", np.ones(400, np.uint8), 0.0)
     cache.get("d")                        # now a is the FIFO victim
     assert "a" not in cache._mem
+
+
+def test_task_input_cache_eviction_sweep_is_linear():
+    """The capacity sweep walks the FIFO ONCE per put (the seed restarted
+    the victim scan per eviction — O(n^2) on a cold cache of small
+    entries): evicting k victims must not re-visit survivors."""
+    store = NodeLocalStore(0, BGQ)
+    n = 2000
+    for i in range(n):
+        store.write(f"f{i}", np.ones(10, np.uint8), 0.0)
+    store.write("big", np.ones(10 * n, np.uint8), 0.0)
+    cache = TaskInputCache(store, capacity_bytes=10 * n + 5)
+    for i in range(n):
+        cache.get(f"f{i}")
+
+    sweeps = {"n": 0}
+
+    class CountingPins(dict):
+        def __contains__(self, key):
+            sweeps["n"] += 1
+            return super().__contains__(key)
+
+    cache._pins = CountingPins()
+    cache.get("big")                      # must evict all n small entries
+    assert "big" in cache._mem
+    assert cache.resident_bytes <= 10 * n + 5
+    # one ordered sweep: ~n membership probes, not O(n^2)
+    assert sweeps["n"] <= n + 1
+
+
+def test_task_input_cache_drop_mirrors_store_drop_semantics():
+    """drop() takes the entry AND its pin refs with it, exactly like
+    NodeLocalStore.drop — a re-faulted copy starts unpinned."""
+    store = NodeLocalStore(0, BGQ)
+    store.write("a", np.ones(400, np.uint8), 0.0)
+    store.write("b", np.ones(400, np.uint8), 0.0)
+    cache = TaskInputCache(store, capacity_bytes=900)
+    cache.get("a")
+    cache.pin("a")
+    cache.pin("a")
+    cache.drop("a")
+    assert "a" not in cache._mem and "a" not in cache._pins
+    # re-faulted copy is unpinned: it evicts like any FIFO entry
+    cache.get("a")
+    cache.get("b")
+    store.write("c", np.ones(400, np.uint8), 0.0)
+    cache.get("c")
+    assert "a" not in cache._mem
+
+
+def test_task_input_cache_clears_stale_pin_after_forced_store_drop():
+    """A previously resident, pinned path force-dropped via the backing
+    store must not keep a stale pin: the next (missing-everywhere) lookup
+    clears it, so a later re-staged copy is NOT shielded from eviction by
+    the dead lease."""
+    store = NodeLocalStore(0, BGQ)
+    store.write("a", np.ones(400, np.uint8), 0.0)
+    store.write("x", np.ones(600, np.uint8), 0.0)
+    cache = TaskInputCache(store, capacity_bytes=900)
+    cache.get("a")                        # faulted in (resident here once)
+    cache.get("x")                        # capacity-evicts unpinned a
+    assert "a" not in cache._mem
+    cache.pin("a")                        # holder pins for reuse...
+    store.drop("a")                       # ...but the store force-drops it
+    assert cache.get("a") is None         # resident nowhere
+    assert "a" not in cache._pins         # stale pin cleared
+    # the re-staged copy behaves as unpinned
+    store.write("a", np.ones(400, np.uint8), 0.0)
+    store.write("b", np.ones(400, np.uint8), 0.0)
+    cache2 = TaskInputCache(store, capacity_bytes=900)
+    cache2.get("a"); cache2.get("x")
+    assert "a" not in cache2._mem         # FIFO victim, not shielded
+
+
+def test_task_input_cache_pin_ahead_of_first_fault_survives():
+    """Pinning a path BEFORE it is ever staged is live intent, not a
+    stale pin: probing get()s while the path is absent must not destroy
+    the refcount, and the eventual fault-in lands pinned."""
+    store = NodeLocalStore(0, BGQ)
+    cache = TaskInputCache(store, capacity_bytes=900)
+    cache.pin("a")
+    assert cache.get("a") is None         # not staged yet — probe
+    assert cache.get("a") is None
+    assert cache._pins.get("a") == 1      # refcount intact
+    store.write("a", np.ones(400, np.uint8), 0.0)
+    store.write("b", np.ones(400, np.uint8), 0.0)
+    store.write("c", np.ones(400, np.uint8), 0.0)
+    cache.get("a"); cache.get("b"); cache.get("c")
+    assert "a" in cache._mem              # pinned: b was the FIFO victim
+    assert "b" not in cache._mem

@@ -1,0 +1,472 @@
+"""Topology-aware fabric + collective planner.
+
+Covers the FLAT regression anchor (bit-for-bit the pre-topology ring
+accounting), planner edge cases (n_hosts in {1, 2}, zero-byte messages,
+single-rack collapse), cost monotonicity in P and nbytes, per-tier byte
+accounting, engine byte-exactness under every planner algorithm, and the
+TopologyConfig surface on the client API."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.api import (CollectiveConfig, PipelinedConfig, StagingClient,
+                            StagingSpec, BroadcastEntry, StreamConfig,
+                            TopologyConfig)
+from repro.core.collectives import CollectivePlanner
+from repro.core.fabric import BGQ, Fabric, Interconnect
+from repro.core.topology import (BGQ_TORUS, FLAT, TOPOLOGIES,
+                                 TPU_POD_ICI_DCN, LinkTier, Topology,
+                                 resolve_topology)
+from tests.hypothesis_compat import given, settings, st
+
+
+def legacy_broadcast(nbytes, P, c=BGQ):
+    """The pre-topology pipelined-ring broadcast closed form."""
+    if P <= 1:
+        return 0.0
+    seg = min(nbytes, 1 << 20)
+    return (nbytes / c.link_bw + (P - 2) * (seg / c.link_bw + c.link_latency)
+            + c.link_latency)
+
+
+def legacy_allgather(shard, P, c=BGQ):
+    """The pre-topology ring all-gather closed form."""
+    if P <= 1:
+        return 0.0
+    return (P - 1) * (shard / c.link_bw + c.link_latency)
+
+
+def make_fabric(n_hosts=4, n_files=3, size=1 << 14, topology=None, seed=0):
+    fab = Fabric(n_hosts=n_hosts, constants=BGQ, topology=topology)
+    rng = np.random.default_rng(seed)
+    paths = []
+    for i in range(n_files):
+        p = f"d/f{i}.bin"
+        fab.fs.put(p, rng.integers(0, 255, size, dtype=np.uint8))
+        paths.append(p)
+    return fab, paths
+
+
+# ---------------------------------------------------------------------------
+# FLAT: the numeric regression anchor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", [1, 2, 3, 17, 64, 4096])
+@pytest.mark.parametrize("nbytes", [0, 1, 12345, 32 << 20])
+def test_flat_matches_legacy_closed_forms(P, nbytes):
+    net = Interconnect(BGQ)                       # default topology: FLAT
+    assert net.topology is FLAT
+    assert net.broadcast(nbytes, P) == legacy_broadcast(nbytes, P)
+    assert net.allgather(nbytes, P) == legacy_allgather(nbytes, P)
+    assert (net.point_to_point_time(nbytes)
+            == nbytes / BGQ.link_bw + BGQ.link_latency)
+
+
+def test_flat_bytes_moved_matches_legacy_accounting():
+    net = Interconnect(BGQ)
+    net.broadcast(100, 8)
+    assert net.bytes_moved == 100 * 7
+    net.allgather(10, 8)
+    assert net.bytes_moved == 100 * 7 + 10 * 8 * 7
+    net.point_to_point_time(5)
+    assert net.bytes_moved == 100 * 7 + 10 * 8 * 7 + 5
+    # FLAT has one tier ("link"); it carries everything
+    assert net.tier_bytes == {"link": net.bytes_moved}
+
+
+def test_flat_single_host_moves_nothing():
+    net = Interconnect(BGQ)
+    assert net.broadcast(1 << 20, 1) == 0.0
+    assert net.allgather(1 << 20, 1) == 0.0
+    assert net.bytes_moved == 0 and net.tier_bytes == {}
+
+
+def test_deprecated_aliases_route_through_planner():
+    a, b = Interconnect(BGQ), Interconnect(BGQ)
+    assert a.broadcast_time(1 << 16, 8) == b.broadcast(1 << 16, 8)
+    assert a.ring_allgather_time(1 << 10, 8) == b.allgather(1 << 10, 8)
+    assert a.bytes_moved == b.bytes_moved
+
+
+# ---------------------------------------------------------------------------
+# planner edge cases
+# ---------------------------------------------------------------------------
+
+ALL_OPS = [("broadcast", "plan_broadcast"), ("allgather", "plan_allgather"),
+           ("scatter", "plan_scatter")]
+
+
+@pytest.mark.parametrize("topology", [FLAT, BGQ_TORUS, TPU_POD_ICI_DCN])
+@pytest.mark.parametrize("op,planfn", ALL_OPS)
+def test_single_host_plans_are_empty(topology, op, planfn):
+    planner = CollectivePlanner(topology, BGQ)
+    for P in (0, 1):
+        plan = getattr(planner, planfn)(1 << 20, P)
+        assert plan.time == 0.0 and plan.total_bytes == 0
+
+
+@pytest.mark.parametrize("topology", [FLAT, BGQ_TORUS, TPU_POD_ICI_DCN])
+@pytest.mark.parametrize("op,planfn", ALL_OPS)
+def test_two_hosts_every_algorithm_is_finite_and_positive(topology, op,
+                                                          planfn):
+    planner = CollectivePlanner(topology, BGQ)
+    for alg in planner.algorithms(op):
+        plan = getattr(planner, planfn)(1 << 16, 2, algorithm=alg)
+        assert plan.time > 0.0
+        assert plan.total_bytes > 0
+
+
+@pytest.mark.parametrize("topology", [FLAT, BGQ_TORUS, TPU_POD_ICI_DCN])
+@pytest.mark.parametrize("op,planfn", ALL_OPS)
+def test_zero_byte_messages_cost_latency_only(topology, op, planfn):
+    planner = CollectivePlanner(topology, BGQ)
+    for alg in planner.algorithms(op):
+        plan = getattr(planner, planfn)(0, 64, algorithm=alg)
+        assert plan.time >= 0.0
+        assert plan.total_bytes == 0
+        # latency-only: well under a bandwidth-bearing message's time
+        ref = getattr(planner, planfn)(1 << 25, 64, algorithm=alg)
+        assert plan.time < ref.time
+
+
+def test_unknown_algorithm_and_negative_bytes_raise():
+    planner = CollectivePlanner(BGQ_TORUS, BGQ)
+    with pytest.raises(ValueError, match="unknown broadcast algorithm"):
+        planner.plan_broadcast(1 << 20, 64, algorithm="bogus")
+    with pytest.raises(ValueError, match="must be >= 0"):
+        planner.plan_broadcast(-1, 64)
+
+
+def test_single_rack_topologies_collapse_to_the_flat_plan():
+    """hosts_per_rack >= P: the hierarchical algorithms degrade to
+    exactly the flat (single-tier) plans."""
+    single = Topology("single", hosts_per_rack=4096,
+                      intra=LinkTier("torus", 2e9, 2.5e-6),
+                      inter=LinkTier("optical", 2e9, 6e-6))
+    planner = CollectivePlanner(single, BGQ)
+    for P in (2, 17, 256):
+        h = planner.plan_broadcast(1 << 20, P, algorithm="hierarchical")
+        r = planner.plan_broadcast(1 << 20, P, algorithm="pipelined_ring")
+        assert h.time == r.time and h.tier_bytes == r.tier_bytes
+        h = planner.plan_allgather(1 << 12, P, algorithm="hierarchical")
+        r = planner.plan_allgather(1 << 12, P, algorithm="ring")
+        assert h.time == r.time and h.tier_bytes == r.tier_bytes
+        h = planner.plan_scatter(1 << 20, P, algorithm="hierarchical")
+        r = planner.plan_scatter(1 << 20, P, algorithm="binomial")
+        assert h.time == r.time and h.tier_bytes == r.tier_bytes
+
+
+# ---------------------------------------------------------------------------
+# cost monotonicity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", [FLAT, BGQ_TORUS, TPU_POD_ICI_DCN])
+@pytest.mark.parametrize("op,planfn", ALL_OPS)
+def test_cost_monotone_in_nbytes(topology, op, planfn):
+    planner = CollectivePlanner(topology, BGQ)
+    for P in (2, 64, 4096):
+        prev = -1.0
+        for n in (0, 1, 1 << 10, 1 << 16, 1 << 20, 1 << 25):
+            t = getattr(planner, planfn)(n, P).time
+            assert t >= prev, (op, P, n)
+            prev = t
+
+
+@pytest.mark.parametrize("topology", [FLAT, BGQ_TORUS, TPU_POD_ICI_DCN])
+@pytest.mark.parametrize("op,planfn", ALL_OPS)
+def test_cost_monotone_in_hosts(topology, op, planfn):
+    planner = CollectivePlanner(topology, BGQ)
+    prev = -1.0
+    for P in (1, 2, 4, 16, 64, 256, 1024, 4096, 8192):
+        t = getattr(planner, planfn)(1 << 20, P).time
+        assert t >= prev, (op, P)
+        prev = t
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(min_value=0, max_value=1 << 26),
+       delta=st.integers(min_value=0, max_value=1 << 20),
+       P=st.integers(min_value=1, max_value=8192))
+def test_broadcast_cost_monotone_in_nbytes_property(n, delta, P):
+    planner = CollectivePlanner(BGQ_TORUS, BGQ)
+    assert (planner.plan_broadcast(n + delta, P).time
+            >= planner.plan_broadcast(n, P).time)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(min_value=0, max_value=1 << 26),
+       P=st.integers(min_value=1, max_value=4096))
+def test_auto_selection_never_beats_itself_property(n, P):
+    """The auto-selected plan is the argmin over explicit algorithms."""
+    planner = CollectivePlanner(TPU_POD_ICI_DCN, BGQ)
+    auto = planner.plan_broadcast(n, P)
+    for alg in planner.algorithms("broadcast"):
+        assert auto.time <= planner.plan_broadcast(n, P,
+                                                   algorithm=alg).time
+
+
+# ---------------------------------------------------------------------------
+# per-tier accounting + the hierarchical win
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op,planfn", ALL_OPS)
+def test_tier_bytes_sum_to_total_and_name_real_tiers(op, planfn):
+    planner = CollectivePlanner(BGQ_TORUS, BGQ)
+    for alg in planner.algorithms(op):
+        plan = getattr(planner, planfn)(1 << 22, 2048, algorithm=alg)
+        assert sum(plan.tier_bytes.values()) == plan.total_bytes
+        assert set(plan.tier_bytes) <= set(BGQ_TORUS.tier_names())
+
+
+def test_broadcast_ring_and_hierarchical_move_identical_total_bytes():
+    """Both deliver n bytes to P-1 hosts: (P-1) * n on the wire, split
+    across tiers differently."""
+    planner = CollectivePlanner(BGQ_TORUS, BGQ)
+    n, P = 1 << 22, 2048
+    ring = planner.plan_broadcast(n, P, algorithm="pipelined_ring")
+    hier = planner.plan_broadcast(n, P, algorithm="hierarchical")
+    assert ring.total_bytes == hier.total_bytes == (P - 1) * n
+    assert hier.tier_bytes["optical"] < hier.tier_bytes["torus"]
+
+
+@pytest.mark.parametrize("P", [4096, 8192])
+def test_hierarchical_broadcast_beats_flat_ring_at_scale(P):
+    """The tentpole claim: at P >= 4096 the hierarchical plan (and the
+    auto selection) demonstrably beat the flat pipelined ring."""
+    planner = CollectivePlanner(BGQ_TORUS, BGQ)
+    flat = planner.plan_broadcast(32 << 20, P, algorithm="pipelined_ring")
+    hier = planner.plan_broadcast(32 << 20, P, algorithm="hierarchical")
+    auto = planner.plan_broadcast(32 << 20, P)
+    assert hier.time < flat.time
+    assert auto.time <= hier.time
+
+
+def test_interconnect_tier_counters_accumulate_plans():
+    net = Interconnect(BGQ, topology=BGQ_TORUS)
+    net.broadcast(1 << 20, 2048)
+    net.allgather(1 << 10, 2048)
+    assert sum(net.tier_bytes.values()) == net.bytes_moved
+    snap = net.tier_snapshot()
+    net.broadcast(1 << 16, 2048)
+    delta = net.tier_delta(snap)
+    assert sum(delta.values()) == (1 << 16) * 2047
+
+
+# ---------------------------------------------------------------------------
+# engines under topologies: byte-exact, FLAT parity, per-tier reports
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["collective", "pipelined", "stream"])
+@pytest.mark.parametrize("topology", ["bgq_torus", "tpu_pod_ici_dcn"])
+def test_engines_byte_exact_under_hierarchical_topologies(mode, topology):
+    from repro.core.api import ENGINES
+    fab, paths = make_fabric(n_hosts=6)
+    rep, t = ENGINES.stage_fn(mode)(fab, paths, 0.0, topology=topology)
+    assert t > 0.0
+    assert sum(rep.tier_bytes.values()) == rep.net_bytes
+    for host in fab.hosts:
+        for p in paths:
+            assert np.array_equal(host.store.data[p], fab.fs.files[p])
+
+
+@pytest.mark.parametrize("alg", ["pipelined_ring", "binomial_tree",
+                                 "scatter_allgather", "hierarchical"])
+def test_stream_delivery_byte_exact_under_every_broadcast_algorithm(alg):
+    """Replica data is independent of the planned algorithm — pin each
+    broadcast algorithm via a custom topology and check delivery."""
+    topo = Topology(f"pin_{alg}", hosts_per_rack=2,
+                    intra=LinkTier("torus", 2e9, 2.5e-6),
+                    inter=LinkTier("optical", 2e9, 6e-6),
+                    pinned_algorithms={"broadcast": alg})
+    fab, paths = make_fabric(n_hosts=6)
+    from repro.core.streaming import stage_stream
+    rep, _ = stage_stream(fab, paths, topology=topo)
+    assert rep.fs_bytes == 0
+    for host in fab.hosts:
+        for p in paths:
+            assert np.array_equal(host.store.data[p], fab.fs.files[p])
+
+
+def test_engine_flat_topology_reproduces_default_accounting():
+    """topology=FLAT (explicit, via name, or via config) is the regression
+    anchor: identical simulated accounting to a default run."""
+    results = []
+    for topo in (None, "flat", TopologyConfig("flat")):
+        fab, paths = make_fabric(n_hosts=8)
+        rep, t = __import__("repro.core.staging", fromlist=["x"]) \
+            .stage_collective(fab, paths, 0.0, topology=topo)
+        results.append((rep.stage_time, rep.comm_time, rep.write_time,
+                        rep.fs_bytes, rep.net_bytes, t))
+    assert results[0] == results[1] == results[2]
+
+
+def test_direct_topology_assignment_rebinds_the_planner():
+    """`net.topology` is a public field: assigning it directly must take
+    effect on the next plan (no stale cached planner)."""
+    net = Interconnect(BGQ)
+    flat_t = net.broadcast(32 << 20, 8192)
+    net.topology = BGQ_TORUS
+    assert net.planner.topology is BGQ_TORUS
+    assert net.broadcast(32 << 20, 8192) < flat_t     # hierarchical plan
+    assert set(net.tier_bytes) >= {"link", "torus"}   # both bindings used
+
+
+def test_scoped_topology_restores_binding_and_none_is_noop():
+    fab, _ = make_fabric(n_hosts=4)
+    assert fab.net.topology is FLAT
+    with fab.net.scoped_topology("bgq_torus"):
+        assert fab.net.topology.name == "bgq_torus"
+        with fab.net.scoped_topology(None):       # no-op nesting
+            assert fab.net.topology.name == "bgq_torus"
+    assert fab.net.topology is FLAT
+
+
+def test_predict_stage_time_tracks_fabric_topology():
+    """The eviction cost model plans through the fabric topology: FLAT
+    reproduces the legacy closed form; a hierarchical machine differs."""
+    from repro.core.datasvc import predict_stage_time
+    from repro.core.staging import _coll_overhead
+    fab = Fabric(n_hosts=64, constants=BGQ)
+    nbytes, n_files = 1 << 24, 4
+    c = BGQ
+    stripe = max(1, (nbytes + 63) // 64)
+    expect = (nbytes / c.fs_seq_bw + n_files * _coll_overhead(fab)
+              + c.fs_op_latency
+              + legacy_allgather(stripe, 64)
+              + nbytes / c.local_bw)
+    assert predict_stage_time(fab, nbytes, n_files) == pytest.approx(expect)
+    fab_t = Fabric(n_hosts=64, constants=BGQ, topology=BGQ_TORUS)
+    assert predict_stage_time(fab_t, nbytes, n_files) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# TopologyConfig on the client API
+# ---------------------------------------------------------------------------
+
+def test_topology_config_validation():
+    with pytest.raises(ValueError, match="unknown topology"):
+        TopologyConfig("not_a_machine")
+    with pytest.raises(ValueError, match="hosts_per_rack"):
+        TopologyConfig("bgq_torus", hosts_per_rack=0)
+    cfg = TopologyConfig("bgq_torus", hosts_per_rack=128)
+    assert cfg.resolve().hosts_per_rack == 128
+    assert cfg.resolve().intra.name == "torus"
+    assert resolve_topology(None) is FLAT
+    assert resolve_topology("tpu_pod_ici_dcn") is TPU_POD_ICI_DCN
+    assert set(TOPOLOGIES) >= {"flat", "bgq_torus", "tpu_pod_ici_dcn"}
+
+
+def test_engine_config_coerces_loose_topology_spellings():
+    a = CollectiveConfig(topology="bgq_torus")
+    b = CollectiveConfig(topology=TopologyConfig("bgq_torus"))
+    c = CollectiveConfig(topology={"name": "bgq_torus"})
+    d = CollectiveConfig(topology=BGQ_TORUS)
+    assert a == b == c == d
+    assert isinstance(a.topology, TopologyConfig)
+
+
+def test_coerce_keeps_canned_instance_overrides_or_refuses():
+    """A customized canned Topology must not silently coerce back to the
+    stock instance: config-representable overrides are kept, anything
+    else (tier edits, unregistered machines) refuses loudly."""
+    from dataclasses import replace
+    custom = replace(BGQ_TORUS, hosts_per_rack=128)
+    cfg = TopologyConfig.coerce(custom)
+    assert cfg.hosts_per_rack == 128
+    assert cfg.resolve() == custom
+    with pytest.raises(ValueError, match="cannot carry"):
+        TopologyConfig.coerce(replace(
+            BGQ_TORUS, intra=LinkTier("torus", 1e9, 1e-6)))
+    with pytest.raises(ValueError, match="not the registered"):
+        TopologyConfig.coerce(Topology("homegrown"))
+
+
+def test_stream_stager_honors_config_topology():
+    """The incremental driver plans delivery under the config's topology,
+    exactly like the one-shot stream engine."""
+    fab, paths = make_fabric(n_hosts=4, size=1 << 12)
+    fab2, _ = make_fabric(n_hosts=4, size=1 << 12)
+    client = StagingClient(fab)
+    cfg = StreamConfig(window_bytes=1 << 20, topology="tpu_pod_ici_dcn")
+    stager = client.stream_stager(cfg)
+    for p in paths:
+        stager.ingest(p, fab.fs.files[p], 0.0)
+    rep = stager.finish()
+    assert set(rep.tier_bytes) <= {"ici", "dcn"}
+    assert sum(rep.tier_bytes.values()) == rep.net_bytes
+    # FLAT control: same frames, default binding -> "link" tier
+    flat = StagingClient(fab2).stream_stager(
+        StreamConfig(window_bytes=1 << 20))
+    for p in paths:
+        flat.ingest(p, fab2.fs.files[p], 0.0)
+    assert set(flat.finish().tier_bytes) == {"link"}
+
+
+def test_spec_json_round_trips_topology_config():
+    spec = StagingSpec(
+        [BroadcastEntry(("d/*.bin",))],
+        config=PipelinedConfig(chunk_bytes=1 << 12,
+                               topology=TopologyConfig("tpu_pod_ici_dcn",
+                                                       hosts_per_rack=32)))
+    text = spec.to_json()
+    json.loads(text)                              # valid JSON all the way
+    assert StagingSpec.from_json(text) == spec
+
+
+def test_client_stage_with_topology_config_byte_exact_and_tiered():
+    fab, paths = make_fabric(n_hosts=6)
+    rep = StagingClient(fab).stage(
+        "d/*.bin", CollectiveConfig(topology=TopologyConfig(
+            "bgq_torus", hosts_per_rack=2)))
+    assert rep.resolved_files == paths
+    r = rep.reports[0]
+    assert sum(r.tier_bytes.values()) == r.net_bytes
+    assert set(r.tier_bytes) <= {"torus", "optical"}
+    for host in fab.hosts:
+        for p in paths:
+            assert np.array_equal(host.store.data[p], fab.fs.files[p])
+    assert fab.net.topology is FLAT               # binding restored
+
+
+def test_client_planner_property_is_pure():
+    fab, _ = make_fabric(n_hosts=4)
+    client = StagingClient(fab)
+    plan = client.planner.plan_broadcast(1 << 20, 4)
+    assert plan.time > 0.0
+    assert fab.net.bytes_moved == 0               # planning accounts nothing
+
+
+def test_stream_config_carries_topology_to_the_stager():
+    fab, paths = make_fabric(n_hosts=4, size=1 << 12)
+    client = StagingClient(fab)
+    rep = client.stage("d/*.bin", StreamConfig(topology="bgq_torus"))
+    r = rep.reports[0]
+    assert r.fs_bytes == 0 and sum(r.tier_bytes.values()) == r.net_bytes
+    for host in fab.hosts:
+        for p in paths:
+            assert np.array_equal(host.store.data[p], fab.fs.files[p])
+
+
+# ---------------------------------------------------------------------------
+# satellite: degenerate-stripe no-ops on the shared FS
+# ---------------------------------------------------------------------------
+
+def test_read_striped_empty_stripe_list_is_a_true_noop():
+    fab, paths = make_fabric(n_hosts=2)
+    fab.fs.busy_until = 1.0
+    view, t = fab.fs.read_striped(paths[0], [], t=5.0)
+    assert t == 5.0                               # no latency charged
+    assert view.size == 0
+    assert fab.fs.busy_until == 1.0               # busy stream untouched
+    assert fab.fs.bytes_read == 0 and fab.fs.read_requests == 0
+
+
+def test_write_gather_empty_stripe_list_is_a_true_noop():
+    fab, _ = make_fabric(n_hosts=2)
+    fab.fs.busy_until = 1.0
+    t = fab.fs.write_gather("out/x.bin", np.ones(16, np.uint8), [], t=5.0)
+    assert t == 5.0
+    assert "out/x.bin" not in fab.fs.files        # nothing installed
+    assert fab.fs.busy_until == 1.0
+    assert fab.fs.bytes_written == 0 and fab.fs.write_requests == 0
