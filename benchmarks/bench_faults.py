@@ -1,0 +1,284 @@
+"""Fault-tolerance benchmark: repair vs full re-stage, degraded goodput.
+
+All numbers here are SIMULATED accounting (the discrete-event cost model
+moves real bytes but charges simulated seconds), so every row is
+deterministic and the whole benchmark doubles as a parity check:
+
+  * ``zero_fault_anchor`` — the P=1024 collective staging run with an
+    (empty) ``FaultSchedule`` attached to the fabric must reproduce the
+    recorded ``BENCH_staging.json`` sim accounting EXACTLY. The fault
+    machinery is strictly additive; this row proves it.
+  * ``repair_vs_restage`` — R=2 chained-declustered residency at
+    P in {1024, 4096}: kill one host, repair with ``re_replicate``
+    (moves only the lost stripes) vs bringing the dataset back through
+    the shared FS. Asserts repair is cheaper in both simulated seconds
+    and wire bytes at every P.
+  * ``service_flow`` — a leased dataset on the staging service goes
+    RESIDENT -> DEGRADED (host death) -> RESIDENT (acquire-triggered
+    repair); records the service's repair accounting.
+  * ``goodput`` — the same staging job healthy, with a what-if host
+    death (``FaultConfig``), and with a degraded-link window: effective
+    goodput (dataset bytes / simulated completion) per scenario.
+
+Emits ``BENCH_faults.json`` next to this file and returns harness CSV
+rows via :func:`rows` (wired into ``benchmarks.run --faults``).
+``--quick`` recomputes every row and asserts exact equality with the
+recorded baseline — the CI sim-parity smoke.
+
+Run directly:  PYTHONPATH=src python -m benchmarks.bench_faults [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+Row = Tuple[str, float, str]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_faults.json")
+STAGING_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_staging.json")
+
+API_PATH = "client"
+
+ANCHOR_HOSTS = 1024                  # must exist in BENCH_staging.json
+REPAIR_HOSTS = (1024, 4096)
+REPLICATION = 2
+STAGE_FILES = 4
+STAGE_FILE_BYTES = 32 << 20          # same dataset as bench_staging
+
+
+def _make_fabric(n_hosts, faults=None):
+    from repro.core.fabric import BGQ, Fabric
+    fab = Fabric(n_hosts=n_hosts, constants=BGQ, faults=faults)
+    rng = np.random.default_rng(0)
+    blob = rng.integers(0, 255, STAGE_FILE_BYTES, dtype=np.uint8)
+    paths = []
+    for i in range(STAGE_FILES):
+        fab.fs.put(f"d/{i}.bin", blob)
+        paths.append(f"d/{i}.bin")
+    return fab, paths
+
+
+def bench_zero_fault_anchor() -> dict:
+    """The PR-invariant: an attached-but-empty fault schedule changes
+    NOTHING. Recomputes the P=1024 FLAT staging sim accounting on a
+    fabric that carries a trivial ``FaultSchedule`` and asserts it is
+    bit-exact against the recorded ``BENCH_staging.json`` baseline."""
+    from benchmarks.bench_staging import _check_replicas, _sim_dict
+    from repro.core.api import (BroadcastEntry, CollectiveConfig,
+                                StagingClient, StagingSpec)
+    from repro.core.faults import FaultSchedule
+    fab, paths = _make_fabric(ANCHOR_HOSTS, faults=FaultSchedule())
+    spec = StagingSpec([BroadcastEntry(tuple(paths), pin=False)])
+    rep = StagingClient(fab).stage(spec, CollectiveConfig(), resolve=False)
+    _check_replicas(fab, paths)
+    sim = _sim_dict(rep)
+    with open(STAGING_JSON) as f:
+        base = json.load(f)
+    recorded = next(s["sim"] for s in base["staging"]
+                    if s["name"] == f"stage_collective_P{ANCHOR_HOSTS}")
+    assert sim == recorded, (
+        f"zero-fault schedule is NOT bit-exact at P={ANCHOR_HOSTS}:\n"
+        f"  recorded: {recorded}\n  computed: {sim}")
+    return {"name": f"zero_fault_anchor_P{ANCHOR_HOSTS}",
+            "baseline": os.path.basename(STAGING_JSON),
+            "bit_exact": True, "sim": sim}
+
+
+def bench_repair_vs_restage() -> List[dict]:
+    """Self-healing headline: after one host death, ``re_replicate``
+    (copy only the lost stripes from surviving replicas) vs a full
+    re-stage of the dataset through the shared FS."""
+    from repro.core.staging import re_replicate, stage_replicated
+    out = []
+    for hosts in REPAIR_HOSTS:
+        fab, paths = _make_fabric(hosts)
+        rep, t0 = stage_replicated(fab, paths, replication=REPLICATION)
+        victim = hosts // 2
+        fab.kill_host(victim, t0 + 1.0)
+        fix, _ = re_replicate(fab, paths, rep.placement, t0=t0 + 1.0,
+                              live=fab.live_ids(t0 + 1.0))
+        # the alternative: bring the whole dataset back from the FS
+        fab2, paths2 = _make_fabric(hosts)
+        restage, _ = stage_replicated(fab2, paths2,
+                                      replication=REPLICATION)
+        assert fix.total_time < restage.total_time, (
+            f"repair did not beat a full re-stage at P={hosts}")
+        assert fix.net_bytes < restage.net_bytes
+        out.append({
+            "name": f"repair_vs_restage_P{hosts}",
+            "replication": REPLICATION,
+            "dataset_bytes": STAGE_FILES * STAGE_FILE_BYTES,
+            "repair_s": fix.total_time,
+            "restage_s": restage.total_time,
+            "repair_bytes": fix.net_bytes,
+            "restage_bytes": restage.net_bytes,
+            "speedup": restage.total_time / fix.total_time,
+            "repair_wins": True,
+        })
+    return out
+
+
+def bench_service_flow() -> dict:
+    """The catalog's self-healing path end to end: leased dataset, host
+    death mid-residency, next acquire repairs instead of wedging."""
+    from repro.core.api import ReplicatedConfig
+    from repro.core.datasvc import DatasetState, StagingService
+    fab, paths = _make_fabric(256)
+    svc = StagingService(fab, budget_bytes=1 << 30,
+                         engine=ReplicatedConfig(replication=REPLICATION))
+    svc.register("scan", paths=paths, t=0.0)
+    l1 = svc.acquire("alice", "scan", 0.0)
+    svc.fail_host(17, l1.t_ready + 1.0)
+    entry = svc.catalog["scan"]
+    degraded = entry.state is DatasetState.DEGRADED
+    l2 = svc.acquire("bob", "scan", l1.t_ready + 2.0)
+    assert degraded and entry.state is DatasetState.RESIDENT
+    assert svc.stats.repairs == 1
+    assert entry.acquires == (entry.stage_count + entry.coalesced
+                              + entry.hits + entry.repairs)
+    return {
+        "name": "service_degraded_flow_P256",
+        "stage_s": svc.stats.stage_time,
+        "repair_s": svc.stats.repair_time,
+        "repaired_bytes": svc.stats.repaired_bytes,
+        "dataset_bytes": entry.nbytes,
+        "lease_survived": True,
+        "repair_vs_stage": svc.stats.repair_time / svc.stats.stage_time,
+    }
+
+
+def bench_goodput() -> List[dict]:
+    """Effective staging goodput under injected failure scenarios (all
+    what-if ``FaultConfig`` overlays on twin fabrics): healthy, one host
+    dead from t=0, and a half-bandwidth window on every tier."""
+    from repro.core.api import (BroadcastEntry, CollectiveConfig,
+                                FaultConfig, StagingClient, StagingSpec)
+    nbytes = STAGE_FILES * STAGE_FILE_BYTES
+    scenarios = [
+        ("healthy", None),
+        ("one_host_dead", FaultConfig(host_deaths=((0.0, 7),))),
+        ("link_degraded_50pct",
+         FaultConfig(degradations=(("link", 0.0, 1e9, 0.5),))),
+    ]
+    out = []
+    for label, faults in scenarios:
+        fab, paths = _make_fabric(64)
+        spec = StagingSpec([BroadcastEntry(tuple(paths), pin=False)])
+        cfg = CollectiveConfig(faults=faults)
+        rep = StagingClient(fab).stage(spec, cfg, resolve=False)
+        out.append({
+            "name": f"goodput_{label}_P64",
+            "total_s": rep.total_time,
+            "goodput_gbps": nbytes / rep.total_time / 1e9,
+        })
+    healthy = out[0]["total_s"]
+    assert out[2]["total_s"] > healthy, "degraded link did not cost time"
+    assert out[1]["total_s"] != healthy, "dead host left the plan untouched"
+    return out
+
+
+def run_benchmarks() -> dict:
+    from repro.core.fabric import BGQ
+    report = {
+        "calibration": BGQ.name, "api_path": API_PATH,
+        "zero_fault_anchor": bench_zero_fault_anchor(),
+        "repair_vs_restage": bench_repair_vs_restage(),
+        "service_flow": bench_service_flow(),
+        "goodput": bench_goodput(),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def quick_check() -> dict:
+    """CI smoke: every row here is simulated and deterministic, so quick
+    mode recomputes ALL of them and asserts exact equality with the
+    recorded ``BENCH_faults.json`` (plus, transitively, the zero-fault
+    anchor against ``BENCH_staging.json``). Any drift is a real
+    cost-model change — re-baseline with the full benchmark when it is
+    intentional."""
+    with open(JSON_PATH) as f:
+        base = json.load(f)
+    fresh = {
+        "zero_fault_anchor": bench_zero_fault_anchor(),
+        "repair_vs_restage": bench_repair_vs_restage(),
+        "service_flow": bench_service_flow(),
+        "goodput": bench_goodput(),
+    }
+    checked = []
+    for section, now in fresh.items():
+        recorded = base.get(section)
+        assert recorded is not None, (
+            f"{JSON_PATH} is missing section {section!r}; rerun the full "
+            f"benchmark (python -m benchmarks.bench_faults)")
+        assert now == recorded, (
+            f"fault-model simulated accounting drifted in {section!r}:\n"
+            f"  recorded: {recorded}\n  computed: {now}\n"
+            f"re-baseline with the full benchmark if this is intentional")
+        checked.append({"name": section, "parity": True})
+    return {"baseline": os.path.basename(JSON_PATH), "checked": checked}
+
+
+def rows(report=None, quick: bool = False) -> List[Row]:
+    """Harness CSV rows (name, us_per_call, derived) for benchmarks.run."""
+    if quick:
+        result = quick_check()
+        return [(f"bench_quick_{c['name']}", 0.0, "sim_parity=True")
+                for c in result["checked"]]
+    if report is None:
+        report = run_benchmarks()
+    out: List[Row] = []
+    anchor = report["zero_fault_anchor"]
+    out.append((f"bench_{anchor['name']}", anchor["sim"]["total_time"] * 1e6,
+                f"bit_exact={anchor['bit_exact']}"))
+    for r in report["repair_vs_restage"]:
+        out.append((f"bench_{r['name']}", r["repair_s"] * 1e6,
+                    f"repair_vs_restage={r['speedup']:.1f}x"))
+    svc = report["service_flow"]
+    out.append((f"bench_{svc['name']}", svc["repair_s"] * 1e6,
+                f"repair_vs_stage={svc['repair_vs_stage']:.2f}x"))
+    for g in report["goodput"]:
+        out.append((f"bench_{g['name']}", g["total_s"] * 1e6,
+                    f"goodput={g['goodput_gbps']:.2f}GB/s"))
+    return out
+
+
+def main() -> None:
+    if "--quick" in sys.argv[1:]:
+        result = quick_check()
+        for c in result["checked"]:
+            print(f"{c['name']}: simulated accounting matches "
+                  f"{result['baseline']}")
+        print(f"quick parity OK ({len(result['checked'])} checks)")
+        return
+    report = run_benchmarks()
+    a = report["zero_fault_anchor"]
+    print(f"{a['name']}: bit-exact vs {a['baseline']}: {a['bit_exact']}")
+    for r in report["repair_vs_restage"]:
+        print(f"{r['name']}: repair {r['repair_s']:.3f}s "
+              f"({r['repair_bytes'] >> 20} MiB) vs re-stage "
+              f"{r['restage_s']:.3f}s ({r['restage_bytes'] >> 20} MiB) "
+              f"-> {r['speedup']:.1f}x")
+    svc = report["service_flow"]
+    print(f"{svc['name']}: stage {svc['stage_s']:.3f}s, repair "
+          f"{svc['repair_s']:.3f}s "
+          f"({svc['repaired_bytes'] >> 20} MiB moved), lease survived: "
+          f"{svc['lease_survived']}")
+    for g in report["goodput"]:
+        print(f"{g['name']}: {g['total_s']:.3f}s "
+              f"({g['goodput_gbps']:.2f} GB/s)")
+    print(f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    main()

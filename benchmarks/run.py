@@ -5,12 +5,15 @@ roofline table (EXPERIMENTS.md §Roofline) is produced separately by
 ``python -m benchmarks.roofline`` from the dry-run artifacts; the
 staging/labeling hot-path microbenchmark by ``--staging``, the
 batch-vs-streaming turnaround comparison by ``--streaming``, and the
-multi-tenant staging-service scenario by ``--service`` (each also emits
-its ``BENCH_*.json``; standalone: ``python -m benchmarks.bench_<name>``).
+multi-tenant staging-service scenario by ``--service``, and the
+fault-tolerance repair-vs-restage comparison by ``--faults`` (each also
+emits its ``BENCH_*.json``; standalone: ``python -m benchmarks.bench_<name>``).
 ``--staging --quick`` skips every wall-clock comparison and instead
 asserts the SIMULATED FLAT-topology accounting (plus the topology-plan
 costs) match the recorded ``BENCH_staging.json`` baseline exactly — the
-CI accounting-parity smoke.
+CI accounting-parity smoke. ``--faults --quick`` does the same for the
+fault model against ``BENCH_faults.json`` (including the zero-fault
+bit-exactness anchor against the staging baseline).
 
 Every invocation ends with a consolidated summary of ALL ``BENCH_*.json``
 files present (on stderr, so the stdout CSV contract is preserved),
@@ -57,6 +60,12 @@ def _headline(name: str, report: dict) -> str:
             hi = max(r["speedup"] for r in rs)
             return (f"stream vs batch {lo:.2f}-{hi:.2f}x over "
                     f"{len(rs)} rates, byte-exact")
+        if name == "BENCH_faults.json":
+            rr = report["repair_vs_restage"][-1]     # largest host count
+            a = report["zero_fault_anchor"]
+            return (f"repair {rr['speedup']:.0f}x vs re-stage "
+                    f"@P{rr['name'].rsplit('P', 1)[1]}; zero-fault "
+                    f"bit-exact: {a['bit_exact']}")
         if name == "BENCH_service.json":
             svc, wb = report["service"], report["writeback"]
             return (f"{svc['stages']} stages/{svc['coalesced']} coalesced/"
@@ -137,6 +146,14 @@ def main() -> None:
             print(f"[bench_service] api_path={bench_service.API_PATH}",
                   file=sys.stderr)
             for name, us, derived in bench_service.rows():
+                print(f"{name},{us:.1f},{derived}")
+        elif "--faults" in sys.argv[1:]:
+            from benchmarks import bench_faults
+            quick = "--quick" in sys.argv[1:]
+            print(f"[bench_faults] api_path={bench_faults.API_PATH}"
+                  f"{' quick=sim-parity-only' if quick else ''}",
+                  file=sys.stderr)
+            for name, us, derived in bench_faults.rows(quick=quick):
                 print(f"{name},{us:.1f},{derived}")
         else:
             from benchmarks import paper_figures

@@ -12,6 +12,15 @@ Restore: the paper's staging pattern — each participant reads 1/P of the
 
 The store is filesystem-backed (real bytes; np.save/np.load) plus an
 optional simulated-fabric account of staging time for benchmarks.
+
+Beyond model state, the store also snapshots the DATASET CATALOG of a
+`repro.core.datasvc.StagingService` (:meth:`CheckpointStore.save_catalog`
+/ :meth:`CheckpointStore.restore_catalog`): a simulated service restart
+rebuilds the service against the (surviving) fabric, re-verifies every
+entry's replica coverage against what the node-local stores actually
+hold, re-pins live leases, and marks entries whose replicas went missing
+DEGRADED so the self-healing path (`StagingService.re_replicate`) brings
+them back.
 """
 from __future__ import annotations
 
@@ -25,6 +34,12 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint object is missing or unreadable — the error names the
+    offending shard/file so operators can see WHICH object to recover
+    from replication instead of guessing from a bare traceback."""
 
 
 def _flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
@@ -129,28 +144,60 @@ class CheckpointStore:
             return None
         return int(open(p).read().strip())
 
+    @staticmethod
+    def _load_object(fp: str, leaf: str, step: int) -> np.ndarray:
+        """np.load with loud failure: a missing or truncated checkpoint
+        object names ITSELF (shard path, leaf, step) so the operator knows
+        exactly which object to re-fetch from replication."""
+        if not os.path.exists(fp):
+            raise CheckpointError(
+                f"checkpoint step {step}: leaf {leaf!r} is missing object "
+                f"{fp} — the shard was never written or was lost; restore "
+                f"it from a replica or re-save the checkpoint")
+        try:
+            return np.load(fp)
+        except Exception as exc:
+            raise CheckpointError(
+                f"checkpoint step {step}: leaf {leaf!r} object {fp} is "
+                f"unreadable (truncated or corrupt: {exc}); restore it "
+                f"from a replica or re-save the checkpoint") from exc
+
     def restore(self, template: Any, step: Optional[int] = None,
                 participant_shards: Optional[List[int]] = None) -> Any:
         """Restore a pytree. `participant_shards` simulates staged restore:
         only those shard indices are read "locally", the rest conceptually
         arrive via all-gather — with real files we read all, but staging
-        accounting happens in benchmarks. Values are byte-exact."""
+        accounting happens in benchmarks. Values are byte-exact.
+
+        A missing or truncated object (full leaf or any shard) raises
+        :class:`CheckpointError` naming the bad file — never a bare
+        ``FileNotFoundError``/pickle error deep inside numpy."""
         step = self.latest_step() if step is None else step
         if step is None:
             raise FileNotFoundError("no checkpoint")
         d = self._leaf_dir(step)
-        meta = json.load(open(os.path.join(d, "meta.json")))
+        meta_path = os.path.join(d, "meta.json")
+        if not os.path.exists(meta_path):
+            raise CheckpointError(
+                f"checkpoint step {step}: manifest {meta_path} is missing "
+                f"— the checkpoint directory is incomplete")
+        meta = json.load(open(meta_path))
         flat = {}
         for path, info in meta["leaves"].items():
             safe = path.replace("/", "__")
-            full = os.path.join(d, f"{safe}.full.npy")
-            if os.path.exists(full):
-                arr = np.load(full)
+            # the MANIFEST decides the layout (mirrors the save-side
+            # rule), so a missing shard is reported as that shard — not
+            # misdiagnosed as a missing full object
+            ax = info["shard_axis"]
+            sharded = ax >= 0 and info["shape"][ax] >= meta["n_shards"]
+            if not sharded:
+                arr = self._load_object(
+                    os.path.join(d, f"{safe}.full.npy"), path, step)
             else:
-                pieces = [np.load(os.path.join(
-                    d, f"{safe}.shard{i}.npy"))
+                pieces = [self._load_object(
+                    os.path.join(d, f"{safe}.shard{i}.npy"), path, step)
                     for i in range(meta["n_shards"])]
-                arr = np.concatenate(pieces, axis=info["shard_axis"])
+                arr = np.concatenate(pieces, axis=ax)
             if info["dtype"] == "bfloat16":
                 arr = arr.view(jnp.bfloat16)
             flat[path] = arr
@@ -165,3 +212,160 @@ class CheckpointStore:
         return jax.tree.map(
             lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
             host, pspecs)
+
+    # -- dataset-catalog snapshot (simulated service restart) ----------------
+    def _catalog_path(self, tag: str) -> str:
+        return os.path.join(self.root, f"catalog_{tag}.json")
+
+    def save_catalog(self, service, t: float, tag: str = "catalog") -> str:
+        """Snapshot a `repro.core.datasvc.StagingService` catalog to JSON.
+
+        What survives a service restart: the engine selection, every
+        dataset entry (paths, state, leases, holders, striped placement,
+        per-entry counters, history) and the service-wide stats. What
+        does NOT: un-flushed dirty result buffers (real arrays living in
+        node memory — a restarted service re-learns them from sessions),
+        and the node-local replicas themselves, which belong to the
+        FABRIC and are re-verified at restore time. Returns the snapshot
+        path."""
+        from repro.core.api import ENGINES, TopologyConfig
+        entry = next((e for e in ENGINES.entries()
+                      if e.stage_fn is service._stage_fn), None)
+        if entry is None:
+            raise CheckpointError(
+                "cannot snapshot a service whose staging engine is not in "
+                "the process-wide ENGINES registry (register it first)")
+        params = {k: (v.to_dict() if isinstance(v, TopologyConfig) else v)
+                  for k, v in service._stage_kw.items()}
+        snap: Dict[str, Any] = {
+            "t": t,
+            "budget_bytes": service.budget_bytes,
+            "engine": {"name": entry.name, "params": params},
+            "stats": {k: v for k, v in vars(service.stats).items()
+                      if isinstance(v, (int, float))},
+            "entries": [],
+        }
+        for e in service.catalog:
+            snap["entries"].append({
+                "name": e.name,
+                "paths": list(e.paths),
+                "nbytes": e.nbytes,
+                "state": e.state.value,
+                "t_ready": e.t_ready,
+                "t_unleased": e.t_unleased,
+                "leases": dict(e.leases),
+                "stage_count": e.stage_count,
+                "acquires": e.acquires,
+                "hits": e.hits,
+                "coalesced": e.coalesced,
+                "repairs": e.repairs,
+                "holders": sorted(e.holders),
+                "placement": (None if e.placement is None else {
+                    "replication": e.placement.replication,
+                    "owners": {str(i): list(own)
+                               for i, own in e.placement.owners.items()},
+                }),
+                "history": [[ht, hs.value] for ht, hs in e.history],
+            })
+        path = self._catalog_path(tag)
+        with open(path, "w") as f:
+            json.dump(snap, f)
+        return path
+
+    def restore_catalog(self, fabric, tag: str = "catalog",
+                        registry=None):
+        """Rebuild a :class:`~repro.core.datasvc.StagingService` from a
+        catalog snapshot — the simulated SERVICE RESTART.
+
+        The service process died; `fabric` (node-local stores included)
+        is whatever survived. Every snapshotted entry's replica coverage
+        is RE-VERIFIED against the stores: fully replicated entries whose
+        live coverage is intact come back RESIDENT, entries missing
+        replicas (a host died or was wiped while the service was down)
+        come back DEGRADED with ``holders``/striped owners reflecting
+        what is actually there — the next acquire repairs them through
+        the normal self-healing path. Live leases are re-pinned on the
+        surviving replica keys. Raises :class:`CheckpointError` if no
+        snapshot ``tag`` exists."""
+        from repro.core.api import ENGINES
+        from repro.core.datasvc import (DatasetEntry, DatasetState,
+                                        StagingService)
+        path = self._catalog_path(tag)
+        if not os.path.exists(path):
+            raise CheckpointError(
+                f"no catalog snapshot {path} — save_catalog was never "
+                f"called (or the snapshot was lost)")
+        snap = json.load(open(path))
+        reg = registry if registry is not None else ENGINES
+        engine = reg.config_for(snap["engine"]["name"],
+                                **snap["engine"]["params"])
+        service = StagingService(fabric, snap["budget_bytes"],
+                                 engine=engine, registry=reg)
+        for k, v in snap["stats"].items():
+            if hasattr(service.stats, k):
+                setattr(service.stats, k, v)
+        t = snap["t"]
+        live = set(fabric.live_ids(t)) if not fabric.faults.trivial else set(
+            range(fabric.n_hosts))
+        occupied = (DatasetState.RESIDENT, DatasetState.DEGRADED,
+                    DatasetState.STAGING)
+        for ed in snap["entries"]:
+            entry = DatasetEntry(name=ed["name"], paths=list(ed["paths"]),
+                                 nbytes=ed["nbytes"])
+            entry.t_ready = ed["t_ready"]
+            entry.t_unleased = ed["t_unleased"]
+            entry.leases = dict(ed["leases"])
+            entry.stage_count = ed["stage_count"]
+            entry.acquires = ed["acquires"]
+            entry.hits = ed["hits"]
+            entry.coalesced = ed["coalesced"]
+            entry.repairs = ed["repairs"]
+            entry.history = [(ht, DatasetState(hs))
+                             for ht, hs in ed["history"]]
+            state = DatasetState(ed["state"])
+            if state in occupied:
+                state = self._verify_entry(fabric, entry, ed, live, t)
+            entry.state = state
+            entry.history.append((t, state))
+            service.catalog.add(entry)
+            # live leases survive the restart: re-pin each lease depth on
+            # the replica keys that actually exist
+            for _ in range(entry.lease_count):
+                service._pin_once(entry, t)
+        return service
+
+    @staticmethod
+    def _verify_entry(fabric, entry, ed: Dict[str, Any], live: set,
+                      t: float):
+        """Audit one snapshotted entry against the fabric's stores:
+        returns the verified state and rewrites ``entry.holders`` /
+        ``entry.placement`` to match reality."""
+        from repro.core.datasvc import DatasetState
+        from repro.core.staging import ReplicaPlacement
+        n = fabric.n_hosts
+        if ed["placement"] is None:
+            holders = {h for h in ed["holders"]
+                       if h in live and h < n
+                       and all(p in fabric.hosts[h].store.data
+                               for p in entry.paths)}
+            entry.holders = holders
+            return (DatasetState.RESIDENT if holders and live <= holders
+                    else DatasetState.DEGRADED)
+        pl = ed["placement"]
+        owners = {}
+        intact = True
+        for i_str, own in pl["owners"].items():
+            i = int(i_str)
+            keys = [ReplicaPlacement.stripe_key(p, i) for p in entry.paths]
+            alive_own = tuple(
+                o for o in own
+                if o in live and o < n
+                and all(k in fabric.hosts[o].store.data for k in keys))
+            owners[i] = alive_own
+            if len(alive_own) < len(own):
+                intact = False
+        entry.placement = ReplicaPlacement(
+            replication=pl["replication"], owners=owners)
+        entry.holders = set(entry.placement.hosts())
+        return (DatasetState.RESIDENT if intact
+                else DatasetState.DEGRADED)

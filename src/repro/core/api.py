@@ -14,9 +14,13 @@ pluggable transports selected by typed config; the Perlmutter
 detector-streaming client hiding batch-vs-stream delivery):
 
   * **Typed engine configs** — :class:`CollectiveConfig`,
-    :class:`PipelinedConfig`, :class:`NaiveConfig`, :class:`StreamConfig`
-    and :class:`ServiceConfig`: one frozen dataclass per engine, validated
+    :class:`PipelinedConfig`, :class:`NaiveConfig`,
+    :class:`ReplicatedConfig`, :class:`StreamConfig` and
+    :class:`ServiceConfig`: one frozen dataclass per engine, validated
     in ``__post_init__`` (no more silently-ignored ``stage_kw`` typos).
+    Each carries an optional :class:`FaultConfig` — a what-if fault
+    timeline scoped to that stage; live faults go through
+    :meth:`StagingClient.inject` (see `repro.core.faults`).
   * **EngineRegistry** — name -> (config type, stage fn). The single
     source of truth for the mode -> engine mapping (replaces the old
     ``BATCH_STAGE_FNS`` table that was consumed by ``staging``/``iohook``/
@@ -49,16 +53,18 @@ from ``iohook`` for compatibility). All times are SIMULATED seconds (see
 from __future__ import annotations
 
 import json
+import math
 import os
 import warnings
 from dataclasses import dataclass, field, fields
-from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
-                    Union)
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
 
 from repro.core.collectives import CollectivePlan, CollectivePlanner  # noqa: F401 (re-export)
 from repro.core.fabric import Fabric
+from repro.core.faults import FaultEvent, FaultKind, FaultSchedule
 from repro.core.staging import (StagingReport, stage_collective, stage_naive,
-                                stage_pipelined)
+                                stage_pipelined, stage_replicated)
 from repro.core.streaming import StreamStager, stage_stream
 from repro.core.topology import (BGQ_TORUS, FLAT, TOPOLOGIES,  # noqa: F401
                                  TPU_POD_ICI_DCN, Topology, TopologyConfig,
@@ -68,6 +74,100 @@ from repro.core.topology import (BGQ_TORUS, FLAT, TOPOLOGIES,  # noqa: F401
 # ---------------------------------------------------------------------------
 # typed engine configs
 # ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Typed, JSON-serializable fault-injection selector for engine
+    configs (`repro.core.faults`).
+
+    Explicit events — ``host_deaths``/``host_recoveries`` are
+    ``(t, host)`` pairs, ``degradations`` are ``(tier, t, t_end, factor)``
+    brownout windows — plus an optional seeded random layer (``seed``
+    with ``random_deaths`` deaths drawn over ``[0, horizon)`` by
+    `repro.core.faults.FaultSchedule.random`). :meth:`build` materializes
+    the concrete :class:`~repro.core.faults.FaultSchedule` for a fabric
+    of ``n_hosts``.
+
+    A config-level schedule is a WHAT-IF timing overlay scoped to one
+    stage call (bound via ``Interconnect.scoped_faults``): collectives
+    re-route around the dead, degraded tiers slow the wire, deliveries
+    skip dead hosts — but no node-local store is wiped. State-changing
+    live injection is the :meth:`StagingClient.inject` /
+    ``Fabric.kill_host`` path. The default (no events, no seed) builds
+    the trivial schedule — bit-exact zero-fault accounting."""
+    host_deaths: Tuple[Tuple[float, int], ...] = ()
+    host_recoveries: Tuple[Tuple[float, int], ...] = ()
+    degradations: Tuple[Tuple[str, float, float, float], ...] = ()
+    seed: Optional[int] = None
+    random_deaths: int = 0
+    horizon: float = 60.0
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "host_deaths", tuple(
+            (float(t), int(h)) for t, h in self.host_deaths))
+        object.__setattr__(self, "host_recoveries", tuple(
+            (float(t), int(h)) for t, h in self.host_recoveries))
+        object.__setattr__(self, "degradations", tuple(
+            (str(tier), float(t), float(t_end), float(f))
+            for tier, t, t_end, f in self.degradations))
+        if (self.seed is None) != (self.random_deaths == 0):
+            raise ValueError(
+                "seed and random_deaths select the seeded random fault "
+                "layer together: give both (seed=..., random_deaths>=1) "
+                "or neither")
+        if self.random_deaths < 0:
+            raise ValueError(
+                f"random_deaths must be >= 0, got {self.random_deaths}")
+        if self.horizon <= 0:
+            raise ValueError(
+                f"horizon must be a positive window in simulated seconds, "
+                f"got {self.horizon}")
+
+    def build(self, n_hosts: int) -> FaultSchedule:
+        """The concrete fault timeline for a fabric of `n_hosts` hosts
+        (validation of hosts/windows happens in ``FaultEvent``)."""
+        events = [FaultEvent(t, FaultKind.HOST_DEATH, host=h)
+                  for t, h in self.host_deaths]
+        events += [FaultEvent(t, FaultKind.HOST_RECOVERY, host=h)
+                   for t, h in self.host_recoveries]
+        events += [FaultEvent(t, FaultKind.LINK_DEGRADE, tier=tier,
+                              t_end=t_end, factor=f)
+                   for tier, t, t_end, f in self.degradations]
+        sched = FaultSchedule(events)
+        if self.seed is not None:
+            for ev in FaultSchedule.random(self.seed, n_hosts, self.horizon,
+                                           n_deaths=self.random_deaths
+                                           ).events:
+                sched.inject(ev)
+        return sched
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Primitive dict for JSON round-trips (drops empty layers)."""
+        out: Dict[str, Any] = {}
+        if self.host_deaths:
+            out["host_deaths"] = [list(p) for p in self.host_deaths]
+        if self.host_recoveries:
+            out["host_recoveries"] = [list(p) for p in self.host_recoveries]
+        if self.degradations:
+            out["degradations"] = [list(d) for d in self.degradations]
+        if self.seed is not None:
+            out["seed"] = self.seed
+            out["random_deaths"] = self.random_deaths
+            out["horizon"] = self.horizon
+        return out
+
+    @classmethod
+    def coerce(cls, value: Union["FaultConfig", Mapping]) -> "FaultConfig":
+        """Normalize a loose faults spelling (a config passes through, a
+        JSON dict builds one) — the ``topology``-field pattern."""
+        if isinstance(value, FaultConfig):
+            return value
+        if isinstance(value, Mapping):
+            return cls(**value)
+        raise TypeError(
+            f"cannot coerce {type(value).__name__} to a FaultConfig "
+            f"(expected a FaultConfig or a dict)")
+
 
 @dataclass(frozen=True)
 class EngineConfig:
@@ -81,17 +181,25 @@ class EngineConfig:
     A subclass that declares a ``topology`` field gets loose spellings
     (a canned name, a JSON dict, a registered
     `repro.core.topology.Topology`) coerced to a typed
-    :class:`~repro.core.topology.TopologyConfig` here — subclasses with
-    their own ``__post_init__`` must call ``super().__post_init__()``.
+    :class:`~repro.core.topology.TopologyConfig` here, and a ``faults``
+    field likewise to a :class:`FaultConfig` — subclasses with their own
+    ``__post_init__`` must call ``super().__post_init__()``. ``faults``
+    is EXCLUDED from ``to_kw()``: it configures the fabric-side scope
+    the stage runs under (``Interconnect.scoped_faults``), not an engine
+    function parameter.
     """
 
     def __post_init__(self) -> None:
         topo = getattr(self, "topology", None)
         if topo is not None and not isinstance(topo, TopologyConfig):
             object.__setattr__(self, "topology", TopologyConfig.coerce(topo))
+        flt = getattr(self, "faults", None)
+        if flt is not None and not isinstance(flt, FaultConfig):
+            object.__setattr__(self, "faults", FaultConfig.coerce(flt))
 
     def to_kw(self) -> Dict[str, Any]:
-        return {f.name: getattr(self, f.name) for f in fields(self)}
+        return {f.name: getattr(self, f.name) for f in fields(self)
+                if f.name != "faults"}
 
 
 @dataclass(frozen=True)
@@ -99,8 +207,11 @@ class CollectiveConfig(EngineConfig):
     """Two-phase ``MPI_File_read_all`` staging (leader stripes + planned
     all-gather) — `repro.core.staging.stage_collective`. ``topology``
     selects the machine model the collectives are planned over for this
-    stage (``None``: whatever the fabric runs — FLAT by default)."""
+    stage (``None``: whatever the fabric runs — FLAT by default);
+    ``faults`` optionally overlays a what-if :class:`FaultConfig` for
+    this stage only."""
     topology: Optional[TopologyConfig] = None
+    faults: Optional[FaultConfig] = None
 
 
 @dataclass(frozen=True)
@@ -108,9 +219,10 @@ class PipelinedConfig(EngineConfig):
     """Chunked two-phase staging with read/all-gather overlap
     (`repro.core.staging.stage_pipelined`). ``chunk_bytes`` is the
     per-host segment size: smaller chunks overlap finer but round more;
-    ``topology`` as on :class:`CollectiveConfig`."""
+    ``topology``/``faults`` as on :class:`CollectiveConfig`."""
     chunk_bytes: int = 8 << 20
     topology: Optional[TopologyConfig] = None
+    faults: Optional[FaultConfig] = None
 
     def __post_init__(self) -> None:
         super().__post_init__()
@@ -125,8 +237,30 @@ class NaiveConfig(EngineConfig):
     """Uncoordinated per-host full reads — the paper's congested baseline
     (`repro.core.staging.stage_naive`). ``topology`` is accepted for
     engine-protocol uniformity (the naive path never touches the
-    interconnect)."""
+    interconnect); ``faults`` as on :class:`CollectiveConfig`."""
     topology: Optional[TopologyConfig] = None
+    faults: Optional[FaultConfig] = None
+
+
+@dataclass(frozen=True)
+class ReplicatedConfig(EngineConfig):
+    """R-way stripe-replicated staging with chained declustering
+    (`repro.core.staging.stage_replicated`): instead of every host
+    holding a full replica, stripe ``i`` lands on hosts ``i..i+R-1``
+    (mod P), so a host death loses no data while R-1 neighbors survive
+    and repair (`repro.core.staging.re_replicate`) moves only the lost
+    stripes. ``replication`` is R (1 = no redundancy: a pure striped
+    scatter); ``topology``/``faults`` as on :class:`CollectiveConfig`."""
+    replication: int = 2
+    topology: Optional[TopologyConfig] = None
+    faults: Optional[FaultConfig] = None
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.replication < 1:
+            raise ValueError(
+                f"replication must be a replica count >= 1, got "
+                f"{self.replication}")
 
 
 @dataclass(frozen=True)
@@ -138,7 +272,8 @@ class StreamConfig(EngineConfig):
     (``None`` = the whole set stays resident); ``topology`` as on
     :class:`CollectiveConfig` (the per-frame detector ingest hop is
     charged to its ingest tier and each delivery broadcast planned over
-    it)."""
+    it); ``faults`` overlays a what-if fault schedule on the stream
+    (degraded ingest: deliveries skip hosts dead at delivery time)."""
     rate_hz: Optional[float] = None
     window_bytes: Optional[int] = None
     # paths pinned AT INGEST (exempt from window eviction) in addition to
@@ -146,6 +281,7 @@ class StreamConfig(EngineConfig):
     # home of the legacy ``stage_kw={"pin_paths": [...]}`` escape hatch
     pin_paths: Tuple[str, ...] = ()
     topology: Optional[TopologyConfig] = None
+    faults: Optional[FaultConfig] = None
 
     def __post_init__(self) -> None:
         super().__post_init__()
@@ -220,11 +356,12 @@ class EngineRegistry:
 
     @classmethod
     def default(cls) -> "EngineRegistry":
-        """A fresh registry holding the four built-in engines."""
+        """A fresh registry holding the five built-in engines."""
         reg = cls()
         reg.register("collective", CollectiveConfig, stage_collective)
         reg.register("pipelined", PipelinedConfig, stage_pipelined)
         reg.register("naive", NaiveConfig, stage_naive)
+        reg.register("replicated", ReplicatedConfig, stage_replicated)
         reg.register("stream", StreamConfig, stage_stream, batch=False)
         return reg
 
@@ -352,9 +489,13 @@ class StagingSpec:
             for b in self.broadcasts]}
         if self.config is not None:
             reg = registry if registry is not None else ENGINES
-            params = {k: (v.to_dict() if isinstance(v, TopologyConfig)
-                          else v)
-                      for k, v in self.config.to_kw().items()}
+            # serialize every config field (not to_kw(), which excludes
+            # the fabric-scoped `faults` field from engine kwargs)
+            params = {f.name: (v.to_dict()
+                               if isinstance(v, (TopologyConfig,
+                                                 FaultConfig)) else v)
+                      for f in fields(self.config)
+                      for v in (getattr(self.config, f.name),)}
             out["engine"] = {"name": reg.name_of(self.config),
                              "params": params}
         return json.dumps(out)
@@ -605,36 +746,49 @@ class StagingClient:
         all_files: List[str] = []
         t_meta = 0.0
         t = t0
-        for entry in spec.broadcasts:
-            if resolve:
-                from repro.core.iohook import resolve_manifest_timed
-                # the manifest broadcast is part of the stage op: plan it
-                # under the config's topology too (None -> fabric binding)
-                with self.fabric.net.scoped_topology(
-                        getattr(config, "topology", None)):
-                    files, t_resolved, bcast = resolve_manifest_timed(
-                        self.fabric, entry.files, t)
-                t_meta += t_resolved - t - bcast     # glob phase only
-                t = t_resolved
-            else:
-                files, bcast = list(entry.files), 0.0
-            kw = config.to_kw()
-            if isinstance(config, StreamConfig):
-                self._check_window(config, files)
+        # a config-level FaultConfig scopes a what-if fault timeline to
+        # THIS stage op (None -> the fabric's live schedule, trivially
+        # empty on a healthy fabric — the exact pre-fault path)
+        fault_cfg = getattr(config, "faults", None)
+        sched = (fault_cfg.build(self.fabric.n_hosts)
+                 if fault_cfg is not None else None)
+        with self.fabric.net.scoped_faults(sched):
+            for entry in spec.broadcasts:
+                if resolve:
+                    from repro.core.iohook import resolve_manifest_timed
+                    # the manifest broadcast is part of the stage op: plan
+                    # it under the config's topology too (None -> fabric
+                    # binding)
+                    with self.fabric.net.scoped_topology(
+                            getattr(config, "topology", None)):
+                        files, t_resolved, bcast = resolve_manifest_timed(
+                            self.fabric, entry.files, t)
+                    t_meta += t_resolved - t - bcast     # glob phase only
+                    t = t_resolved
+                else:
+                    files, bcast = list(entry.files), 0.0
+                kw = config.to_kw()
+                if isinstance(config, StreamConfig):
+                    self._check_window(config, files)
+                    if entry.pin:
+                        # the streaming engine must pin AT INGEST: with a
+                        # bounded window, post-hoc pinning would mark
+                        # already-evicted files
+                        kw["pin_paths"] = list(files) + [
+                            p for p in config.pin_paths if p not in files]
+                rep, t = entry_.stage_fn(self.fabric, files, t, **kw)
+                rep.broadcast_time = bcast           # on_root manifest push
+                reports.append(rep)
+                all_files.extend(files)
                 if entry.pin:
-                    # the streaming engine must pin AT INGEST: with a
-                    # bounded window, post-hoc pinning would mark
-                    # already-evicted files
-                    kw["pin_paths"] = list(files) + [
-                        p for p in config.pin_paths if p not in files]
-            rep, t = entry_.stage_fn(self.fabric, files, t, **kw)
-            rep.broadcast_time = bcast               # on_root manifest push
-            reports.append(rep)
-            all_files.extend(files)
-            if entry.pin:
-                for host in self.fabric.hosts:
-                    for f in files:
-                        host.store.pin(f)
+                    # only hosts that received replicas hold pins (a dead
+                    # host's store was never written; pinning it would
+                    # strand a stale refcount past its recovery)
+                    hosts = (self.fabric.hosts if self.fabric.faults.trivial
+                             else self.fabric.live_hosts(t))
+                    for host in hosts:
+                        for f in files:
+                            host.store.pin(f)
         return Report(engine=entry_.name, n_hosts=self.fabric.n_hosts,
                       resolved_files=all_files, reports=reports,
                       metadata_time=t_meta, total_time=t - t0)
@@ -681,6 +835,39 @@ class StagingClient:
                       resolved_files=all_files, reports=reports,
                       metadata_time=t_meta, total_time=t_end - t0,
                       leases=leases, service=service)
+
+    # -- live fault injection -----------------------------------------------
+    def inject(self, kind: Union[FaultEvent, FaultKind, str],
+               t: float = 0.0, *, host: Optional[int] = None,
+               tier: Optional[str] = None, t_end: float = math.inf,
+               factor: float = 1.0, apply: bool = True) -> FaultEvent:
+        """Inject a LIVE fault into the fabric's timeline (unlike a
+        config-level :class:`FaultConfig`, this mutates state: a host
+        death wipes its node-local store when applied).
+
+        `kind` is a :class:`~repro.core.faults.FaultKind` (or its string
+        value, or a prebuilt :class:`~repro.core.faults.FaultEvent`);
+        ``host`` names the victim for death/recovery, ``tier``/``t_end``/
+        ``factor`` describe a degradation window. With ``apply=True``
+        (default) the fault clock advances to the event time — through
+        the attached service's ``sync_faults`` when there is one, so
+        catalog entries transition to DEGRADED in the same call; pass
+        ``apply=False`` to schedule a future event and let the next
+        ``sync_faults``/``advance_faults`` pick it up."""
+        if isinstance(kind, FaultEvent):
+            ev = kind
+        else:
+            ev = FaultEvent(t, FaultKind(kind), host=host, tier=tier,
+                            t_end=t_end, factor=factor)
+        self.fabric.faults.inject(ev)
+        if apply:
+            # sync the catalog when a service is ATTACHED (never build one
+            # just to sync — an unbuilt service has no entries to degrade)
+            if self._service is not None:
+                self._service.sync_faults(ev.t)
+            else:
+                self.fabric.advance_faults(ev.t)
+        return ev
 
     # -- streamed delivery (incremental driver) -----------------------------
     def stream_stager(self, config: StreamConfig,

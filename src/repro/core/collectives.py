@@ -47,6 +47,10 @@ from repro.core.topology import LinkTier, Topology
 TierBytes = Dict[str, int]
 
 
+class LinkPartitionedError(RuntimeError):
+    """A plan would cross a tier degraded to factor 0 (a partition)."""
+
+
 @dataclass
 class CollectivePlan:
     """One planned collective: the algorithm picked, its modeled duration
@@ -61,6 +65,7 @@ class CollectivePlan:
     n_hosts: int
     time: float
     tier_bytes: TierBytes = field(default_factory=dict)
+    rerouted: int = 0       # dead hosts the schedule was repaired around
 
     @property
     def total_bytes(self) -> int:
@@ -89,9 +94,21 @@ class CollectivePlanner:
     # -- tier primitives ----------------------------------------------------
     def _bw(self, tier: LinkTier, concurrent: int = 1) -> float:
         """Effective per-transfer bandwidth: the link rate, shared under
-        the tier's bisection cap when `concurrent` transfers cross it."""
+        the tier's bisection cap when `concurrent` transfers cross it.
+
+        A degraded tier (``scale < 1``, see `repro.core.faults`) delivers
+        the scaled rate; the healthy scale of exactly 1.0 skips the
+        multiplication so zero-fault plans stay bit-exact."""
         bw = tier.bw if tier.bw is not None else self.constants.link_bw
         cap = tier.bisection_cap
+        if tier.scale != 1.0:
+            if tier.scale == 0.0:
+                raise LinkPartitionedError(
+                    f"link tier {tier.name!r} is partitioned (scale 0); "
+                    f"no plan can cross it")
+            bw *= tier.scale
+            if cap is not None:
+                cap *= tier.scale
         if cap is not None:
             bw = min(bw, cap / max(concurrent, 1))
         return bw
@@ -291,18 +308,21 @@ class CollectivePlanner:
         return list(self._ALGORITHMS[op])
 
     def _plan(self, op: str, nbytes: int, n_hosts: int,
-              algorithm: Optional[str]) -> CollectivePlan:
+              algorithm: Optional[str], dead: int = 0) -> CollectivePlan:
         if nbytes < 0:
             raise ValueError(f"{op} payload must be >= 0 bytes, "
                              f"got {nbytes}")
         if op not in self._ALGORITHMS:
             raise ValueError(f"unknown collective {op!r}; planner knows: "
                              f"{', '.join(self._ALGORITHMS)}")
+        if dead < 0:
+            raise ValueError(f"dead host count must be >= 0, got {dead}")
         if n_hosts <= 1:
             # a single host (or none) moves nothing — every algorithm
             # degenerates to the empty plan
             return CollectivePlan(op=op, algorithm=algorithm or "none",
-                                  nbytes=nbytes, n_hosts=n_hosts, time=0.0)
+                                  nbytes=nbytes, n_hosts=n_hosts, time=0.0,
+                                  rerouted=dead)
         if algorithm is None:
             algorithm = self.topology.pinned_algorithms.get(op)
         table = self._ALGORITHMS[op]
@@ -322,22 +342,102 @@ class CollectivePlanner:
                                   tier_bytes=bytes_)
             if best is None or plan.time < best.time:
                 best = plan
+        if dead:
+            # re-routing cost of repairing the ring/tree schedule around
+            # the dead hosts: each skip splices one extra intra-tier hop
+            # into the schedule's critical path (the payload itself is
+            # already planned over the LIVE host count only)
+            best.time += dead * self._lat(self.topology.intra)
+            best.rerouted = dead
         return best
 
     def plan_broadcast(self, nbytes: int, n_hosts: int,
-                       algorithm: Optional[str] = None) -> CollectivePlan:
-        """Plan a one-root broadcast of `nbytes` to `n_hosts` hosts."""
-        return self._plan("broadcast", nbytes, n_hosts, algorithm)
+                       algorithm: Optional[str] = None,
+                       dead: int = 0) -> CollectivePlan:
+        """Plan a one-root broadcast of `nbytes` to `n_hosts` LIVE hosts;
+        `dead` skipped hosts add re-routing latency to the schedule."""
+        return self._plan("broadcast", nbytes, n_hosts, algorithm, dead)
 
     def plan_allgather(self, shard_bytes: int, n_hosts: int,
-                       algorithm: Optional[str] = None) -> CollectivePlan:
-        """Plan an all-gather where each host contributes `shard_bytes`."""
-        return self._plan("allgather", shard_bytes, n_hosts, algorithm)
+                       algorithm: Optional[str] = None,
+                       dead: int = 0) -> CollectivePlan:
+        """Plan an all-gather where each of `n_hosts` LIVE hosts
+        contributes `shard_bytes`; `dead` adds re-routing latency."""
+        return self._plan("allgather", shard_bytes, n_hosts, algorithm, dead)
 
     def plan_scatter(self, total_bytes: int, n_hosts: int,
-                     algorithm: Optional[str] = None) -> CollectivePlan:
-        """Plan a root scatter of `total_bytes` into 1/P shards."""
-        return self._plan("scatter", total_bytes, n_hosts, algorithm)
+                     algorithm: Optional[str] = None,
+                     dead: int = 0) -> CollectivePlan:
+        """Plan a root scatter of `total_bytes` into 1/P shards over the
+        LIVE hosts; `dead` adds re-routing latency."""
+        return self._plan("scatter", total_bytes, n_hosts, algorithm, dead)
+
+    def plan_replichain(self, stripe_bytes: int, n_hosts: int,
+                        replication: int) -> CollectivePlan:
+        """Plan R-way chained stripe replication: after the striped read,
+        every host forwards its stripe to its successor for R-1 pipelined
+        rounds (chained declustering), leaving stripe ``i`` resident on
+        hosts ``i .. i+R-1 (mod P)``.
+
+        Each round is P concurrent `stripe_bytes` transfers on the ring;
+        with R_racks racks, R_racks of the P ring edges cross racks every
+        round (same geometry as the ring all-gather)."""
+        if not 1 <= replication <= max(n_hosts, 1):
+            raise ValueError(
+                f"replication must be in [1, n_hosts={n_hosts}], "
+                f"got {replication}")
+        topo = self.topology
+        rounds = replication - 1
+        if n_hosts <= 1 or rounds == 0 or stripe_bytes == 0:
+            return CollectivePlan(op="replichain", algorithm="ring",
+                                  nbytes=stripe_bytes, n_hosts=n_hosts,
+                                  time=0.0)
+        R, _ = topo.racks(n_hosts)
+        crossings = R if R > 1 else 0
+        candidates: List[Tuple[LinkTier, int]] = [(topo.intra, 1)]
+        if crossings and topo.inter is not None:
+            candidates.append((topo.inter, crossings))
+        step = max(self._xfer(t, stripe_bytes, concurrent=c)
+                   for t, c in candidates)
+        bytes_: TierBytes = {}
+        _add(bytes_, topo.intra,
+             rounds * (n_hosts - crossings) * stripe_bytes)
+        if crossings and topo.inter is not None:
+            _add(bytes_, topo.inter, rounds * crossings * stripe_bytes)
+        return CollectivePlan(op="replichain", algorithm="ring",
+                              nbytes=stripe_bytes, n_hosts=n_hosts,
+                              time=rounds * step, tier_bytes=bytes_)
+
+    def plan_repair(self, transfers: List[Tuple[int, int, int]],
+                    n_hosts: int) -> CollectivePlan:
+        """Plan an explicit point-to-point repair schedule: `transfers` is
+        ``[(src_host, dst_host, nbytes), ...]`` in issue order.
+
+        Each host's NIC serializes its transfers (a busy-line per host);
+        transfers between different host pairs overlap. The tier of each
+        transfer follows rack membership (rack-major placement, as in
+        :meth:`~repro.core.topology.Topology.racks`). The duration is the
+        makespan of the schedule — deterministic in the transfer order."""
+        topo = self.topology
+        hpr = topo.hosts_per_rack
+        busy: Dict[int, float] = {}
+        t_done = 0.0
+        bytes_: TierBytes = {}
+        total = 0
+        for src, dst, nbytes in transfers:
+            if topo.is_flat or (src // hpr) == (dst // hpr):
+                tier = topo.intra
+            else:
+                tier = topo.inter
+            start = max(busy.get(src, 0.0), busy.get(dst, 0.0))
+            end = start + self._xfer(tier, nbytes)
+            busy[src] = busy[dst] = end
+            t_done = max(t_done, end)
+            _add(bytes_, tier, nbytes)
+            total += nbytes
+        return CollectivePlan(op="repair", algorithm="p2p_reroute",
+                              nbytes=total, n_hosts=n_hosts, time=t_done,
+                              tier_bytes=bytes_)
 
     def plan_point_to_point(self, nbytes: int) -> CollectivePlan:
         """One off-machine message (detector NIC -> leader host) over the

@@ -46,24 +46,38 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core import staging as _staging
 from repro.core.api import ENGINES
-from repro.core.fabric import Fabric
-from repro.core.staging import (StagingReport, _coll_overhead,
-                                readonly_view, stage_out, stage_out_naive)
+from repro.core.fabric import Fabric, FaultEvent, FaultKind, Host
+from repro.core.staging import (LostStripesError, ReplicaLossError,
+                                ReplicaPlacement, StagingReport,
+                                _coll_overhead, readonly_view, stage_out,
+                                stage_out_naive)
 
 
 class DatasetState(enum.Enum):
     """Dataset lifecycle. Legal transitions::
 
         REGISTERED -> STAGING -> RESIDENT -> EVICTING -> GONE -> STAGING
+                                    |  ^
+                                    v  | (repair: re_replicate)
+                                 DEGRADED -> STAGING   (no live copy left)
+                                    |
+                                    v
+                                 EVICTING              (give up residency)
+
+    DEGRADED means residency LOST REDUNDANCY (a holder died, a grown host
+    lacks its replica) but live leases keep working off the surviving
+    replicas — it is not an error state, it is a repair-pending state.
     """
     REGISTERED = "registered"
     STAGING = "staging"
     RESIDENT = "resident"
+    DEGRADED = "degraded"
     EVICTING = "evicting"
     GONE = "gone"
 
@@ -71,7 +85,9 @@ class DatasetState(enum.Enum):
 _LEGAL = {
     DatasetState.REGISTERED: {DatasetState.STAGING},
     DatasetState.STAGING: {DatasetState.RESIDENT},
-    DatasetState.RESIDENT: {DatasetState.EVICTING},
+    DatasetState.RESIDENT: {DatasetState.EVICTING, DatasetState.DEGRADED},
+    DatasetState.DEGRADED: {DatasetState.RESIDENT, DatasetState.STAGING,
+                            DatasetState.EVICTING},
     DatasetState.EVICTING: {DatasetState.GONE},
     DatasetState.GONE: {DatasetState.STAGING},
 }
@@ -104,6 +120,14 @@ class DatasetEntry:
     acquires: int = 0
     hits: int = 0                    # served from residency
     coalesced: int = 0               # joined an in-flight stage
+    repairs: int = 0                 # re_replicate operations on this entry
+    # which hosts currently hold this dataset's replicas/stripes (full
+    # replication: every host written at stage time; striped: the stripe
+    # owners). Host death discards the victim; repair restores coverage.
+    holders: Set[int] = field(default_factory=set)
+    # striped R-way placement (stage_replicated engine); None = fully
+    # replicated on every holder
+    placement: Optional[ReplicaPlacement] = None
     last_report: Optional[StagingReport] = None
     history: List[Tuple[float, DatasetState]] = field(default_factory=list)
 
@@ -158,9 +182,13 @@ class DataCatalog:
 
     @property
     def resident_bytes(self) -> int:
-        """Bytes counted against the node budget: STAGING + RESIDENT."""
+        """Bytes counted against the node budget: STAGING + RESIDENT +
+        DEGRADED (a degraded dataset still occupies its surviving
+        replicas' memory — losing redundancy does not free the budget)."""
         return sum(e.nbytes for e in self._entries.values()
-                   if e.state in (DatasetState.STAGING, DatasetState.RESIDENT))
+                   if e.state in (DatasetState.STAGING,
+                                  DatasetState.RESIDENT,
+                                  DatasetState.DEGRADED))
 
     def states(self) -> Dict[str, str]:
         return {n: e.state.value for n, e in self._entries.items()}
@@ -176,6 +204,13 @@ class ServiceStats:
     evictions: int = 0
     queue_waits: int = 0         # admissions that waited on a lease release
     queue_wait_time: float = 0.0
+    host_deaths: int = 0         # death events the catalog absorbed
+    recoveries: int = 0          # recovery events absorbed
+    degraded_events: int = 0     # RESIDENT -> DEGRADED transitions
+    repairs: int = 0             # re_replicate operations (not re-stages)
+    repaired_bytes: int = 0      # bytes moved by repair collectives
+    repair_time: float = 0.0     # total repair collective time
+    resizes: int = 0             # elastic grow/shrink operations
     stage_time: float = 0.0      # total stage engine time
     metadata_time: float = 0.0   # registration glob phase
     broadcast_time: float = 0.0  # registration manifest broadcasts (on_root)
@@ -286,6 +321,61 @@ class StagingService:
         entry.history.append((t_done, DatasetState.REGISTERED))
         return self.catalog.add(entry), t_done
 
+    # -- replica key / pin bookkeeping ---------------------------------------
+    def _entry_keys(self, entry: DatasetEntry, t: float
+                    ) -> Iterator[Tuple[Host, str]]:
+        """``(host, store key)`` pairs of `entry`'s replicas on the hosts
+        LIVE at `t` (the trivial schedule yields every host — the
+        pre-fault path). Full replication: every path on every host;
+        striped: each stripe's key on its owners."""
+        fab = self.fabric
+        hosts = fab.hosts if fab.faults.trivial else fab.live_hosts(t)
+        if entry.placement is None:
+            for host in hosts:
+                for p in entry.paths:
+                    yield host, p
+        else:
+            live = {h.host_id for h in hosts}
+            n = len(fab.hosts)
+            for i, own in entry.placement.owners.items():
+                for o in own:
+                    if o in live and o < n:
+                        for p in entry.paths:
+                            yield (fab.hosts[o],
+                                   ReplicaPlacement.stripe_key(p, i))
+
+    def _pin_once(self, entry: DatasetEntry, t: float) -> None:
+        for host, key in self._entry_keys(entry, t):
+            host.store.pin(key)
+
+    def _unpin_once(self, entry: DatasetEntry, t: float) -> None:
+        for host, key in self._entry_keys(entry, t):
+            host.store.unpin(key)
+
+    def _drop_replicas(self, entry: DatasetEntry) -> None:
+        """Drop every replica key of `entry` from every store (any pins
+        go with them — `NodeLocalStore.drop` semantics)."""
+        if entry.placement is None:
+            keys = list(entry.paths)
+        else:
+            keys = [ReplicaPlacement.stripe_key(p, i)
+                    for i in entry.placement.owners for p in entry.paths]
+        for host in self.fabric.hosts:
+            for key in keys:
+                host.store.drop(key)
+
+    def _after_stage(self, entry: DatasetEntry, rep: StagingReport,
+                     t_done: float) -> None:
+        """Record who holds the fresh replicas (stage engines deliver to
+        every live host; the replicated engine reports its placement)."""
+        entry.placement = rep.placement
+        if rep.placement is not None:
+            entry.holders = set(rep.placement.hosts())
+        else:
+            fab = self.fabric
+            entry.holders = (set(range(fab.n_hosts)) if fab.faults.trivial
+                             else set(fab.live_ids(t_done)))
+
     # -- lease lifecycle ----------------------------------------------------
     def acquire(self, session_id: str, name: str, t: float) -> Lease:
         """Lease dataset `name` for `session_id` at simulated time `t`.
@@ -293,12 +383,14 @@ class StagingService:
         RESIDENT at `t`  -> lease immediately (``t_ready == t``).
         STAGING at `t`   -> coalesce: join the in-flight stage, share its
                             completion time. No second stage is run.
+        DEGRADED at `t`  -> repair (:meth:`re_replicate`) and lease at the
+                            repair's completion — never a wedge.
         REGISTERED/GONE  -> stage (transparent re-stage on miss), possibly
                             evicting unleased datasets or queueing on a
                             future lease release first.
 
-        The dataset's files are lease-pinned in every node-local store
-        until the matching :meth:`release`.
+        The dataset's replica keys are lease-pinned in the live node-local
+        stores until the matching :meth:`release`.
         """
         entry = self.catalog[name]
         entry.acquires += 1
@@ -310,6 +402,12 @@ class StagingService:
                 entry.hits += 1
                 self.stats.hits += 1
             t_ready = max(t, entry.t_ready)
+        elif entry.state is DatasetState.DEGRADED:
+            # acquire on a degraded dataset triggers repair, not a wedge;
+            # counted as a repair (neither a hit nor a stage) so the
+            # fault-free invariant acquires == stages+coalesced+hits
+            # extends to ... + repairs under injected failures
+            _, t_ready = self.re_replicate(name, t)
         else:                                # REGISTERED or GONE
             restage = entry.state is DatasetState.GONE
             t_admit = self._admit(entry, t)
@@ -320,14 +418,13 @@ class StagingService:
             entry.t_ready = t_done
             entry.stage_count += 1
             entry.to_state(DatasetState.RESIDENT, t_done)
+            self._after_stage(entry, rep, t_done)
             self.stats.stages += 1
             self.stats.restages += int(restage)
             self.stats.stage_time += rep.total_time
             t_ready = t_done
         entry.leases[session_id] = entry.leases.get(session_id, 0) + 1
-        for host in self.fabric.hosts:
-            for p in entry.paths:
-                host.store.pin(p)
+        self._pin_once(entry, t_ready)
         return Lease(session_id=session_id, dataset=name,
                      t_request=t, t_ready=t_ready)
 
@@ -344,19 +441,17 @@ class StagingService:
             del entry.leases[session_id]
         else:
             entry.leases[session_id] = held - 1
-        for host in self.fabric.hosts:
-            for p in entry.paths:
-                host.store.unpin(p)
+        self._unpin_once(entry, t)
         if not entry.leases:
             entry.t_unleased = max(entry.t_unleased, t)
 
     # -- admission / eviction -----------------------------------------------
     def _evict(self, entry: DatasetEntry, t: float) -> None:
         entry.to_state(DatasetState.EVICTING, t)
-        for host in self.fabric.hosts:
-            for p in entry.paths:
-                host.store.drop(p)
+        self._drop_replicas(entry)
         entry.to_state(DatasetState.GONE, t)   # drop is free bookkeeping
+        entry.holders = set()
+        entry.placement = None
         self.stats.evictions += 1
 
     def _admit(self, entry: DatasetEntry, t: float) -> float:
@@ -368,7 +463,9 @@ class StagingService:
         t_admit = t
         while self.catalog.resident_bytes + need > self.budget_bytes:
             free = [e for e in self.catalog
-                    if e.state is DatasetState.RESIDENT and not e.leases]
+                    if e.state in (DatasetState.RESIDENT,
+                                   DatasetState.DEGRADED)
+                    and not e.leases]
             now = [e for e in free if e.t_unleased <= t_admit]
             if now:
                 # cost-aware: cheapest to bring back if needed again
@@ -379,7 +476,8 @@ class StagingService:
             future = [e for e in free if e.t_unleased > t_admit]
             if not future:
                 held = {e.name: sorted(e.leases) for e in self.catalog
-                        if e.state is DatasetState.RESIDENT and e.leases}
+                        if e.state in (DatasetState.RESIDENT,
+                                       DatasetState.DEGRADED) and e.leases}
                 raise RuntimeError(
                     f"staging service wedged admitting {entry.name!r} "
                     f"({need} B): budget {self.budget_bytes} B holds "
@@ -392,6 +490,191 @@ class StagingService:
         if t_admit > t:
             self.stats.queue_waits += 1
         return t_admit
+
+    # -- fault handling / self-healing ---------------------------------------
+    def sync_faults(self, t: float) -> List[FaultEvent]:
+        """Advance the fabric's fault clock to `t` and absorb the events
+        into the catalog: a host death discards the victim from every
+        dataset's holders and degrades affected residents; a recovery
+        brings a BLANK host back, degrading fully-replicated residents
+        (which must cover every live host) until repaired. Returns the
+        events applied. Live leases are untouched either way — they keep
+        reading the surviving replicas."""
+        events = self.fabric.advance_faults(t)
+        for ev in events:
+            if ev.kind is FaultKind.HOST_DEATH:
+                self._on_host_death(ev.host, ev.t)
+            elif ev.kind is FaultKind.HOST_RECOVERY:
+                self._on_host_recovery(ev.host, ev.t)
+        return events
+
+    def _on_host_death(self, host: int, t: float) -> None:
+        self.stats.host_deaths += 1
+        for entry in self.catalog:
+            if host in entry.holders:
+                entry.holders.discard(host)
+                if entry.state is DatasetState.RESIDENT:
+                    entry.to_state(DatasetState.DEGRADED, t)
+                    self.stats.degraded_events += 1
+
+    def _on_host_recovery(self, host: int, t: float) -> None:
+        self.stats.recoveries += 1
+        for entry in self.catalog:
+            # full replication promises a replica on EVERY live host; the
+            # recovered host came back blank, so coverage is broken until
+            # repair broadcasts it a copy. Striped placements only need
+            # their R owners, which the recovered host is not — they stay
+            # RESIDENT.
+            if (entry.state is DatasetState.RESIDENT
+                    and entry.placement is None
+                    and host not in entry.holders):
+                entry.to_state(DatasetState.DEGRADED, t)
+                self.stats.degraded_events += 1
+
+    def fail_host(self, host: int, t: float) -> List[FaultEvent]:
+        """Inject a host death at `t` and absorb it immediately."""
+        self.fabric.faults.inject(
+            FaultEvent(t, FaultKind.HOST_DEATH, host=host))
+        return self.sync_faults(t)
+
+    def recover_host(self, host: int, t: float) -> List[FaultEvent]:
+        """Inject a host recovery (blank store) at `t` and absorb it."""
+        self.fabric.faults.inject(
+            FaultEvent(t, FaultKind.HOST_RECOVERY, host=host))
+        return self.sync_faults(t)
+
+    def re_replicate(self, name: str, t: float
+                     ) -> Tuple[StagingReport, float]:
+        """Repair dataset `name` back to RESIDENT at simulated time `t`.
+
+        Striped datasets copy only the LOST stripes from surviving owners
+        (`repro.core.staging.re_replicate` — cost ~ lost/P of the
+        dataset); fully replicated datasets broadcast complete replicas
+        to the live hosts missing one (recovered-blank or grown). When no
+        live copy survives at all, falls back to a full re-stage from the
+        shared FS (DEGRADED -> STAGING -> RESIDENT). Live leases keep
+        their pins throughout — repaired hosts are pinned up to the
+        current lease count, so repair is lease-preserving.
+
+        Returns ``(repair report, completion time)``. RESIDENT is a
+        no-op; any other state is an error."""
+        entry = self.catalog[name]
+        if entry.state is DatasetState.RESIDENT:
+            return (StagingReport(n_hosts=self.fabric.n_hosts,
+                                  total_bytes=0, mode="re_replicate"),
+                    max(t, entry.t_ready))
+        if entry.state is not DatasetState.DEGRADED:
+            raise RuntimeError(
+                f"cannot repair dataset {name!r} in state "
+                f"{entry.state.value} (repair applies to DEGRADED)")
+        live = self.fabric.live_ids(t)
+        count = entry.lease_count
+        if entry.placement is not None:
+            old = {i: set(own)
+                   for i, own in entry.placement.owners.items()}
+            try:
+                rep, t_done = _staging.re_replicate(
+                    self.fabric, entry.paths, entry.placement, t0=t,
+                    live=live)
+            except LostStripesError:
+                return self._restage_degraded(entry, t)
+            entry.holders = set(entry.placement.hosts())
+            if count:
+                # lease-preserving: freshly written owners take over the
+                # dead owners' pins at the current lease depth
+                for i, own in entry.placement.owners.items():
+                    for o in set(own) - old[i]:
+                        for p in entry.paths:
+                            key = ReplicaPlacement.stripe_key(p, i)
+                            for _ in range(count):
+                                self.fabric.hosts[o].store.pin(key)
+        else:
+            alive = set(live)
+            sources = sorted(entry.holders & alive)
+            targets = sorted(alive - entry.holders)
+            if not sources:
+                return self._restage_degraded(entry, t)
+            if targets:
+                rep, t_done = _staging.re_replicate_full(
+                    self.fabric, entry.paths, targets, t0=t,
+                    sources=sources)
+                if count:
+                    for o in targets:
+                        for p in entry.paths:
+                            for _ in range(count):
+                                self.fabric.hosts[o].store.pin(p)
+            else:
+                # every live host already holds a replica: the dead host
+                # simply leaves the residency set — repaired around, no
+                # bytes moved
+                rep = StagingReport(n_hosts=len(live), total_bytes=0,
+                                    mode="re_replicate")
+                t_done = t
+            entry.holders = alive
+        entry.to_state(DatasetState.RESIDENT, t_done)
+        entry.t_ready = max(entry.t_ready, t_done)
+        entry.repairs += 1
+        self.stats.repairs += 1
+        self.stats.repaired_bytes += rep.net_bytes
+        self.stats.repair_time += rep.total_time
+        return rep, t_done
+
+    def _restage_degraded(self, entry: DatasetEntry, t: float
+                          ) -> Tuple[StagingReport, float]:
+        """No live copy survives: the only way back is the shared FS.
+        The entry's bytes already count against the budget (DEGRADED
+        occupies it), so no admission pass — straight to STAGING. Live
+        leases are re-pinned onto the fresh replicas."""
+        count = entry.lease_count
+        self._drop_replicas(entry)          # stale stripes + pins go
+        entry.to_state(DatasetState.STAGING, t)
+        rep, t_done = self._stage_fn(self.fabric, entry.paths, t,
+                                     **self._stage_kw)
+        entry.last_report = rep
+        entry.t_ready = t_done
+        entry.stage_count += 1
+        entry.to_state(DatasetState.RESIDENT, t_done)
+        self._after_stage(entry, rep, t_done)
+        self.stats.stages += 1
+        self.stats.restages += 1
+        self.stats.stage_time += rep.total_time
+        for _ in range(count):
+            self._pin_once(entry, t_done)
+        return rep, t_done
+
+    # -- elasticity ----------------------------------------------------------
+    def resize(self, n_hosts: int, t: float) -> List[int]:
+        """Elastically grow or shrink the campaign to `n_hosts` hosts at
+        simulated time `t` (`repro.core.fabric.Fabric.resize`).
+
+        Growing appends BLANK hosts: fully replicated residents degrade
+        (the new hosts lack replicas) until repaired; striped placements
+        keep their stripe geometry and stay RESIDENT. Shrinking removes
+        the highest-id hosts and their replicas: striped residents that
+        lose an owner degrade; fully replicated residents stay RESIDENT
+        (every surviving host still holds a copy). Returns the affected
+        host ids."""
+        grow = n_hosts > self.fabric.n_hosts
+        changed = self.fabric.resize(n_hosts)
+        self.stats.resizes += 1
+        if grow:
+            for entry in self.catalog:
+                if (entry.state is DatasetState.RESIDENT
+                        and entry.placement is None):
+                    entry.to_state(DatasetState.DEGRADED, t)
+                    self.stats.degraded_events += 1
+        else:
+            removed = set(changed)
+            for entry in self.catalog:
+                entry.holders -= removed
+                if (entry.state is DatasetState.RESIDENT
+                        and entry.placement is not None
+                        and any(o in removed
+                                for own in entry.placement.owners.values()
+                                for o in own)):
+                    entry.to_state(DatasetState.DEGRADED, t)
+                    self.stats.degraded_events += 1
+        return changed
 
     # -- write-back ---------------------------------------------------------
     def put_result(self, session_id: str, name: str, data: np.ndarray,

@@ -35,6 +35,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core.collectives import CollectivePlan, CollectivePlanner
+from repro.core.faults import FaultEvent, FaultKind, FaultSchedule
 from repro.core.topology import FLAT, Topology, TopologyLike, resolve_topology
 
 
@@ -252,11 +253,21 @@ class Interconnect:
     ``bytes_moved`` (total) and ``tier_bytes`` (per topology tier);
     callers place the duration on their own timeline (collectives from
     disjoint host groups may overlap, so there is no global busy stream
-    here)."""
+    here).
+
+    ``faults`` is the fabric's `repro.core.faults.FaultSchedule`; when it
+    is non-trivial, collectives issued at simulated time ``t`` (the new
+    optional ``t=`` argument; default ``now``, the fault clock advanced by
+    ``Fabric.advance_faults``) are planned over the LIVE host set with
+    ring/tree re-routing latency for the dead, under per-tier degraded
+    bandwidth. A trivial (empty) schedule takes the exact pre-fault code
+    path — bit-exact zero-fault accounting."""
     constants: FabricConstants
     topology: Topology = FLAT
     bytes_moved: int = 0
     tier_bytes: Dict[str, int] = field(default_factory=dict)
+    faults: Optional[FaultSchedule] = None
+    now: float = 0.0                  # fault clock (advance_faults)
 
     def __post_init__(self) -> None:
         self._planner = CollectivePlanner(self.topology, self.constants)
@@ -293,6 +304,42 @@ class Interconnect:
         finally:
             self.topology = prev
 
+    # -- fault awareness ----------------------------------------------------
+    @contextmanager
+    def scoped_faults(self, faults: Optional[FaultSchedule]
+                      ) -> Iterator[None]:
+        """Temporarily bind `faults` for one staging operation (how a
+        per-call ``FaultConfig`` on an engine config takes effect);
+        ``None`` keeps the current binding — a no-op."""
+        if faults is None:
+            yield
+            return
+        prev = self.faults
+        self.faults = faults
+        try:
+            yield
+        finally:
+            self.faults = prev
+
+    def _fault_state(self, t: Optional[float], n_hosts: int
+                     ) -> Tuple[CollectivePlanner, int]:
+        """``(planner, dead)`` for a collective over `n_hosts` issued at
+        `t`: the planner carries any degraded tier scales active at `t`
+        and `dead` counts schedule members to re-route around. The
+        trivial schedule returns the bound planner untouched — the exact
+        pre-fault path."""
+        sched = self.faults
+        if sched is None or sched.trivial:
+            return self.planner, 0
+        tq = self.now if t is None else t
+        dead = min(sched.n_dead(tq, n_hosts), max(n_hosts - 1, 0))
+        factors = sched.tier_factors(self.topology.tier_names(), tq)
+        planner = self.planner
+        if factors:
+            planner = CollectivePlanner(self.topology.degraded(factors),
+                                        self.constants)
+        return planner, dead
+
     # -- execution: plan + account ------------------------------------------
     def execute(self, plan: CollectivePlan) -> float:
         """Account `plan`'s wire traffic and return its duration."""
@@ -311,32 +358,62 @@ class Interconnect:
                 if v - snapshot.get(k, 0)}
 
     def broadcast(self, nbytes: int, n_hosts: int,
-                  algorithm: Optional[str] = None) -> float:
+                  algorithm: Optional[str] = None,
+                  t: Optional[float] = None) -> float:
         """Duration (s) of a one-root broadcast of `nbytes` to `n_hosts`
         hosts, planned over the bound topology (algorithm selected by the
-        cost model unless pinned or given)."""
+        cost model unless pinned or given). `t` is the issue time consulted
+        against the fault schedule (default: the fault clock ``now``)."""
+        planner, dead = self._fault_state(t, n_hosts)
         return self.execute(
-            self.planner.plan_broadcast(nbytes, n_hosts, algorithm))
+            planner.plan_broadcast(nbytes, n_hosts - dead, algorithm,
+                                   dead=dead))
 
     def allgather(self, shard_bytes: int, n_hosts: int,
-                  algorithm: Optional[str] = None) -> float:
+                  algorithm: Optional[str] = None,
+                  t: Optional[float] = None) -> float:
         """Duration (s) of an all-gather where each of `n_hosts` hosts
-        contributes `shard_bytes`, planned over the bound topology."""
+        contributes `shard_bytes`, planned over the bound topology (dead
+        hosts at issue time `t` are re-routed around)."""
+        planner, dead = self._fault_state(t, n_hosts)
         return self.execute(
-            self.planner.plan_allgather(shard_bytes, n_hosts, algorithm))
+            planner.plan_allgather(shard_bytes, n_hosts - dead, algorithm,
+                                   dead=dead))
 
     def scatter(self, total_bytes: int, n_hosts: int,
-                algorithm: Optional[str] = None) -> float:
+                algorithm: Optional[str] = None,
+                t: Optional[float] = None) -> float:
         """Duration (s) of a root scatter of `total_bytes` into 1/P
-        shards, planned over the bound topology."""
+        shards, planned over the bound topology (dead hosts at issue time
+        `t` are re-routed around)."""
+        planner, dead = self._fault_state(t, n_hosts)
         return self.execute(
-            self.planner.plan_scatter(total_bytes, n_hosts, algorithm))
+            planner.plan_scatter(total_bytes, n_hosts - dead, algorithm,
+                                 dead=dead))
 
-    def point_to_point_time(self, nbytes: int) -> float:
+    def replichain(self, stripe_bytes: int, n_hosts: int, replication: int,
+                   t: Optional[float] = None) -> float:
+        """Duration (s) of R-way chained stripe replication (the comm
+        phase of ``stage_replicated``); degraded tiers at `t` apply."""
+        planner, _ = self._fault_state(t, n_hosts)
+        return self.execute(
+            planner.plan_replichain(stripe_bytes, n_hosts, replication))
+
+    def repair(self, transfers: List[Tuple[int, int, int]], n_hosts: int,
+               t: Optional[float] = None) -> float:
+        """Duration (s) of an explicit point-to-point repair schedule
+        (``[(src, dst, nbytes), ...]``; see
+        `repro.core.collectives.CollectivePlanner.plan_repair`)."""
+        planner, _ = self._fault_state(t, n_hosts)
+        return self.execute(planner.plan_repair(transfers, n_hosts))
+
+    def point_to_point_time(self, nbytes: int,
+                            t: Optional[float] = None) -> float:
         """Duration (s) of one `nbytes` off-machine message (the
         detector->leader ingest hop in `repro.core.streaming`), charged
-        to the topology's ingest tier."""
-        return self.execute(self.planner.plan_point_to_point(nbytes))
+        to the topology's ingest tier (degraded at `t` if scheduled)."""
+        planner, _ = self._fault_state(t, 1)
+        return self.execute(planner.plan_point_to_point(nbytes))
 
     # -- deprecated aliases (pre-topology names) ----------------------------
     def ring_allgather_time(self, shard_bytes: int, n_hosts: int) -> float:
@@ -389,10 +466,16 @@ class NodeLocalStore:
 
     def read(self, path: str) -> Optional[np.ndarray]:
         """The stored buffer, or None on miss. No time is charged here —
-        see the class docstring for who pays ``local_read_bw``."""
+        see the class docstring for who pays ``local_read_bw``.
+
+        A hit TOUCHES the entry (moved to most-recently-used), so
+        :meth:`evict_lru` sees true access recency, not insertion order —
+        a hot-but-old entry is no longer the first eviction victim."""
         if path in self.data:
             self.hits += 1
-            return self.data[path]
+            val = self.data.pop(path)   # re-insert: dict order = LRU order
+            self.data[path] = val
+            return val
         self.misses += 1
         return None
 
@@ -417,9 +500,18 @@ class NodeLocalStore:
         self.data.pop(path, None)
         self.pinned.pop(path, None)
 
+    def wipe(self) -> None:
+        """Lose EVERYTHING — the host died (`repro.core.faults`). All
+        resident data and every pin ref go at once; counters survive
+        (they describe history, not state). No simulated time charged:
+        node RAM vanishes, it is not drained."""
+        self.data.clear()
+        self.pinned.clear()
+
     def evict_lru(self, budget_bytes: int) -> None:
-        """Drop unpinned entries (insertion order ~ LRU) until resident
-        bytes fit `budget_bytes`. No simulated time charged."""
+        """Drop unpinned entries in true LRU order (reads re-insert at
+        the MRU end — see :meth:`read`) until resident bytes fit
+        `budget_bytes`. No simulated time charged."""
         total = sum(v.size for v in self.data.values())
         for path in list(self.data):
             if total <= budget_bytes:
@@ -447,18 +539,43 @@ class Fabric:
     `topology` shapes the interconnect (any loose spelling — a
     `repro.core.topology.Topology`, a ``TopologyConfig``, or a canned
     name like ``"bgq_torus"``); the default ``None`` is the FLAT
-    backward-compat machine."""
+    backward-compat machine.
+
+    `faults` is the fabric's fault timeline (`repro.core.faults`); the
+    default is the TRIVIAL empty schedule, which keeps every code path
+    bit-exact with the pre-fault model. State-changing events (a host
+    death wipes its node-local store) apply when the simulation clock is
+    advanced past them via :meth:`advance_faults`; timing effects
+    (degraded tiers, dead-host re-routing) apply per-collective at the
+    issue time passed to the `Interconnect` methods."""
 
     def __init__(self, n_hosts: int, ranks_per_host: int = 16,
                  constants: FabricConstants = BGQ,
-                 topology: TopologyLike = None):
+                 topology: TopologyLike = None,
+                 faults: Optional[FaultSchedule] = None):
         self.constants = constants
         self.fs = SharedFilesystem(constants)
         self.net = Interconnect(constants,
-                                topology=resolve_topology(topology))
+                                topology=resolve_topology(topology),
+                                faults=(faults if faults is not None
+                                        else FaultSchedule()))
         self.hosts = [Host(i, ranks_per_host,
                            NodeLocalStore(i, constants))
                       for i in range(n_hosts)]
+        self._ranks_per_host = ranks_per_host
+        self._faults_applied: set = set()
+
+    @property
+    def faults(self) -> FaultSchedule:
+        """The fault timeline in effect — the `Interconnect` binding, so
+        a per-stage ``scoped_faults`` overlay is visible to everything
+        that asks the fabric (live-host selection in the staging engines,
+        catalog transitions), not just to collective timing."""
+        return self.net.faults
+
+    @faults.setter
+    def faults(self, sched: FaultSchedule) -> None:
+        self.net.faults = sched
 
     @property
     def n_hosts(self) -> int:
@@ -470,3 +587,88 @@ class Fabric:
 
     def leader_hosts(self) -> List[Host]:
         return self.hosts
+
+    # -- fault injection ----------------------------------------------------
+    def advance_faults(self, t: float) -> List[FaultEvent]:
+        """Advance the fault clock to simulated time `t`, applying every
+        not-yet-applied event at or before `t` in timeline order (a host
+        death wipes that host's node-local store, pins included; a
+        recovery brings the host back BLANK). Returns the events applied
+        by THIS call — `repro.core.datasvc.StagingService.sync_faults`
+        turns them into catalog transitions."""
+        applied: List[FaultEvent] = []
+        for ev in self.faults.events:
+            if ev.t > t:
+                break
+            key = (ev.t, ev.kind, ev.host, ev.tier, ev.t_end, ev.factor)
+            if key in self._faults_applied:
+                continue
+            self._faults_applied.add(key)
+            if (ev.kind is FaultKind.HOST_DEATH
+                    and ev.host < len(self.hosts)):
+                self.hosts[ev.host].store.wipe()
+            applied.append(ev)
+        self.net.now = max(self.net.now, t)
+        return applied
+
+    def kill_host(self, host: int, t: float) -> FaultEvent:
+        """Inject a host death at simulated time `t` and apply it now."""
+        ev = self.faults.inject(FaultEvent(t, FaultKind.HOST_DEATH,
+                                           host=host))
+        self.advance_faults(t)
+        return ev
+
+    def recover_host(self, host: int, t: float) -> FaultEvent:
+        """Inject a host recovery (blank store) at `t` and apply it."""
+        ev = self.faults.inject(FaultEvent(t, FaultKind.HOST_RECOVERY,
+                                           host=host))
+        self.advance_faults(t)
+        return ev
+
+    def degrade_tier(self, tier: str, t: float, t_end: float,
+                     factor: float) -> FaultEvent:
+        """Inject a link-tier degradation window ``[t, t_end)`` running at
+        ``factor`` of healthy bandwidth."""
+        ev = self.faults.inject(FaultEvent(t, FaultKind.LINK_DEGRADE,
+                                           tier=tier, t_end=t_end,
+                                           factor=factor))
+        self.advance_faults(self.net.now)
+        return ev
+
+    def dead_ids(self, t: Optional[float] = None) -> List[int]:
+        """Host ids dead at `t` (default: the fault clock ``now``)."""
+        tq = self.net.now if t is None else t
+        return sorted(h for h in self.faults.dead_hosts(tq)
+                      if h < len(self.hosts))
+
+    def live_ids(self, t: Optional[float] = None) -> List[int]:
+        """Host ids alive at `t` (default: the fault clock ``now``)."""
+        dead = set(self.dead_ids(t))
+        return [h.host_id for h in self.hosts if h.host_id not in dead]
+
+    def live_hosts(self, t: Optional[float] = None) -> List[Host]:
+        """The :class:`Host` objects alive at `t`."""
+        dead = set(self.dead_ids(t))
+        return [h for h in self.hosts if h.host_id not in dead]
+
+    # -- elasticity ---------------------------------------------------------
+    def resize(self, n_hosts: int) -> List[int]:
+        """Elastically grow or shrink the fabric to `n_hosts` hosts
+        mid-campaign. Growing appends BLANK hosts (ids continue the
+        sequence); shrinking removes the highest-id hosts and their
+        node-local replicas with them. Returns the affected host ids.
+        The catalog-level consequences (grown hosts lack replicas;
+        shrunk hosts take redundancy with them) are handled by
+        `repro.core.datasvc.StagingService.resize`."""
+        if n_hosts < 1:
+            raise ValueError(f"cannot resize to {n_hosts} hosts")
+        old = len(self.hosts)
+        if n_hosts > old:
+            self.hosts.extend(
+                Host(i, self._ranks_per_host,
+                     NodeLocalStore(i, self.constants))
+                for i in range(old, n_hosts))
+            return list(range(old, n_hosts))
+        removed = list(range(n_hosts, old))
+        del self.hosts[n_hosts:]
+        return removed

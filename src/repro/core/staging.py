@@ -61,6 +61,8 @@ class StagingReport:
     mode: str = "collective"      # collective|pipelined|naive|stream|stage_out
     n_chunks: int = 0             # pipelined: total all-gather segments
     overlap_saved: float = 0.0    # pipelined: phase time hidden by overlap
+    # replicated engine / repair collectives: where the stripes live
+    placement: Optional["ReplicaPlacement"] = None
 
     @property
     def total_time(self) -> float:
@@ -84,6 +86,83 @@ def _stripes(total: int, parts: int) -> List[Tuple[int, int]]:
         out.append((off, sz))
         off += sz
     return out
+
+
+class ReplicaLossError(RuntimeError):
+    """Repair cannot proceed from surviving replicas alone (a full
+    re-stage from the shared FS is the only way back to RESIDENT)."""
+
+
+class LostStripesError(ReplicaLossError):
+    """Every owner of at least one stripe is dead — the striped dataset
+    has no complete copy left on the nodes."""
+
+
+@dataclass
+class ReplicaPlacement:
+    """Which hosts own which stripe of a striped, R-way replicated
+    dataset (the ``stage_replicated`` engine).
+
+    Stripe ``i`` of every file lives on ``owners[i]`` under the store key
+    :meth:`stripe_key`. The default layout is chained declustering
+    (:meth:`chained`): stripe ``i`` on hosts ``i .. i+R-1`` (mod P), so
+    any single host death leaves R-1 surviving owners per affected
+    stripe. Mutable on purpose — ``re_replicate`` reassigns ownership
+    when it copies a lost stripe to a new host."""
+    replication: int
+    owners: Dict[int, Tuple[int, ...]]    # stripe index -> owner hosts
+
+    @classmethod
+    def chained(cls, hosts: Sequence[int], replication: int
+                ) -> "ReplicaPlacement":
+        """Chained-declustering layout over `hosts` (one stripe each)."""
+        L = len(hosts)
+        if not 1 <= replication <= L:
+            raise ValueError(
+                f"replication must be in [1, n_hosts={L}], "
+                f"got {replication}")
+        return cls(replication=replication,
+                   owners={i: tuple(hosts[(i + r) % L]
+                                    for r in range(replication))
+                           for i in range(L)})
+
+    @staticmethod
+    def stripe_key(path: str, stripe: int) -> str:
+        """Node-local store key of one stripe of `path`."""
+        return f"{path}::s{stripe}"
+
+    @property
+    def n_stripes(self) -> int:
+        return len(self.owners)
+
+    def hosts(self) -> Tuple[int, ...]:
+        """Every host owning at least one stripe, sorted."""
+        return tuple(sorted({o for own in self.owners.values()
+                             for o in own}))
+
+    def stripes_on(self, host: int) -> List[int]:
+        return [i for i, own in self.owners.items() if host in own]
+
+    def lost(self, live: Sequence[int]) -> List[int]:
+        """Stripes with NO surviving owner among `live` (unrepairable
+        from node memory)."""
+        alive = set(live)
+        return [i for i, own in sorted(self.owners.items())
+                if not any(o in alive for o in own)]
+
+    def degraded(self, live: Sequence[int]) -> List[int]:
+        """Stripes that lost at least one (but not every) owner."""
+        alive = set(live)
+        return [i for i, own in sorted(self.owners.items())
+                if any(o not in alive for o in own)
+                and any(o in alive for o in own)]
+
+    def covered_by(self, holders: Sequence[int]) -> bool:
+        """True when every stripe has ALL its owners in `holders` —
+        full R-way redundancy intact."""
+        hold = set(holders)
+        return all(all(o in hold for o in own)
+                   for own in self.owners.values())
 
 
 def readonly_view(data: np.ndarray) -> np.ndarray:
@@ -110,16 +189,21 @@ def _replica_view(fabric: Fabric, path: str) -> np.ndarray:
     return readonly_view(fabric.fs.files[path])
 
 
-def _deliver_replicas(fabric: Fabric, paths: Sequence[str]) -> float:
-    """Write one shared replica view per file to every node-local store.
+def _deliver_replicas(fabric: Fabric, paths: Sequence[str],
+                      t: Optional[float] = None) -> float:
+    """Write one shared replica view per file to every LIVE node-local
+    store (`t` is the delivery time consulted against the fault schedule;
+    the trivial schedule delivers to every host — the pre-fault path).
 
     Hosts write in parallel (max across hosts); a host's files serialize on
     its local-store bandwidth (times ACCUMULATE across files — the seed took
     a max, undercounting multi-file staging).
     """
     replicas = {p: _replica_view(fabric, p) for p in paths}
+    hosts = (fabric.hosts if fabric.faults.trivial
+             else fabric.live_hosts(t))
     t_write = 0.0
-    for host in fabric.hosts:
+    for host in hosts:
         t_write = max(t_write, host.store.write_many(replicas, 0.0))
     return t_write
 
@@ -166,9 +250,11 @@ def stage_collective(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
 
         # phase 2: all-gather of the (max) stripe, all hosts in parallel
         stripe_bytes = max(1, (total + P_ - 1) // P_)
-        rep.comm_time = fabric.net.allgather(stripe_bytes, P_)
+        rep.comm_time = fabric.net.allgather(stripe_bytes, P_,
+                                             t=t_read_done)
 
-        rep.write_time = _deliver_replicas(fabric, paths)
+        rep.write_time = _deliver_replicas(fabric, paths,
+                                           t=t_read_done + rep.comm_time)
         rep.fs_bytes = fabric.fs.bytes_read - fs0
         rep.net_bytes = fabric.net.bytes_moved - net0
         rep.tier_bytes = fabric.net.tier_delta(tier0)
@@ -221,7 +307,8 @@ def stage_pipelined(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
                     path, [(off + o, s) for o, s in _stripes(seg, P_)],
                     t0, coordinated=True)
                 seg_stripe = max(1, (seg + P_ - 1) // P_)
-                dt = fabric.net.allgather(seg_stripe, P_)
+                dt = fabric.net.allgather(seg_stripe, P_,
+                                          t=max(t_comm, t_seg))
                 comm_total += dt
                 t_comm = max(t_comm, t_seg) + dt     # gather rides behind
                 rep.n_chunks += 1
@@ -230,7 +317,7 @@ def stage_pipelined(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
         rep.comm_time = max(0.0, t_comm - t_read_done)   # exposed (unhidden)
         rep.overlap_saved = comm_total - rep.comm_time
 
-        rep.write_time = _deliver_replicas(fabric, paths)
+        rep.write_time = _deliver_replicas(fabric, paths, t=t_comm)
         rep.fs_bytes = fabric.fs.bytes_read - fs0
         rep.net_bytes = fabric.net.bytes_moved - net0
         rep.tier_bytes = fabric.net.tier_delta(tier0)
@@ -267,6 +354,189 @@ def stage_naive(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     rep.write_time = total / fabric.constants.local_bw
     rep.fs_bytes = fabric.fs.bytes_read - fs0
     return rep, t0 + rep.total_time
+
+
+# ---------------------------------------------------------------------------
+# replica-aware staging + repair collectives (fault tolerance)
+# ---------------------------------------------------------------------------
+
+def stage_replicated(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
+                     replication: int = 2, topology: TopologyLike = None
+                     ) -> Tuple[StagingReport, float]:
+    """R-way stripe-replicated staging: the fault-tolerant middle ground
+    between ``stage_collective`` (R=P, every host a full replica) and
+    bare striping (R=1, any death loses data).
+
+    Phase 1 is the identical coordinated disjoint-stripe read (aggregate
+    FS traffic = 1x the dataset). Phase 2 replaces the all-gather with
+    R-1 rounds of chained stripe forwarding
+    (:meth:`~repro.core.collectives.CollectivePlanner.plan_replichain`):
+    stripe ``i`` ends up on hosts ``i .. i+R-1`` (mod P) under the store
+    key ``path::s{i}`` — interconnect traffic is (R-1)/(P-1) of the full
+    all-gather, node memory R/P of a full replica per host. The returned
+    report carries the :class:`ReplicaPlacement`; ``re_replicate`` uses
+    it to restore redundancy after a host death at a cost proportional to
+    the LOST stripes, not the dataset.
+
+    Hosts dead at `t0` (non-trivial fault schedule only) are excluded
+    from the stripe geometry entirely."""
+    with fabric.net.scoped_topology(topology):
+        live = (list(range(fabric.n_hosts)) if fabric.faults.trivial
+                else fabric.live_ids(t0))
+        L = len(live)
+        fs0 = fabric.fs.bytes_read
+        net0 = fabric.net.bytes_moved
+        tier0 = fabric.net.tier_snapshot()
+        total = sum(fabric.fs.size(p) for p in paths)
+        rep = StagingReport(n_hosts=L, total_bytes=total, mode="replicated",
+                            placement=ReplicaPlacement.chained(live,
+                                                               replication))
+
+        coll_overhead = _coll_overhead(fabric)
+        t_read_done = t0
+        for path in paths:
+            size = fabric.fs.size(path)
+            _, t_file = fabric.fs.read_striped(path, _stripes(size, L), t0,
+                                               coordinated=True)
+            t_read_done = max(t_read_done, t_file) + coll_overhead
+        rep.stage_time = t_read_done - t0
+
+        stripe_bytes = max(1, (total + L - 1) // L)
+        rep.comm_time = fabric.net.replichain(stripe_bytes, L, replication,
+                                              t=t_read_done)
+
+        # deliver each stripe view to its R owners; a host's writes
+        # serialize on its local-store bandwidth, hosts run in parallel
+        t_host: Dict[int, float] = {}
+        for path in paths:
+            size = fabric.fs.size(path)
+            for i, (off, sz) in enumerate(_stripes(size, L)):
+                view = readonly_view(fabric.fs.files[path][off:off + sz])
+                key = ReplicaPlacement.stripe_key(path, i)
+                for o in rep.placement.owners[i]:
+                    t_host[o] = fabric.hosts[o].store.write(
+                        key, view, t_host.get(o, 0.0))
+        rep.write_time = max(t_host.values(), default=0.0)
+
+        rep.fs_bytes = fabric.fs.bytes_read - fs0
+        rep.net_bytes = fabric.net.bytes_moved - net0
+        rep.tier_bytes = fabric.net.tier_delta(tier0)
+        return rep, t0 + rep.total_time
+
+
+def re_replicate(fabric: Fabric, paths: Sequence[str],
+                 placement: ReplicaPlacement, t0: float = 0.0,
+                 live: Optional[Sequence[int]] = None,
+                 topology: TopologyLike = None
+                 ) -> Tuple[StagingReport, float]:
+    """Restore R-way redundancy of a striped dataset after host loss.
+
+    For every stripe with dead owners, a surviving owner sends the stripe
+    to a replacement live host (explicit point-to-point schedule via
+    :meth:`~repro.core.collectives.CollectivePlanner.plan_repair`; the
+    shared FS is never touched). Cost is proportional to the LOST
+    stripes — roughly ``lost/P`` of the dataset per dead owner slot —
+    which is what makes repair beat a full re-stage at large P.
+    `placement` is updated in place (ownership moves to the replacement
+    hosts). Raises :class:`LostStripesError` when some stripe has no
+    surviving owner (caller must fall back to a full re-stage)."""
+    with fabric.net.scoped_topology(topology):
+        if live is None:
+            live = fabric.live_ids(t0)
+        alive = set(live)
+        lost = placement.lost(live)
+        if lost:
+            raise LostStripesError(
+                f"stripes {lost} have no surviving owner among live hosts "
+                f"{sorted(alive)}; repair impossible — full re-stage "
+                f"required")
+        net0 = fabric.net.bytes_moved
+        tier0 = fabric.net.tier_snapshot()
+        L = placement.n_stripes
+        # per-stripe byte size summed over files (one repair transfer
+        # per replaced owner slot covers every file's stripe i)
+        stripe_sizes = [0] * L
+        views: List[List[Tuple[str, np.ndarray]]] = [[] for _ in range(L)]
+        for path in paths:
+            size = fabric.fs.size(path)
+            for i, (off, sz) in enumerate(_stripes(size, L)):
+                stripe_sizes[i] += sz
+                views[i].append(
+                    (ReplicaPlacement.stripe_key(path, i),
+                     readonly_view(fabric.fs.files[path][off:off + sz])))
+        transfers: List[Tuple[int, int, int]] = []
+        t_host: Dict[int, float] = {}
+        repaired = 0
+        for i in sorted(placement.owners):
+            owners = placement.owners[i]
+            survivors = [o for o in owners if o in alive]
+            n_dead = len(owners) - len(survivors)
+            if not n_dead:
+                continue
+            new_owners = list(survivors)
+            for j in range(n_dead):
+                cands = [h for h in live if h not in new_owners]
+                if not cands:
+                    break            # fewer live hosts than R: degrade R
+                dst = cands[(i + j) % len(cands)]
+                src = survivors[j % len(survivors)]
+                transfers.append((src, dst, stripe_sizes[i]))
+                repaired += stripe_sizes[i]
+                for key, view in views[i]:
+                    t_host[dst] = fabric.hosts[dst].store.write(
+                        key, view, t_host.get(dst, 0.0))
+                new_owners.append(dst)
+            placement.owners[i] = tuple(new_owners)
+        rep = StagingReport(n_hosts=len(live), total_bytes=repaired,
+                            mode="re_replicate", placement=placement)
+        rep.comm_time = fabric.net.repair(transfers, fabric.n_hosts, t=t0)
+        rep.write_time = max(t_host.values(), default=0.0)
+        rep.net_bytes = fabric.net.bytes_moved - net0
+        rep.tier_bytes = fabric.net.tier_delta(tier0)
+        return rep, t0 + rep.total_time
+
+
+def re_replicate_full(fabric: Fabric, paths: Sequence[str],
+                      targets: Sequence[int], t0: float = 0.0,
+                      sources: Optional[Sequence[int]] = None,
+                      topology: TopologyLike = None
+                      ) -> Tuple[StagingReport, float]:
+    """Restore FULL replicas on `targets` (hosts missing the dataset —
+    recovered-blank or newly grown) from surviving holders, without
+    touching the shared FS.
+
+    `sources` defaults to the hosts whose node-local stores hold every
+    path. Targets round-robin across sources; each target receives the
+    whole dataset in one point-to-point schedule (receiver NICs
+    serialize). Raises :class:`ReplicaLossError` when no complete live
+    copy exists (full re-stage required)."""
+    with fabric.net.scoped_topology(topology):
+        want = set(targets)
+        if sources is None:
+            sources = [h.host_id for h in fabric.hosts
+                       if h.host_id not in want
+                       and all(p in h.store.data for p in paths)]
+        if not sources:
+            raise ReplicaLossError(
+                f"no live host holds a complete replica of {list(paths)}; "
+                f"repair impossible — full re-stage required")
+        net0 = fabric.net.bytes_moved
+        tier0 = fabric.net.tier_snapshot()
+        total = sum(fabric.fs.size(p) for p in paths)
+        replicas = {p: _replica_view(fabric, p) for p in paths}
+        transfers = [(sources[k % len(sources)], dst, total)
+                     for k, dst in enumerate(sorted(want))]
+        rep = StagingReport(n_hosts=len(want), total_bytes=total,
+                            mode="re_replicate")
+        rep.comm_time = fabric.net.repair(transfers, fabric.n_hosts, t=t0)
+        t_write = 0.0
+        for dst in sorted(want):
+            t_write = max(t_write,
+                          fabric.hosts[dst].store.write_many(replicas, 0.0))
+        rep.write_time = t_write
+        rep.net_bytes = fabric.net.bytes_moved - net0
+        rep.tier_bytes = fabric.net.tier_delta(tier0)
+        return rep, t0 + rep.total_time
 
 
 # ---------------------------------------------------------------------------

@@ -86,6 +86,7 @@ class StreamReport:
     stall_time: float = 0.0        # total backpressure wait across frames
     evictions: int = 0             # frames dropped from the sliding window
     peak_resident_bytes: int = 0   # high-water mark of the node window
+    degraded_deliveries: int = 0   # frames delivered around dead hosts
     net_bytes: int = 0             # interconnect traffic (scatter+broadcast)
     # interconnect bytes per topology tier (sums to net_bytes)
     tier_bytes: Dict[str, int] = field(default_factory=dict)
@@ -184,6 +185,7 @@ class StreamStager:
         self.stall_time = 0.0
         self.evictions = 0
         self.peak_resident = 0
+        self.degraded_deliveries = 0    # frames that skipped dead hosts
         self._resident: Dict[str, int] = {}     # path -> bytes, arrival order
         self._released: Dict[str, float] = {}   # path -> simulated release t
         self._pinned: Dict[str, int] = {}       # path -> pin refcount
@@ -196,14 +198,25 @@ class StreamStager:
     def _resident_bytes(self) -> int:
         return sum(self._resident.values())
 
+    def _delivery_hosts(self, t: float) -> List["object"]:
+        """The hosts a frame lands on: all of them on a healthy fabric
+        (the exact pre-fault path), the LIVE set at simulated time `t`
+        under a non-trivial fault schedule — a dead host's store receives
+        nothing (degraded ingest: acquisition keeps running, the dead
+        node just misses frames until it recovers and re-acquires)."""
+        if self.fabric.faults.trivial:
+            return self.fabric.hosts
+        return self.fabric.live_hosts(t)
+
     def _pinned_anywhere(self, path: str) -> bool:
         """Pinned by this stager OR by any other holder in the node-local
         stores (e.g. a dataset-service lease on the same paths) — window
         eviction must respect foreign pins, not just its own. Store pins
-        are symmetric across hosts, so host 0 is representative."""
+        are symmetric across LIVE hosts (a dead host's pins were wiped
+        with its store), so the first live host is representative."""
+        hosts = self._delivery_hosts(self.fabric.net.now)
         return (path in self._pinned
-                or (bool(self.fabric.hosts)
-                    and path in self.fabric.hosts[0].store.pinned))
+                or (bool(hosts) and path in hosts[0].store.pinned))
 
     def _evictable(self, path: str, t: float) -> bool:
         return (not self._pinned_anywhere(path)
@@ -268,13 +281,19 @@ class StreamStager:
 
         owner = len(self.records) % self.fabric.n_hosts
         with net.scoped_topology(self._topology):
-            self._nic_busy = t_admit + net.point_to_point_time(nbytes)
+            # issue times feed the fault schedule: a degraded ingest tier
+            # or a dead host at THIS frame's delivery slows/reroutes it
+            self._nic_busy = t_admit + net.point_to_point_time(nbytes,
+                                                               t=t_admit)
             t_bc = max(self._nic_busy, self._bcast_busy)
             self._bcast_busy = t_bc + net.broadcast(nbytes,
-                                                    self.fabric.n_hosts)
+                                                    self.fabric.n_hosts,
+                                                    t=t_bc)
         t_avail = self._bcast_busy + nbytes / c.local_bw
 
-        for host in self.fabric.hosts:
+        targets = self._delivery_hosts(t_bc)
+        self.degraded_deliveries += int(len(targets) < self.fabric.n_hosts)
+        for host in targets:
             host.store.write(path, view, 0.0)
         self._resident[path] = nbytes
         self.peak_resident = max(self.peak_resident, self._resident_bytes())
@@ -294,9 +313,11 @@ class StreamStager:
         the budget); also pins it in every node-local store. Pins are
         refcounted (lease-aware): several holders — the I/O-hook pin
         directive, dataset-service leases — may pin the same frame, and
-        it stays exempt until every one calls :meth:`unpin`."""
+        it stays exempt until every one calls :meth:`unpin`. Only LIVE
+        hosts take the store pin — a dead host holds no replica to
+        shield, and a stranded refcount would survive its recovery."""
         pin_ref(self._pinned, path)
-        for host in self.fabric.hosts:
+        for host in self._delivery_hosts(self.fabric.net.now):
             host.store.pin(path)
 
     def unpin(self, path: str) -> None:
@@ -321,6 +342,7 @@ class StreamStager:
         rep.stall_time = self.stall_time
         rep.evictions = self.evictions
         rep.peak_resident_bytes = self.peak_resident
+        rep.degraded_deliveries = self.degraded_deliveries
         rep.net_bytes = self.fabric.net.bytes_moved - self._net0
         rep.tier_bytes = self.fabric.net.tier_delta(self._tier0)
         return rep

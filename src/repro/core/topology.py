@@ -48,11 +48,23 @@ class LinkTier:
     ``link_bw``/``link_latency`` at planning time (how :data:`FLAT` stays
     calibration-agnostic). ``bisection_cap`` is the AGGREGATE bytes/s the
     tier's cut sustains: when ``concurrent`` transfers would exceed it,
-    they share the cap instead of each getting a full link."""
+    they share the cap instead of each getting a full link.
+
+    ``scale`` is the fault-injection degradation multiplier (see
+    `repro.core.faults`): the tier delivers ``scale`` times its healthy
+    bandwidth (and bisection cap). Healthy tiers carry the default 1.0 and
+    the planner skips the multiplication entirely, so zero-fault plans are
+    bit-exact with the pre-fault model."""
     name: str
     bw: Optional[float] = None           # bytes/s per link (None: inherit)
     latency: Optional[float] = None      # s per message (None: inherit)
     bisection_cap: Optional[float] = None  # aggregate bytes/s across the cut
+    scale: float = 1.0                   # degradation multiplier in (0, 1]
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.scale <= 1.0:
+            raise ValueError(
+                f"tier scale must be in [0, 1], got {self.scale}")
 
 
 @dataclass(frozen=True)
@@ -110,6 +122,23 @@ class Topology:
         if self.inter is None:
             return (self.intra.name,)
         return (self.intra.name, self.inter.name)
+
+    def degraded(self, factors: Mapping[str, float]) -> "Topology":
+        """A copy with the named tiers' ``scale`` multiplied by `factors`
+        (fault-injection brownouts; see `repro.core.faults.FaultSchedule.
+        tier_factors`). Unknown tier names are ignored; an empty mapping
+        returns ``self`` unchanged so the healthy path shares the canned
+        instance."""
+        if not factors:
+            return self
+        intra, inter = self.intra, self.inter
+        if intra.name in factors:
+            intra = replace(intra, scale=intra.scale * factors[intra.name])
+        if inter is not None and inter.name in factors:
+            inter = replace(inter, scale=inter.scale * factors[inter.name])
+        if intra is self.intra and inter is self.inter:
+            return self
+        return replace(self, intra=intra, inter=inter)
 
 
 # -- canned machines ---------------------------------------------------------

@@ -144,9 +144,10 @@ def test_as_spec_normalizes_patterns():
 # ---------------------------------------------------------------------------
 
 def test_registry_holds_builtin_engines():
-    assert ENGINES.names() == ["collective", "naive", "pipelined", "stream"]
+    assert ENGINES.names() == ["collective", "naive", "pipelined",
+                           "replicated", "stream"]
     assert ENGINES.names(batch_only=True) == ["collective", "naive",
-                                              "pipelined"]
+                                              "pipelined", "replicated"]
     assert ENGINES.name_of(PipelinedConfig()) == "pipelined"
     cfg = ENGINES.config_for("pipelined", chunk_bytes=123)
     assert cfg == PipelinedConfig(chunk_bytes=123)

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint.store import CheckpointError, CheckpointStore
 from repro.runtime.driver import HeartbeatMonitor, TrainDriver
 
 key = jax.random.PRNGKey(0)
@@ -96,3 +96,58 @@ def test_heartbeat_monitor():
         mon.beat(w, 0.0)
     mon.beat(0, 8.0)
     assert set(mon.dead_workers(9.0)) == {1, 2, 3}
+
+
+# ---------------------------------------------------------------------------
+# restore hardening: damaged checkpoints fail loudly, naming the bad object
+# ---------------------------------------------------------------------------
+
+def test_restore_missing_shard_names_the_shard(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    tree = make_tree()
+    store.save(3, tree, n_shards=4)
+    os.remove(os.path.join(str(tmp_path), "step_00000003", "w.shard2.npy"))
+    with pytest.raises(CheckpointError, match=r"w\.shard2\.npy"):
+        store.restore(tree)
+
+
+def test_restore_truncated_shard_names_the_shard(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    tree = make_tree()
+    store.save(3, tree, n_shards=4)
+    bad = os.path.join(str(tmp_path), "step_00000003",
+                       "emb__table.shard1.npy")
+    with open(bad, "r+b") as f:
+        f.truncate(12)                       # mid-header: unreadable
+    with pytest.raises(CheckpointError,
+                       match=r"emb__table\.shard1\.npy.*unreadable"):
+        store.restore(tree)
+
+
+def test_restore_missing_full_object_names_it(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    tree = make_tree()
+    store.save(3, tree, n_shards=4)          # scalar "step" saves full
+    os.remove(os.path.join(str(tmp_path), "step_00000003", "step.full.npy"))
+    with pytest.raises(CheckpointError, match=r"step\.full\.npy"):
+        store.restore(tree)
+
+
+def test_restore_truncated_full_object_names_it(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    tree = make_tree()
+    store.save(3, tree, n_shards=4)
+    bad = os.path.join(str(tmp_path), "step_00000003", "step.full.npy")
+    with open(bad, "r+b") as f:
+        f.truncate(4)
+    with pytest.raises(CheckpointError,
+                       match=r"step\.full\.npy.*unreadable"):
+        store.restore(tree)
+
+
+def test_restore_missing_manifest_is_loud(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(3, make_tree(), n_shards=4)
+    os.remove(os.path.join(str(tmp_path), "step_00000003", "meta.json"))
+    with pytest.raises(CheckpointError, match="manifest"):
+        store.restore(make_tree())

@@ -514,3 +514,130 @@ def test_run_interactive_hedm_byte_exact_under_eviction():
                                              use_kernel=False))
             assert np.array_equal(fab.fs.files[p], ref.view(np.uint8).ravel())
     assert res.turnaround >= max(res.session_done.values())
+
+
+# ---------------------------------------------------------------------------
+# forced drop / stale pins (regression)
+# ---------------------------------------------------------------------------
+
+def test_forced_drop_restage_leaves_no_stale_pins():
+    """Regression: the forced-drop path (``_restage_degraded``) drops the
+    stale replicas WITH their lease pins and re-pins the fresh copies
+    exactly ``lease_count`` times — a surviving stale pin would shield the
+    re-staged replica from window eviction forever and make the final
+    release underflow."""
+    fab, svc = make_service(n_hosts=4)
+    l1 = svc.acquire("alice", "d0", 0.0)
+    svc.acquire("bob", "d0", l1.t_ready + 0.1)
+    entry = svc.catalog["d0"]
+    t = l1.t_ready + 1.0
+    for h in range(4):                       # every copy lost, hosts blank
+        svc.fail_host(h, t)
+        svc.recover_host(h, t + 0.5)
+    assert entry.state is DatasetState.DEGRADED
+    # acquire repairs via forced drop + shared-FS re-stage (no live copy)
+    l3 = svc.acquire("carol", "d0", t + 1.0)
+    assert entry.state is DatasetState.RESIDENT
+    assert svc.stats.restages == 1
+    # exactly the three live leases pin the fresh replicas — no stale pins
+    for host in fab.hosts:
+        for p in entry.paths:
+            assert host.store.pinned[p] == 3
+    for sess in ("alice", "bob", "carol"):
+        svc.release(sess, "d0", l3.t_ready + 1.0)
+    assert all(not h.store.pinned for h in fab.hosts)
+    # unpinned, the re-staged copy is evictable under budget pressure
+    svc.acquire("dana", "d1", l3.t_ready + 2.0)
+    svc.acquire("dana", "d2", l3.t_ready + 3.0)
+    assert entry.state is DatasetState.GONE
+
+
+# ---------------------------------------------------------------------------
+# service invariants under random schedules (satellite: property test)
+# ---------------------------------------------------------------------------
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+
+def _drive_schedule(ops):
+    """Drive a service through an arbitrary (acquire/release/put) schedule,
+    checking the budget bound after every op and the lease/counter
+    invariants at the end. ``ops`` is a list of (kind, session#, dataset#)
+    triples; impossible ops (release without a lease, acquire that would
+    wedge with nothing releasable) are skipped, wedge-avoiding releases are
+    applied first — the schedule is deterministic given ``ops``."""
+    fab, svc = make_service(sizes=(4, 4, 4), budget_files=8)
+    file_bytes = 1 << 12
+    t, held = 0.0, []
+    for kind, s, d in ops:
+        t += 0.5
+        sess, name = f"s{s % 3}", f"d{d % 3}"
+        if kind == "release":
+            if not held:
+                continue
+            sess, name = held.pop((s * 3 + d) % len(held))
+            svc.release(sess, name, t)
+        elif kind == "put":
+            _, t = svc.put_result(sess, name,
+                                  np.arange(8, dtype=np.float32), t)
+            svc.flush(sess, t)
+        else:
+            entry = svc.catalog[name]
+            resident = (DatasetState.RESIDENT, DatasetState.STAGING,
+                        DatasetState.DEGRADED)
+            wedged = False
+            while entry.state not in resident:
+                # admission needed: evictable = unleased residents
+                leased = {n for _, n in held}
+                freeable = sum(e.nbytes for e in svc.catalog
+                               if e.state in (DatasetState.RESIDENT,
+                                              DatasetState.DEGRADED)
+                               and e.name not in leased)
+                if (svc.catalog.resident_bytes - freeable + entry.nbytes
+                        <= svc.budget_bytes):
+                    break
+                # would wedge: release a lease on a resident dataset first
+                idx = next((i for i, (_, n) in enumerate(held)
+                            if svc.catalog[n].state in resident), None)
+                if idx is None:
+                    wedged = True
+                    break
+                rs, rn = held.pop(idx)
+                svc.release(rs, rn, t)
+                t += 0.5
+            if wedged:
+                continue
+            lease = svc.acquire(sess, name, t)
+            t = max(t, lease.t_ready)
+            held.append((sess, name))
+        assert svc.catalog.resident_bytes <= svc.budget_bytes
+    for sess, name in held:
+        t += 0.5
+        svc.release(sess, name, t)
+    # fault-free invariant, per entry and in aggregate
+    for e in svc.catalog:
+        assert e.acquires == e.stage_count + e.coalesced + e.hits + e.repairs
+        assert e.repairs == 0
+    assert sum(e.acquires for e in svc.catalog) == \
+        svc.stats.stages + svc.stats.coalesced + svc.stats.hits
+    assert all(not h.store.pinned for h in fab.hosts)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["acquire", "release", "put"]),
+                          st.integers(min_value=0, max_value=2),
+                          st.integers(min_value=0, max_value=2)),
+                max_size=50))
+def test_service_invariants_random_schedules(ops):
+    _drive_schedule(ops)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42])
+def test_service_invariants_seeded_schedules(seed):
+    """Deterministic stand-in for the property test above (runs even when
+    hypothesis is absent): the same driver over seeded random schedules."""
+    rng = np.random.default_rng(seed)
+    kinds = ["acquire", "acquire", "acquire", "release", "put"]
+    ops = [(kinds[rng.integers(0, len(kinds))],
+            int(rng.integers(0, 3)), int(rng.integers(0, 3)))
+           for _ in range(60)]
+    _drive_schedule(ops)

@@ -45,6 +45,23 @@ def test_evict_lru_noop_under_budget():
     assert "a" in store.data
 
 
+def test_evict_lru_read_hit_refreshes_recency():
+    """True LRU, not FIFO: a read hit promotes the entry to most-recently
+    used, so a hot-but-old entry outlives a colder, newer one."""
+    store = make_store()
+    for i in range(4):
+        store.write(f"f{i}", np.ones(100, np.uint8), 0.0)
+    assert store.read("f0") is not None      # touch the oldest entry
+    store.evict_lru(250)
+    # f1 is now coldest and goes first; the touched f0 survives
+    assert set(store.data) == {"f0", "f3"}
+    # a miss must not perturb recency
+    store.write("f4", np.ones(100, np.uint8), 0.0)
+    assert store.read("nope") is None
+    store.evict_lru(250)
+    assert set(store.data) == {"f0", "f4"}
+
+
 def test_read_striped_matches_per_stripe_reads():
     """Batched striped read: same data view, same simulated completion time
     and byte accounting as issuing each stripe through fs.read."""
