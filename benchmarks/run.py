@@ -5,15 +5,18 @@ roofline table (EXPERIMENTS.md §Roofline) is produced separately by
 ``python -m benchmarks.roofline`` from the dry-run artifacts; the
 staging/labeling hot-path microbenchmark by ``--staging``, the
 batch-vs-streaming turnaround comparison by ``--streaming``, and the
-multi-tenant staging-service scenario by ``--service``, and the
-fault-tolerance repair-vs-restage comparison by ``--faults`` (each also
+multi-tenant staging-service scenario by ``--service``, the
+fault-tolerance repair-vs-restage comparison by ``--faults``, and the
+QoS-vs-FIFO concurrent-session scheduling sweep by ``--qos`` (each also
 emits its ``BENCH_*.json``; standalone: ``python -m benchmarks.bench_<name>``).
 ``--staging --quick`` skips every wall-clock comparison and instead
 asserts the SIMULATED FLAT-topology accounting (plus the topology-plan
 costs) match the recorded ``BENCH_staging.json`` baseline exactly — the
 CI accounting-parity smoke. ``--faults --quick`` does the same for the
 fault model against ``BENCH_faults.json`` (including the zero-fault
-bit-exactness anchor against the staging baseline).
+bit-exactness anchor against the staging baseline), and ``--qos --quick``
+for the scheduler against the small deterministic anchor recorded in
+``BENCH_qos.json``.
 
 Every invocation ends with a consolidated summary of ALL ``BENCH_*.json``
 files present (on stderr, so the stdout CSV contract is preserved),
@@ -71,6 +74,15 @@ def _headline(name: str, report: dict) -> str:
             return (f"{svc['stages']} stages/{svc['coalesced']} coalesced/"
                     f"{svc['evictions']} evictions; stage_out "
                     f"{wb['speedup']:.1f}x vs naive @P{wb['n_hosts']}")
+        if name == "BENCH_qos.json":
+            by = {(r["rate_hz"], r["policy"]): r for r in report["open_loop"]}
+            rate = max(r for r, _ in by)
+            f, q = by[(rate, "fifo")], by[(rate, "qos")]
+            return (f"qos P99 {f['p99_latency'] / q['p99_latency']:.1f}x "
+                    f"better than fifo @{rate:g}req/s "
+                    f"(P{report['config']['n_hosts']}), goodput "
+                    f"{f['goodput_bytes_per_s'] / 1e6:.0f}->"
+                    f"{q['goodput_bytes_per_s'] / 1e6:.0f}MB/s")
     except Exception:
         pass          # a malformed result file must never kill the summary
     try:
@@ -154,6 +166,14 @@ def main() -> None:
                   f"{' quick=sim-parity-only' if quick else ''}",
                   file=sys.stderr)
             for name, us, derived in bench_faults.rows(quick=quick):
+                print(f"{name},{us:.1f},{derived}")
+        elif "--qos" in sys.argv[1:]:
+            from benchmarks import bench_qos
+            quick = "--quick" in sys.argv[1:]
+            print(f"[bench_qos] api_path={bench_qos.API_PATH}"
+                  f"{' quick=sim-parity-only' if quick else ''}",
+                  file=sys.stderr)
+            for name, us, derived in bench_qos.rows(quick=quick):
                 print(f"{name},{us:.1f},{derived}")
         else:
             from benchmarks import paper_figures

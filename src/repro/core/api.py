@@ -682,6 +682,21 @@ class StagingClient:
                 "existing StagingService")
         return ClientSession(self, svc.session(name))
 
+    def qos_scheduler(self, policy=None, loop=None):
+        """An event-driven `repro.core.qos.QoSScheduler` over the attached
+        service: concurrent sessions submit timed requests onto a shared
+        `repro.core.events.EventLoop` and contend for the budget under the
+        given `repro.core.qos.QoSPolicy` (default: the ``qos`` policy;
+        pass ``repro.core.qos.FIFO`` for the arrival-order baseline)."""
+        svc = self.service
+        if svc is None:
+            raise ValueError(
+                "client has no staging service; construct it with "
+                "StagingClient(fabric, service=ServiceConfig(...)) or an "
+                "existing StagingService")
+        from repro.core.qos import QoSScheduler
+        return QoSScheduler(svc, policy=policy, loop=loop)
+
     # -- staging ------------------------------------------------------------
     def stage(self, what: Stageable,
               config: Optional[Union[EngineConfig, ServiceConfig]] = None,

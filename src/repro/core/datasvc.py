@@ -221,20 +221,32 @@ class ServiceStats:
         return sum(r.total_time for r in self.writeback_reports)
 
 
-def predict_stage_time(fabric: Fabric, nbytes: int, n_files: int) -> float:
+def predict_stage_time(fabric: Fabric, nbytes: int, n_files: int,
+                       t: Optional[float] = None) -> float:
     """Predicted simulated seconds to collectively stage a dataset of
     `nbytes` across `n_files` files — the eviction cost model (mirrors
     the ``stage_collective`` formula on an idle fabric, without touching
     any traffic counters). The replication phase is PLANNED through the
     fabric topology's `repro.core.collectives` planner (pure cost query),
     so the prediction tracks whatever collective algorithm the fabric's
-    machine model would actually pick."""
+    machine model would actually pick.
+
+    `t` is the simulated issue time the prediction is FOR: under a
+    non-trivial fault schedule the comm phase is planned over the hosts
+    live at `t` with that moment's degraded tier bandwidths — the
+    candidate's CURRENT timeline state, which is what an eviction
+    ranking at `t` must compare. ``t=None`` (or a trivial schedule)
+    prices the healthy fabric, bit-exact with the pre-fault formula."""
     c = fabric.constants
     P = fabric.n_hosts
     t_read = (nbytes / c.fs_seq_bw + n_files * _coll_overhead(fabric)
               + c.fs_op_latency)
     stripe = max(1, (nbytes + P - 1) // P)
-    t_comm = fabric.net.planner.plan_allgather(stripe, P).time
+    if t is None or fabric.faults.trivial:
+        t_comm = fabric.net.planner.plan_allgather(stripe, P).time
+    else:
+        planner, dead = fabric.net._fault_state(t, P)
+        t_comm = planner.plan_allgather(stripe, P - dead, dead=dead).time
     return t_read + t_comm + nbytes / c.local_bw
 
 
@@ -468,9 +480,10 @@ class StagingService:
                     and not e.leases]
             now = [e for e in free if e.t_unleased <= t_admit]
             if now:
-                # cost-aware: cheapest to bring back if needed again
+                # cost-aware: cheapest to bring back if needed again,
+                # priced under the timeline state AT admission time
                 victim = min(now, key=lambda e: (predict_stage_time(
-                    self.fabric, e.nbytes, len(e.paths)), e.name))
+                    self.fabric, e.nbytes, len(e.paths), t=t_admit), e.name))
                 self._evict(victim, t_admit)
                 continue
             future = [e for e in free if e.t_unleased > t_admit]

@@ -109,11 +109,25 @@ class SharedFilesystem:
     constants: FabricConstants
     files: Dict[str, np.ndarray] = field(default_factory=dict)
     busy_until: float = 0.0           # shared-resource serialization point
+    busy_time: float = 0.0            # total seconds of bandwidth occupancy
+    wait_time: float = 0.0            # total seconds requests queued behind
+    #                                   earlier traffic (the contention signal
+    #                                   concurrent sessions produce)
     bytes_read: int = 0
     read_requests: int = 0
     bytes_written: int = 0            # time-accounted writes (write-back path)
     write_requests: int = 0
     metadata_ops: int = 0
+
+    def _occupy(self, t: float, seconds: float) -> float:
+        """Claim `seconds` of the shared busy stream for a request issued
+        at `t`; returns the start time (``max(t, busy_until)``). All
+        occupancy/wait accounting funnels through here."""
+        start = max(t, self.busy_until)
+        self.wait_time += start - t
+        self.busy_until = start + seconds
+        self.busy_time += seconds
+        return start
 
     def put(self, path: str, data: np.ndarray) -> None:
         """Install `data` (any dtype, flattened to uint8) at `path`.
@@ -133,10 +147,8 @@ class SharedFilesystem:
         the shared-FS busy stream like any other request."""
         self.metadata_ops += 1
         names = sorted(n for n in self.files if fnmatch.fnmatch(n, pattern))
-        t_done = max(t, self.busy_until) + self.constants.fs_md_latency * (
-            1 + len(names) / 64)
-        self.busy_until = t_done
-        return names, t_done
+        self._occupy(t, self.constants.fs_md_latency * (1 + len(names) / 64))
+        return names, self.busy_until
 
     def read(self, path: str, offset: int, size: int, t: float,
              coordinated: bool) -> Tuple[np.ndarray, float]:
@@ -153,8 +165,7 @@ class SharedFilesystem:
         """
         bw = (self.constants.fs_seq_bw if coordinated
               else self.constants.fs_rand_bw)
-        start = max(t, self.busy_until)
-        self.busy_until = start + size / bw
+        self._occupy(t, size / bw)
         t_done = self.busy_until + self.constants.fs_op_latency
         self.bytes_read += size
         self.read_requests += 1
@@ -178,8 +189,7 @@ class SharedFilesystem:
         total = sum(sz for _, sz in stripes)
         bw = (self.constants.fs_seq_bw if coordinated
               else self.constants.fs_rand_bw)
-        start = max(t, self.busy_until)
-        self.busy_until = start + total / bw
+        self._occupy(t, total / bw)
         t_done = self.busy_until + self.constants.fs_op_latency
         self.bytes_read += total
         self.read_requests += len(stripes)
@@ -204,8 +214,7 @@ class SharedFilesystem:
         buf = np.ascontiguousarray(data).view(np.uint8).ravel()
         bw = (self.constants.fs_seq_bw if coordinated
               else self.constants.fs_rand_bw)
-        start = max(t, self.busy_until)
-        self.busy_until = start + buf.size / bw
+        self._occupy(t, buf.size / bw)
         t_done = self.busy_until + self.constants.fs_op_latency
         self.files[path] = buf
         self.bytes_written += buf.size
@@ -231,8 +240,7 @@ class SharedFilesystem:
         total = sum(sz for _, sz in stripes)
         bw = (self.constants.fs_seq_bw if coordinated
               else self.constants.fs_rand_bw)
-        start = max(t, self.busy_until)
-        self.busy_until = start + total / bw
+        self._occupy(t, total / bw)
         t_done = self.busy_until + self.constants.fs_op_latency
         self.files[path] = buf
         self.bytes_written += total

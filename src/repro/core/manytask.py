@@ -43,6 +43,9 @@ class Task:
     session: Optional[str] = None             # analysis-session tenant tag
     #   (AnalysisSession.tag); per-session accounting lands in
     #   EngineStats.sessions
+    priority: int = 0                         # QoS class: higher dispatches
+    #   first among queued-and-eligible tasks (ties keep FIFO order, so
+    #   all-default workloads schedule exactly as before)
     retries: int = 0
     result: Any = None
 
@@ -197,10 +200,22 @@ class ManyTaskEngine:
         for tid in sorted(t.task_id for t in tasks if not t.deps):
             schedule(tid, 0.0)
 
+        # priority dispatch costs a queue scan per pop; skip it entirely
+        # for all-default workloads (100k-task campaigns stay O(1)-pop)
+        prioritized = any(t.priority != 0 for t in tasks)
+
         def dispatch(t_now: float):
             nonlocal seq
             while queue and idle:
-                tid = queue.pop(0)
+                # stable first-max pop: highest Task.priority wins, FIFO
+                # among equals — an all-default queue pops the head
+                best = 0
+                if prioritized:
+                    for i in range(1, len(queue)):
+                        if (by_id[queue[i]].priority
+                                > by_id[queue[best]].priority):
+                            best = i
+                tid = queue.pop(best)
                 if tid in done or tid in running:
                     continue
                 task = by_id[tid]

@@ -189,6 +189,8 @@ class StreamStager:
         self._resident: Dict[str, int] = {}     # path -> bytes, arrival order
         self._released: Dict[str, float] = {}   # path -> simulated release t
         self._pinned: Dict[str, int] = {}       # path -> pin refcount
+        self._consumers: set = set()            # registered shared consumers
+        self._acks: Dict[str, Dict[str, float]] = {}  # path -> consumer -> t
         self._nic_busy = t0                     # detector link serialization
         self._bcast_busy = t0                   # broadcast ring serialization
         self._net0 = fabric.net.bytes_moved
@@ -225,6 +227,7 @@ class StreamStager:
     def _drop(self, path: str) -> None:
         del self._resident[path]
         self._released.pop(path, None)
+        self._acks.pop(path, None)
         for host in self.fabric.hosts:
             host.store.drop(path)
         self.evictions += 1
@@ -304,9 +307,33 @@ class StreamStager:
         self.records.append(rec)
         return rec
 
-    def release(self, path: str, t: float) -> None:
-        """Consumer ack: `path` becomes evictable at simulated time `t`."""
-        self._released[path] = t
+    def register_consumer(self, consumer: str) -> None:
+        """Declare a named consumer SHARING this window (e.g. two analysis
+        sessions reducing the same acquisition). Once any consumer is
+        registered, a frame only becomes evictable when EVERY registered
+        consumer has released it — at the LATEST ack time, so the slowest
+        session is what backpressures the detector. With no registered
+        consumers, :meth:`release` keeps its single-consumer semantics."""
+        self._consumers.add(consumer)
+
+    def release(self, path: str, t: float,
+                consumer: Optional[str] = None) -> None:
+        """Consumer ack: `path` becomes evictable at simulated time `t`.
+
+        With `consumer` (a name from :meth:`register_consumer`), the ack
+        is per-consumer; the frame's release time is the max ack once all
+        registered consumers have acked."""
+        if consumer is None:
+            self._released[path] = t
+            return
+        if consumer not in self._consumers:
+            raise ValueError(
+                f"unknown consumer {consumer!r}; registered: "
+                f"{sorted(self._consumers)} (register_consumer first)")
+        acks = self._acks.setdefault(path, {})
+        acks[consumer] = t
+        if set(acks) == self._consumers:
+            self._released[path] = max(acks.values())
 
     def pin(self, path: str) -> None:
         """Exempt `path` from window eviction (it keeps counting against

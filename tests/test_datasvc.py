@@ -2,6 +2,7 @@
 cost-aware eviction, queued admission, and collective write-back."""
 import numpy as np
 import pytest
+from conftest import make_service
 
 from repro.core.datasvc import (AnalysisSession, DataCatalog, DatasetEntry,
                                 DatasetState, StagingService,
@@ -9,23 +10,6 @@ from repro.core.datasvc import (AnalysisSession, DataCatalog, DatasetEntry,
 from repro.core.fabric import BGQ, Fabric
 from repro.core.iohook import BroadcastEntry, StagingSpec, run_io_hook
 from repro.core.staging import stage_out, stage_out_naive
-
-
-def make_service(n_hosts=8, sizes=(4, 4, 4), file_bytes=1 << 12,
-                 budget_files=8, seed=0):
-    """A fabric with datasets d0..dN of `sizes[i]` files each, registered
-    on a service whose budget holds `budget_files` files."""
-    fab = Fabric(n_hosts=n_hosts, constants=BGQ)
-    rng = np.random.default_rng(seed)
-    svc = StagingService(fab, budget_bytes=budget_files * file_bytes)
-    for d, n_files in enumerate(sizes):
-        paths = []
-        for i in range(n_files):
-            p = f"d{d}/f{i}.bin"
-            fab.fs.put(p, rng.integers(0, 255, file_bytes, dtype=np.uint8))
-            paths.append(p)
-        svc.register(f"d{d}", paths=paths)
-    return fab, svc
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +195,70 @@ def test_release_without_lease_raises():
     fab, svc = make_service()
     with pytest.raises(RuntimeError, match="holds no lease"):
         svc.release("alice", "d0", 0.0)
+
+
+def _degraded_ranking_service():
+    """Two unleased residents whose restage-cost ranking FLIPS inside a
+    link-degradation window: dA is one big file (comm-heavy — cheapest on
+    a healthy fabric, costliest at 5% link bandwidth), dB is two tiny
+    files (overhead-heavy — its cost barely moves). Budget forces exactly
+    one eviction when dC arrives."""
+    from repro.core.fabric import BGQ, Fabric
+    from repro.core.datasvc import StagingService
+    fab = Fabric(n_hosts=8, constants=BGQ)
+    rng = np.random.default_rng(0)
+    a_bytes, b_bytes, c_bytes = 4 << 20, 1024, 1 << 16
+    fab.fs.put("dA/f0.bin", rng.integers(0, 255, a_bytes, dtype=np.uint8))
+    for i in range(2):
+        fab.fs.put(f"dB/f{i}.bin",
+                   rng.integers(0, 255, b_bytes, dtype=np.uint8))
+    fab.fs.put("dC/f0.bin", rng.integers(0, 255, c_bytes, dtype=np.uint8))
+    # fits dA+dB, and fits dC after evicting EITHER of them — so the
+    # victim choice is purely the cost ranking's
+    svc = StagingService(fab, budget_bytes=a_bytes + 2 * b_bytes + c_bytes - 1)
+    svc.register("dA", paths=["dA/f0.bin"])
+    svc.register("dB", paths=["dB/f0.bin", "dB/f1.bin"])
+    svc.register("dC", paths=["dC/f0.bin"])
+    return fab, svc
+
+
+def test_predict_stage_time_tracks_degraded_timeline():
+    """`predict_stage_time(..., t=)` must price the candidate under the
+    fault-schedule state AT `t` (degraded tiers), not the healthy
+    registration-time fabric; the trivial schedule ignores `t` exactly."""
+    fab, svc = _degraded_ranking_service()
+    a, b = svc.catalog["dA"], svc.catalog["dB"]
+    # trivial schedule: t is inert — bit-exact with the no-t prediction
+    assert predict_stage_time(fab, a.nbytes, 1, t=10.0) == \
+        predict_stage_time(fab, a.nbytes, 1)
+    healthy_a = predict_stage_time(fab, a.nbytes, 1)
+    healthy_b = predict_stage_time(fab, b.nbytes, 2)
+    assert healthy_a < healthy_b                 # big file is cheap when fast
+    fab.degrade_tier("link", 5.0, 50.0, 0.05)
+    in_window_a = predict_stage_time(fab, a.nbytes, 1, t=10.0)
+    in_window_b = predict_stage_time(fab, b.nbytes, 2, t=10.0)
+    assert in_window_a > in_window_b             # ranking flips at 5% links
+    # outside the window the healthy ranking is restored
+    assert predict_stage_time(fab, a.nbytes, 1, t=60.0) == healthy_a
+
+
+def test_eviction_ranking_uses_current_timeline_state():
+    """Regression (latent serial-clock assumption): the eviction victim
+    must be the dataset cheapest to re-stage under the CURRENT timeline
+    state at admission time. Inside a 5%-bandwidth link-degradation
+    window the comm-heavy big dataset dA is the expensive one, so the
+    service must evict dB — the healthy registration-time ranking would
+    wrongly evict dA."""
+    fab, svc = _degraded_ranking_service()
+    svc.acquire("alice", "dA", 0.0)
+    svc.acquire("alice", "dB", 0.0)
+    svc.release("alice", "dA", 1.0)
+    svc.release("alice", "dB", 1.0)
+    fab.degrade_tier("link", 5.0, 50.0, 0.05)
+    svc.acquire("bob", "dC", 10.0)               # one eviction, in-window
+    assert svc.stats.evictions == 1
+    assert svc.catalog["dB"].state is DatasetState.GONE
+    assert svc.catalog["dA"].state is DatasetState.RESIDENT
 
 
 # ---------------------------------------------------------------------------
@@ -559,18 +607,27 @@ from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
 
 
 def _drive_schedule(ops):
-    """Drive a service through an arbitrary (acquire/release/put) schedule,
-    checking the budget bound after every op and the lease/counter
-    invariants at the end. ``ops`` is a list of (kind, session#, dataset#)
-    triples; impossible ops (release without a lease, acquire that would
-    wedge with nothing releasable) are skipped, wedge-avoiding releases are
-    applied first — the schedule is deterministic given ``ops``."""
+    """Drive a service through an arbitrary (acquire/release/put/inject)
+    schedule, checking the budget bound after every op and the
+    lease/counter invariants at the end. ``ops`` is a list of (kind,
+    session#, dataset#) triples; impossible ops (release without a lease,
+    acquire that would wedge with nothing releasable, death below quorum)
+    are skipped, wedge-avoiding releases are applied first — the schedule
+    is deterministic given ``ops``. ``inject`` kills a live host, so the
+    ledger invariant is exercised in its full
+    ``acquires == stages + coalesced + hits + repairs`` form."""
     fab, svc = make_service(sizes=(4, 4, 4), budget_files=8)
     file_bytes = 1 << 12
-    t, held = 0.0, []
+    t, held, injected = 0.0, [], False
     for kind, s, d in ops:
         t += 0.5
         sess, name = f"s{s % 3}", f"d{d % 3}"
+        if kind == "inject":
+            live = fab.live_ids(t)
+            if len(live) > len(fab.hosts) // 2:
+                svc.fail_host(live[(s * 3 + d) % len(live)], t)
+                injected = True
+            continue
         if kind == "release":
             if not held:
                 continue
@@ -613,17 +670,21 @@ def _drive_schedule(ops):
     for sess, name in held:
         t += 0.5
         svc.release(sess, name, t)
-    # fault-free invariant, per entry and in aggregate
+    # the ledger invariant, per entry and in aggregate (repairs only
+    # enter it when a death was injected)
     for e in svc.catalog:
         assert e.acquires == e.stage_count + e.coalesced + e.hits + e.repairs
-        assert e.repairs == 0
-    assert sum(e.acquires for e in svc.catalog) == \
+        if not injected:
+            assert e.repairs == 0
+    assert sum(e.acquires for e in svc.catalog) == (
         svc.stats.stages + svc.stats.coalesced + svc.stats.hits
-    assert all(not h.store.pinned for h in fab.hosts)
+        + svc.stats.repairs)
+    assert all(not h.store.pinned for h in fab.live_hosts(t))
 
 
 @settings(max_examples=30, deadline=None)
-@given(st.lists(st.tuples(st.sampled_from(["acquire", "release", "put"]),
+@given(st.lists(st.tuples(st.sampled_from(["acquire", "release", "put",
+                                           "inject"]),
                           st.integers(min_value=0, max_value=2),
                           st.integers(min_value=0, max_value=2)),
                 max_size=50))
@@ -637,6 +698,19 @@ def test_service_invariants_seeded_schedules(seed):
     hypothesis is absent): the same driver over seeded random schedules."""
     rng = np.random.default_rng(seed)
     kinds = ["acquire", "acquire", "acquire", "release", "put"]
+    ops = [(kinds[rng.integers(0, len(kinds))],
+            int(rng.integers(0, 3)), int(rng.integers(0, 3)))
+           for _ in range(60)]
+    _drive_schedule(ops)
+
+
+@pytest.mark.parametrize("seed", [3, 11, 29])
+def test_service_invariants_seeded_schedules_with_faults(seed):
+    """Seeded schedules with host deaths mixed in: the ledger invariant
+    holds in its full form (+ repairs) and no pin survives on a live
+    host."""
+    rng = np.random.default_rng(seed)
+    kinds = ["acquire", "acquire", "acquire", "release", "put", "inject"]
     ops = [(kinds[rng.integers(0, len(kinds))],
             int(rng.integers(0, 3)), int(rng.integers(0, 3)))
            for _ in range(60)]

@@ -40,6 +40,7 @@ def test_device_replicate_and_staged_restore():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs_and_matches_single_device():
     out = run_with_devices(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np

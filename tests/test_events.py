@@ -1,0 +1,594 @@
+"""Event timeline + QoS scheduler: unit, serial-equivalence, edge-case
+and property-based invariant tests.
+
+The load-bearing claims pinned down here:
+
+  * the `repro.core.events.EventLoop` is deterministic — events fire in
+    ``(t, priority, seq)`` order, identical schedules replay identically,
+    and time never runs backwards;
+  * a single zero-contention session through the
+    `repro.core.qos.QoSScheduler` is BIT-EXACT with driving the
+    `repro.core.datasvc.StagingService` serially (the acceptance bar for
+    the event-driven rework);
+  * concurrent sessions on the timeline match the serial service driven
+    with the same operations in timestamp order (operations are atomic
+    at issue, so event-driven == serial-in-time-order);
+  * the QoS policy's properties: head-of-line blocking under fifo,
+    backfill + aging + fair-share + priority-protective preemption under
+    qos, loud failure when parked requests can never be admitted;
+  * invariants under random concurrent schedules (hypothesis when
+    available, seeded always): per-key timestamp monotonicity, the
+    budget bound after EVERY event, ``acquires == stages + coalesced +
+    hits + repairs``, and no request starved forever.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from conftest import make_service
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.datasvc import DatasetState
+from repro.core.events import CausalityError, EventLoop
+from repro.core.qos import FIFO, QOS, QoSPolicy, QoSScheduler
+
+
+# ---------------------------------------------------------------------------
+# EventLoop unit behavior
+# ---------------------------------------------------------------------------
+
+def test_events_fire_in_time_order():
+    loop, fired = EventLoop(), []
+    for t in (3.0, 1.0, 2.0, 0.5):
+        loop.schedule(t, lambda t=t: fired.append(t))
+    loop.run()
+    assert fired == [0.5, 1.0, 2.0, 3.0]
+    assert loop.now == 3.0
+    assert loop.fired == 4
+
+
+def test_equal_time_ties_break_by_priority_then_seq():
+    loop, fired = EventLoop(), []
+    loop.schedule(1.0, lambda: fired.append("a"))            # seq 0
+    loop.schedule(1.0, lambda: fired.append("urgent"), priority=-1)
+    loop.schedule(1.0, lambda: fired.append("b"))            # seq 2
+    loop.schedule(1.0, lambda: fired.append("late"), priority=5)
+    loop.run()
+    assert fired == ["urgent", "a", "b", "late"]
+
+
+def test_scheduling_into_the_past_raises():
+    loop = EventLoop()
+    loop.schedule(2.0, lambda: None)
+    loop.run()
+    with pytest.raises(CausalityError):
+        loop.schedule(1.0, lambda: None)
+    # scheduling exactly AT now is legal (zero-delay follow-up work)
+    loop.schedule(2.0, lambda: None)
+
+
+def test_callback_may_schedule_at_now_and_later():
+    loop, fired = EventLoop(), []
+
+    def first():
+        fired.append("first")
+        loop.schedule(loop.now, lambda: fired.append("same-instant"))
+        loop.schedule(5.0, lambda: fired.append("later"))
+
+    loop.schedule(1.0, first)
+    loop.schedule(2.0, lambda: fired.append("second"))
+    loop.run()
+    # the same-instant follow-up fires before the t=2 event
+    assert fired == ["first", "same-instant", "second", "later"]
+
+
+def test_cancel_skips_event():
+    loop, fired = EventLoop(), []
+    keep = loop.schedule(1.0, lambda: fired.append("keep"))
+    drop = loop.schedule(2.0, lambda: fired.append("drop"))
+    loop.cancel(drop)
+    loop.run()
+    assert fired == ["keep"]
+    assert loop.fired == 1
+    assert not keep.canceled
+
+
+def test_run_until_partial_drain_advances_now():
+    loop, fired = EventLoop(), []
+    for t in (1.0, 2.0, 3.0):
+        loop.schedule(t, lambda t=t: fired.append(t))
+    assert loop.run(until=2.5) == 2.5
+    assert fired == [1.0, 2.0]
+    assert loop.pending == 1
+    assert loop.advance(10.0) == 10.0     # finite until moves now past last t
+    assert fired == [1.0, 2.0, 3.0]
+
+
+def test_step_fires_exactly_one_event():
+    loop, fired = EventLoop(), []
+    loop.schedule(1.0, lambda: fired.append(1))
+    loop.schedule(2.0, lambda: fired.append(2))
+    ev = loop.step()
+    assert fired == [1] and ev.t == 1.0
+    assert loop.step().t == 2.0
+    assert loop.step() is None
+
+
+def test_peek_and_pending_skip_canceled():
+    loop = EventLoop()
+    first = loop.schedule(1.0, lambda: None)
+    loop.schedule(2.0, lambda: None)
+    loop.cancel(first)
+    assert loop.peek() == 2.0
+    assert loop.pending == 1
+
+
+def test_identical_schedules_replay_identically():
+    def build():
+        loop, fired = EventLoop(), []
+        rng = np.random.default_rng(7)
+        for i in range(50):
+            t = float(rng.integers(0, 10))    # heavy tie collisions
+            loop.schedule(t, lambda i=i: fired.append(i),
+                          priority=int(rng.integers(-2, 3)), key=f"k{i % 5}")
+        loop.run()
+        return fired, [(e.t, e.priority, e.seq) for e in loop.history]
+
+    assert build() == build()
+
+
+def test_history_is_globally_time_ordered_with_keys():
+    loop = EventLoop()
+    rng = np.random.default_rng(3)
+    for i in range(40):
+        loop.schedule(float(rng.uniform(0, 5)), lambda: None,
+                      key=f"h{i % 4}")
+    loop.run()
+    ts = [e.t for e in loop.history]
+    assert ts == sorted(ts)
+    for key in {e.key for e in loop.history}:
+        kts = [e.t for e in loop.history if e.key == key]
+        assert kts == sorted(kts)         # per-key monotonicity
+
+
+def test_loop_starts_at_t0():
+    loop = EventLoop(t0=5.0)
+    with pytest.raises(CausalityError):
+        loop.schedule(4.0, lambda: None)
+    loop.schedule(5.0, lambda: None)
+    assert loop.run() == 5.0
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        QoSPolicy(name="edf")
+    with pytest.raises(ValueError):
+        QoSPolicy(aging_rate=-1.0)
+    assert FIFO.name == "fifo" and QOS.name == "qos"
+
+
+# ---------------------------------------------------------------------------
+# scheduler vs serial service: zero-contention bit-exactness and
+# serial-equivalence under concurrency
+# ---------------------------------------------------------------------------
+
+def _scheduler(policy=None, **kw):
+    fab, svc = make_service(**kw)
+    return fab, svc, QoSScheduler(svc, policy=policy)
+
+
+def test_single_session_bit_exact_vs_serial():
+    """The acceptance bar: one session, no contention — the event-driven
+    path must reproduce the serial service exactly (times, counters, and
+    the delivered bytes)."""
+    fab_s, svc_s = make_service()
+    l0 = svc_s.acquire("s0", "d0", 0.0)
+    svc_s.release("s0", "d0", l0.t_ready + 1.0)
+    l1 = svc_s.acquire("s0", "d1", l0.t_ready + 2.0)
+    svc_s.release("s0", "d1", l1.t_ready)
+
+    fab_e, svc_e, sched = _scheduler()
+    r0 = sched.submit("s0", "d0", 0.0, hold=1.0)
+    r1 = sched.submit("s0", "d1", l0.t_ready + 2.0, hold=0.0)
+    sched.run()
+
+    assert (r0.t_ready, r1.t_ready) == (l0.t_ready, l1.t_ready)
+    assert r0.t_admit == 0.0 and r1.t_admit == l0.t_ready + 2.0
+    for name in ("stages", "hits", "coalesced", "evictions", "queue_waits"):
+        assert getattr(svc_e.stats, name) == getattr(svc_s.stats, name)
+    assert fab_e.fs.bytes_read == fab_s.fs.bytes_read
+    assert fab_e.net.bytes_moved == fab_s.net.bytes_moved
+    for he, hs in zip(fab_e.hosts, fab_s.hosts):
+        assert set(he.store.data) == set(hs.store.data)
+        for p in he.store.data:
+            np.testing.assert_array_equal(he.store.data[p],
+                                          hs.store.data[p])
+
+
+def test_concurrent_coalesce_on_timeline():
+    """Two sessions asking for one dataset inside its stage window share
+    ONE collective stage, exactly as the serial coalescing path."""
+    fab, svc, sched = _scheduler()
+    a = sched.submit("s0", "d0", 0.0)
+    b = sched.submit("s1", "d0", 1e-4)      # lands mid-stage
+    sched.run()
+    assert svc.stats.stages == 1 and svc.stats.coalesced == 1
+    assert a.t_ready == b.t_ready
+    assert svc.catalog["d0"].acquires == 2
+
+
+def test_event_driven_matches_serial_in_timestamp_order():
+    """Operations are atomic at issue, so the event-driven timeline must
+    equal the serial service driven with the SAME ops sorted by time —
+    including FS contention between overlapping sessions' stages."""
+    schedule = [("s0", "d0", 0.0, 0.5), ("s1", "d1", 1e-4, 0.2),
+                ("s2", "d0", 2e-4, 0.1), ("s0", "d2", 0.9, 0.0)]
+    fab_e, svc_e, sched = _scheduler(sizes=(4, 4, 4), budget_files=12)
+    reqs = [sched.submit(s, d, t, hold=h) for s, d, t, h in schedule]
+    sched.run()
+
+    fab_s, svc_s = make_service(sizes=(4, 4, 4), budget_files=12)
+    ops = []                      # (t, kind, session, dataset) in time order
+    for s, d, t, h in schedule:
+        ops.append((t, "acquire", s, d, h))
+    done = {}
+    serial_ready = {}
+    pending = sorted(ops)
+    while pending:
+        t, kind, s, d, h = pending.pop(0)
+        lease = svc_s.acquire(s, d, t)
+        serial_ready[(s, d)] = lease.t_ready
+        pending.append((lease.t_ready + h, "release", s, d, 0.0))
+        pending = [op for op in pending if op[1] == "release"] and pending
+        pending.sort()
+        # interleave releases due before the next acquire
+        while (pending and pending[0][1] == "release"):
+            rt, _, rs, rd, _ = pending.pop(0)
+            svc_s.release(rs, rd, rt)
+    for r in reqs:
+        assert r.t_ready == serial_ready[(r.session_id, r.dataset)]
+    assert svc_e.stats.stages == svc_s.stats.stages
+    assert fab_e.fs.bytes_read == fab_s.fs.bytes_read
+    assert fab_e.fs.busy_time == fab_s.fs.busy_time
+
+
+def test_contention_parks_then_wakes_on_release():
+    """Budget holds two of three datasets: the third session parks and is
+    admitted by the release EVENT, not a pre-recorded future time."""
+    fab, svc, sched = _scheduler()
+    sched.submit("s0", "d0", 0.0, hold=5.0)
+    sched.submit("s1", "d1", 0.0, hold=5.0)
+    c = sched.submit("s2", "d2", 0.001)
+    sched.run()
+    assert c.done and c.parked_time > 0
+    assert c.t_admit >= 5.0                  # woken by a release at hold end
+    assert svc.stats.evictions == 1
+    assert svc.catalog.resident_bytes <= svc.budget_bytes
+
+
+def test_fifo_head_of_line_blocks_admissible_followers():
+    """Under fifo, a parked head blocks a request that WOULD be
+    admissible (even a residency hit) — the baseline's failure mode."""
+    fab, svc, sched = _scheduler(policy=FIFO)
+    sched.submit("s0", "d0", 0.0, hold=4.0)
+    sched.submit("s1", "d1", 0.001, hold=4.0)
+    blocked = sched.submit("s2", "d2", 0.002, hold=0.0)   # parks: no memory
+    hit = sched.submit("s3", "d0", 0.003)                 # would coalesce/hit
+    sched.run()
+    assert hit.t_admit >= blocked.t_admit            # no overtaking
+    assert hit.parked_time > 3.0
+
+
+def test_qos_backfill_overtakes_blocked_head():
+    """Same schedule under qos: the admissible hit backfills immediately
+    while the memory-blocked request keeps waiting."""
+    fab, svc, sched = _scheduler(policy=QOS)
+    sched.submit("s0", "d0", 0.0, hold=4.0)
+    sched.submit("s1", "d1", 0.001, hold=4.0)
+    blocked = sched.submit("s2", "d2", 0.002, hold=0.0)
+    hit = sched.submit("s3", "d0", 0.003)
+    sched.run()
+    assert hit.t_admit < blocked.t_admit
+    assert hit.parked_time == 0.0                    # started on arrival
+    assert blocked.done
+
+
+def test_preemption_protects_high_priority_residents():
+    """qos eviction is lowest-residency-priority-first: staging a new
+    dataset under pressure evicts the low-priority tenant's unleased
+    dataset, keeping the high-priority one warm."""
+    fab, svc, sched = _scheduler(policy=QOS)
+    lo = sched.submit("lo", "d0", 0.0, priority=0, hold=0.0)
+    hi = sched.submit("hi", "d1", 0.001, priority=5, hold=0.0)
+    sched.submit("s2", "d2", 1.0, priority=1)        # needs one eviction
+    sched.run()
+    assert svc.catalog["d0"].state is DatasetState.GONE      # low-pri evicted
+    assert svc.catalog["d1"].state is DatasetState.RESIDENT  # high-pri warm
+    assert sched.preemptions == 1
+    assert lo.done and hi.done
+
+
+def test_fifo_keeps_cost_ranked_eviction():
+    """The fifo baseline keeps the serial cheapest-to-restage eviction
+    rule (no priority protection)."""
+    fab, svc, sched = _scheduler(policy=FIFO)
+    sched.submit("lo", "d0", 0.0, priority=0, hold=0.0)
+    sched.submit("hi", "d1", 0.001, priority=5, hold=0.0)
+    sched.submit("s2", "d2", 1.0, priority=1)
+    sched.run()
+    # equal-size datasets: cheapest-first degenerates to name order
+    assert svc.catalog["d0"].state is DatasetState.GONE
+    assert sched.preemptions == 0                    # _admit evicted, not qos
+    assert svc.stats.evictions == 1
+
+
+def test_aging_bounds_starvation_of_low_priority():
+    """A low-priority request parked behind a stream of high-priority
+    work is eventually served: aging lifts its effective rank above any
+    fixed priority."""
+    fab, svc, sched = _scheduler(policy=QoSPolicy(aging_rate=10.0))
+    low = sched.submit("low", "d2", 0.0, priority=0)
+    # continuous high-priority contention for the other two datasets
+    for i in range(12):
+        sched.submit(f"hi{i % 2}", f"d{i % 2}", 0.001 + i * 0.4,
+                     priority=100, hold=0.4)
+    sched.run()
+    assert low.done
+    assert math.isfinite(low.latency)
+
+
+def test_fair_share_tie_break_favors_least_served():
+    """At equal effective rank, the session served least goes first."""
+    fab, svc, sched = _scheduler(policy=QoSPolicy(aging_rate=0.0))
+    # greedy session completes two requests first
+    sched.submit("greedy", "d0", 0.0, hold=1.0)
+    sched.submit("greedy", "d1", 0.0, hold=1.0)
+    # both park (budget full), same priority, same submit time
+    a = sched.submit("greedy", "d2", 0.5, hold=0.5)
+    b = sched.submit("newcomer", "d2", 0.5, hold=0.5)
+    sched.run()
+    assert b.t_admit <= a.t_admit                    # newcomer not last
+    served = {}
+    for r in sched.completed:
+        served.setdefault(r.session_id, []).append(r.t_admit)
+    assert min(served["newcomer"]) <= min(served["greedy"][2:] or [math.inf])
+
+
+def test_run_raises_when_requests_starve():
+    """A drained timeline with parked requests = nothing will ever admit
+    them; the scheduler fails as loudly as the serial 'wedged' error."""
+    fab, svc, sched = _scheduler()
+    # leases held OFF the timeline: no release event will ever fire
+    svc.acquire("pin0", "d0", 0.0)
+    svc.acquire("pin1", "d1", 0.0)
+    sched.submit("s2", "d2", 0.1)
+    with pytest.raises(RuntimeError, match="parked"):
+        sched.run()
+
+
+def test_summary_reports_latency_percentiles_and_goodput():
+    fab, svc, sched = _scheduler()
+    for i in range(6):
+        sched.submit(f"s{i % 2}", f"d{i % 3}", i * 0.01, hold=0.2)
+    sched.run()
+    s = sched.summary()
+    assert s["completed"] == 6 and s["parked"] == 0
+    assert 0 < s["p50_latency"] <= s["p99_latency"]
+    assert s["goodput_bytes_per_s"] > 0
+    assert s["makespan"] > 0
+    empty = QoSScheduler(svc).summary()
+    assert empty["completed"] == 0 and math.isnan(empty["p50_latency"])
+
+
+def test_qos_beats_fifo_p99_under_overload():
+    """The bench assertion in miniature: heavy-tailed holds + overload —
+    qos backfill avoids fifo's head-of-line P99 penalty."""
+    def drive(policy):
+        fab, svc, sched = _scheduler(policy=policy, sizes=(4, 4, 4),
+                                     budget_files=8)
+        rng = np.random.default_rng(42)
+        t = 0.0
+        for i in range(40):
+            t += float(rng.exponential(0.02))
+            hold = float((rng.pareto(1.5) + 1) * 0.05)
+            sched.submit(f"s{i % 6}", f"d{int(rng.integers(0, 3))}", t,
+                         priority=int(rng.integers(0, 3)),
+                         hold=min(hold, 5.0))
+        sched.run()
+        return sched.summary()
+
+    fifo, qos = drive(FIFO), drive(QOS)
+    assert fifo["completed"] == qos["completed"] == 40
+    assert qos["p99_latency"] < fifo["p99_latency"]
+
+
+# ---------------------------------------------------------------------------
+# concurrency edge cases: faults and elasticity mid-flight on the timeline
+# ---------------------------------------------------------------------------
+
+def test_fail_host_mid_stage_on_timeline():
+    """A host death injected INSIDE another session's stage window fires
+    between the acquire and its readiness: the dataset degrades while
+    observers still see STAGING, and the next acquire repairs it —
+    byte-exact with the serial equivalent."""
+    def drive(event_driven):
+        fab, svc = make_service()
+        if event_driven:
+            sched = QoSScheduler(svc)
+            r = sched.submit("s0", "d0", 0.0, hold=1.0)
+            sched.fail_host_at(3, 0.01)       # mid-stage (stage takes ~0.06)
+            late = sched.submit("s1", "d0", 2.0)
+            sched.run()
+            t_ready, t_late = r.t_ready, late.t_ready
+        else:
+            lease = svc.acquire("s0", "d0", 0.0)
+            svc.fail_host(3, 0.01)
+            svc.release("s0", "d0", lease.t_ready + 1.0)
+            l2 = svc.acquire("s1", "d0", 2.0)
+            svc.release("s1", "d0", l2.t_ready)
+            t_ready, t_late = lease.t_ready, l2.t_ready
+        entry = svc.catalog["d0"]
+        return (t_ready, t_late, entry.repairs, svc.stats.host_deaths,
+                svc.stats.degraded_events,
+                {p: bytes(fab.hosts[0].store.data[p])
+                 for p in fab.hosts[0].store.data})
+
+    assert drive(True) == drive(False)
+    # and the invariant holds with repairs in the ledger
+    fab, svc = make_service()
+    sched = QoSScheduler(svc)
+    sched.submit("s0", "d0", 0.0, hold=1.0)
+    sched.fail_host_at(3, 0.01)
+    sched.submit("s1", "d0", 2.0)
+    sched.run()
+    e = svc.catalog["d0"]
+    assert e.acquires == e.stage_count + e.coalesced + e.hits + e.repairs
+    assert e.repairs == 1
+
+
+def test_resize_mid_flight_on_timeline():
+    """An elastic grow fired between a session's stage and its readiness:
+    fully replicated residents degrade (blank new hosts) and the next
+    acquire repairs coverage — matching the serial call order."""
+    def drive(event_driven):
+        fab, svc = make_service()
+        if event_driven:
+            sched = QoSScheduler(svc)
+            sched.submit("s0", "d0", 0.0, hold=0.5)
+            sched.resize_at(12, 1.0)
+            late = sched.submit("s1", "d0", 2.0)
+            sched.run()
+            t_late = late.t_ready
+        else:
+            lease = svc.acquire("s0", "d0", 0.0)
+            svc.release("s0", "d0", lease.t_ready + 0.5)
+            svc.resize(12, 1.0)
+            l2 = svc.acquire("s1", "d0", 2.0)
+            svc.release("s1", "d0", l2.t_ready)
+            t_late = l2.t_ready
+        entry = svc.catalog["d0"]
+        return (fab.n_hosts, t_late, entry.repairs, svc.stats.resizes,
+                sorted(entry.holders),
+                {p: bytes(fab.hosts[-1].store.data[p])
+                 for p in fab.hosts[-1].store.data})
+
+    assert drive(True) == drive(False)
+
+
+def test_shrink_mid_flight_keeps_replicated_resident():
+    fab, svc = make_service()
+    sched = QoSScheduler(svc)
+    r = sched.submit("s0", "d0", 0.0, hold=0.5)
+    sched.resize_at(6, 1.0)
+    sched.run()
+    assert fab.n_hosts == 6
+    # full replication: every surviving host still holds a copy
+    assert svc.catalog["d0"].state is DatasetState.RESIDENT
+    assert r.done
+
+
+def test_budget_bound_after_every_event_under_churn():
+    """Stepping the loop by hand: the memory budget holds at EVERY event
+    boundary, not just at the end."""
+    fab, svc = make_service()
+    sched = QoSScheduler(svc)
+    rng = np.random.default_rng(5)
+    t = 0.0
+    for i in range(25):
+        t += float(rng.exponential(0.05))
+        sched.submit(f"s{i % 4}", f"d{int(rng.integers(0, 3))}", t,
+                     priority=int(rng.integers(0, 3)),
+                     hold=float(rng.uniform(0, 0.3)))
+    while sched.loop.peek() is not None:
+        sched.loop.step()
+        assert svc.catalog.resident_bytes <= svc.budget_bytes
+    assert not sched.pending
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants over random concurrent schedules
+# ---------------------------------------------------------------------------
+
+def _drive_timeline(ops, policy=None):
+    """Drive a random concurrent schedule — (kind, session#, dataset#)
+    triples become submits, host deaths and recoveries on one shared
+    timeline — then check every invariant the suite promises:
+
+      * event timestamps globally and per-key monotone;
+      * memory budget never exceeded at any event boundary;
+      * ``acquires == stages + coalesced + hits + repairs`` per entry;
+      * no request starved (every submit completes, pins all returned).
+    """
+    fab, svc = make_service()
+    sched = QoSScheduler(svc, policy=policy)
+    reqs, t = [], 0.0
+    for kind, s, d in ops:
+        t += 0.3
+        if kind == "inject":
+            host = 1 + (s * 3 + d) % (fab.n_hosts - 1)
+
+            def fire(host=host, t=t):
+                # guards evaluated at FIRE time: keep a quorum, only
+                # kill live hosts / recover dead ones
+                if (host in fab.live_ids(t)
+                        and len(fab.live_ids(t)) > fab.n_hosts // 2):
+                    svc.fail_host(host, t)
+                elif host in fab.dead_ids(t):
+                    svc.recover_host(host, t)
+
+            sched.at(t, fire, key="fault", priority=-2)
+        else:
+            reqs.append(sched.submit(
+                f"s{s % 3}", f"d{d % 3}", t, priority=s % 3,
+                hold=0.2 + 0.3 * (d % 3)))
+    while sched.loop.peek() is not None:
+        sched.loop.step()
+        assert svc.catalog.resident_bytes <= svc.budget_bytes
+    assert not sched.pending                      # nobody starved
+    assert all(r.done for r in reqs)
+    ts = [e.t for e in sched.loop.history]
+    assert ts == sorted(ts)
+    for key in {e.key for e in sched.loop.history}:
+        kts = [e.t for e in sched.loop.history if e.key == key]
+        assert kts == sorted(kts)
+    for e in svc.catalog:
+        assert e.acquires == e.stage_count + e.coalesced + e.hits + e.repairs
+        assert not e.leases
+    assert sum(e.acquires for e in svc.catalog) == (
+        svc.stats.stages + svc.stats.coalesced + svc.stats.hits
+        + svc.stats.repairs)
+    for host in fab.live_hosts(sched.loop.now):
+        assert not host.store.pinned
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(
+    st.sampled_from(["submit", "submit", "submit", "inject"]),
+    st.integers(min_value=0, max_value=2),
+    st.integers(min_value=0, max_value=2)), max_size=40))
+def test_timeline_invariants_random_schedules(ops):
+    _drive_timeline(ops)
+
+
+@pytest.mark.parametrize("policy", [None, FIFO])
+@pytest.mark.parametrize("seed", [0, 1, 7, 42])
+def test_timeline_invariants_seeded_schedules(seed, policy):
+    """Deterministic stand-in for the property test (runs without
+    hypothesis), over both policies."""
+    rng = np.random.default_rng(seed)
+    kinds = ["submit", "submit", "submit", "submit", "inject"]
+    ops = [(kinds[rng.integers(0, len(kinds))],
+            int(rng.integers(0, 3)), int(rng.integers(0, 3)))
+           for _ in range(50)]
+    _drive_timeline(ops, policy=policy)
+
+
+def test_hypothesis_compat_flag_is_consistent():
+    """The suite must be meaningful both with and without hypothesis:
+    when absent, @given tests skip (not silently pass)."""
+    if HAVE_HYPOTHESIS:
+        import hypothesis  # noqa: F401
+    else:
+        marked = getattr(test_timeline_invariants_random_schedules,
+                         "pytestmark", [])
+        assert any(m.name == "skip" for m in marked)

@@ -95,3 +95,28 @@ def test_write_many_matches_sequential_writes():
     assert s_bulk.bytes_written == s_seq.bytes_written
     assert all(np.array_equal(s_bulk.data[p], s_seq.data[p])
                for p in replicas)
+
+
+def test_fs_busy_and_wait_accounting():
+    """The shared-FS occupancy/wait ledger: busy_time sums the bandwidth
+    occupancy of every request, wait_time the queueing behind earlier
+    traffic — and neither changes any completion time."""
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    fs = fab.fs
+    size = 1 << 20
+    fs.put("a.bin", np.zeros(size, np.uint8))
+    assert fs.busy_time == 0.0 and fs.wait_time == 0.0   # put is free
+    _, t1 = fs.read("a.bin", 0, size, 0.0, coordinated=True)
+    per_read = size / BGQ.fs_seq_bw
+    assert fs.busy_time == pytest.approx(per_read)
+    assert fs.wait_time == 0.0                           # idle FS: no queue
+    # a second read issued at t=0 queues behind the first
+    _, t2 = fs.read("a.bin", 0, size, 0.0, coordinated=True)
+    assert fs.busy_time == pytest.approx(2 * per_read)
+    assert fs.wait_time == pytest.approx(per_read)
+    assert t2 == pytest.approx(t1 + per_read)
+    # writes and metadata feed the same ledger
+    fs.write("b.bin", np.zeros(size, np.uint8), fs.busy_until)
+    names, _ = fs.glob("*.bin", fs.busy_until)
+    assert names == ["a.bin", "b.bin"]
+    assert fs.busy_time > 2 * per_read

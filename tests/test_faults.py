@@ -21,12 +21,14 @@ from repro.core.staging import (LostStripesError, ReplicaPlacement,
 from repro.core.topology import BGQ_TORUS, FLAT
 
 
+from conftest import make_fabric as _make_fabric
+
+
 def make_fabric(n_hosts=8, n_files=4, file_bytes=1 << 12, seed=0, **kw):
-    fab = Fabric(n_hosts=n_hosts, constants=BGQ, **kw)
-    rng = np.random.default_rng(seed)
-    for i in range(n_files):
-        fab.fs.put(f"d/f{i}.bin",
-                   rng.integers(0, 255, file_bytes, dtype=np.uint8))
+    """This module's default shape over the shared conftest builder
+    (fabric only — the files are recovered via :func:`paths`)."""
+    fab, _ = _make_fabric(n_hosts=n_hosts, n_files=n_files, size=file_bytes,
+                          seed=seed, **kw)
     return fab
 
 

@@ -131,6 +131,7 @@ def test_hedm_reduce_row_tiled_matches_untiled():
         assert np.array_equal(np.asarray(c_t), np.asarray(c_ref)), (H, W, tile)
 
 
+@pytest.mark.slow
 def test_hedm_reduce_exact_on_noisy_borders():
     """High-amplitude noise makes frame-border pixels threshold-sensitive:
     the fused kernel must still match the oracle bit-for-bit there (the

@@ -11,6 +11,10 @@ from repro.models import model as M
 from repro.train.optimizer import OptConfig
 from repro.train.train_step import init_train_state, make_train_step
 
+# every test here pays a fresh XLA compile per arch (tens of seconds
+# each) — slow lane; see pytest.ini
+pytestmark = pytest.mark.slow
+
 key = jax.random.PRNGKey(0)
 
 

@@ -8,6 +8,9 @@ from repro.configs.registry import get_smoke_config
 from repro.models import model as M
 from repro.serve.engine import Request, ServeSession, prefill_step
 
+# per-arch prefill/decode compiles (seconds each) — slow lane; see pytest.ini
+pytestmark = pytest.mark.slow
+
 key = jax.random.PRNGKey(0)
 
 ARCHS = ["qwen2_72b", "h2o_danube3_4b", "deepseek_v2_lite_16b", "zamba2_7b",

@@ -1,6 +1,7 @@
 """Staging framework: byte-exactness, traffic accounting, paper calibration."""
 import numpy as np
 import pytest
+from conftest import make_fabric
 from hypothesis_compat import given, settings, st
 
 from repro.core.fabric import BGQ, Fabric, TPU_POD
@@ -8,14 +9,6 @@ from repro.core.iohook import (BroadcastEntry, StagingSpec, naive_per_rank_globs
                                resolve_manifest, run_io_hook)
 from repro.core.staging import (_stripes, stage_collective, stage_naive,
                                 stage_pipelined)
-
-
-def make_fabric(n_hosts=8, n_files=4, size=1 << 16, seed=0):
-    fab = Fabric(n_hosts=n_hosts, constants=BGQ)
-    rng = np.random.default_rng(seed)
-    for i in range(n_files):
-        fab.fs.put(f"d/f{i}.bin", rng.integers(0, 255, size, dtype=np.uint8))
-    return fab, [f"d/f{i}.bin" for i in range(n_files)]
 
 
 def test_collective_staging_byte_exact():

@@ -155,6 +155,63 @@ def test_wedged_window_raises():
         stager.ingest(path, buf, t_emit)
 
 
+def test_shared_window_backpressures_on_slowest_consumer():
+    """Two sessions sharing ONE stager window: a frame only becomes
+    evictable when BOTH have released it, at the LATEST ack — so the
+    shared run is byte- and time-exact with a single consumer acking at
+    the slow session's times (the serial equivalent)."""
+    def drive(shared):
+        fab = Fabric(n_hosts=2, constants=BGQ)
+        frames, _, src = make_stream(12, rate_hz=1000.0)
+        stager = StreamStager(fab, window_bytes=3 * FRAME_BYTES)
+        if shared:
+            stager.register_consumer("fast")
+            stager.register_consumer("slow")
+        for fid, path, buf, t_emit in src:
+            rec = stager.ingest(path, buf, t_emit)
+            if shared:
+                stager.release(path, rec.t_avail, consumer="fast")
+                stager.release(path, rec.t_avail + 0.5, consumer="slow")
+            else:
+                stager.release(path, rec.t_avail + 0.5)   # = the max ack
+        rep = stager.finish()
+        stores = [{p: bytes(h.store.data[p]) for p in h.store.data}
+                  for h in fab.hosts]
+        return (rep.n_frames, rep.stall_time, rep.evictions,
+                rep.ingest_makespan, stores)
+
+    shared, serial = drive(True), drive(False)
+    assert shared == serial
+    assert shared[1] > 0                    # the slow session backpressures
+
+
+def test_shared_window_waits_for_every_consumer():
+    """A frame acked by only one of two registered consumers stays
+    unconsumed: it cannot be evicted, and the window wedges rather than
+    dropping it from under the laggard."""
+    fab = Fabric(n_hosts=2, constants=BGQ)
+    _, _, src = make_stream(4)
+    stager = StreamStager(fab, window_bytes=2 * FRAME_BYTES)
+    stager.register_consumer("a")
+    stager.register_consumer("b")
+    with pytest.raises(ValueError, match="unknown consumer"):
+        stager.release("nope", 0.0, consumer="c")
+    it = iter(src)
+    for _ in range(2):
+        fid, path, buf, t_emit = next(it)
+        rec = stager.ingest(path, buf, t_emit)
+        stager.release(path, rec.t_avail, consumer="a")   # b never acks
+    fid, path, buf, t_emit = next(it)
+    with pytest.raises(RuntimeError, match="wedged"):
+        stager.ingest(path, buf, t_emit)
+    # once b acks too, admission proceeds at the max ack time
+    for p in list(stager._resident):
+        stager.release(p, 2.0, consumer="b")
+    rec = stager.ingest(path, buf, t_emit)
+    assert rec.t_avail > 2.0
+    assert stager.evictions > 0
+
+
 # ---------------------------------------------------------------------------
 # iohook mode="stream"
 # ---------------------------------------------------------------------------

@@ -37,15 +37,13 @@ def legacy_allgather(shard, P, c=BGQ):
     return (P - 1) * (shard / c.link_bw + c.link_latency)
 
 
+from tests.conftest import make_fabric as _make_fabric
+
+
 def make_fabric(n_hosts=4, n_files=3, size=1 << 14, topology=None, seed=0):
-    fab = Fabric(n_hosts=n_hosts, constants=BGQ, topology=topology)
-    rng = np.random.default_rng(seed)
-    paths = []
-    for i in range(n_files):
-        p = f"d/f{i}.bin"
-        fab.fs.put(p, rng.integers(0, 255, size, dtype=np.uint8))
-        paths.append(p)
-    return fab, paths
+    """This module's default shape over the shared conftest builder."""
+    return _make_fabric(n_hosts=n_hosts, n_files=n_files, size=size,
+                        seed=seed, topology=topology)
 
 
 # ---------------------------------------------------------------------------

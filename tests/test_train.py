@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ShapeConfig
 from repro.configs.registry import get_smoke_config
@@ -28,6 +29,7 @@ def test_loss_decreases_on_repeated_batch():
     assert losses[-1] < losses[0] * 0.8
 
 
+@pytest.mark.slow
 def test_microbatch_grads_match_full_batch():
     cfg = get_smoke_config("internlm2_20b")
     from repro.models import model as M
