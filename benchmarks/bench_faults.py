@@ -195,6 +195,19 @@ def run_benchmarks() -> dict:
         "service_flow": bench_service_flow(),
         "goodput": bench_goodput(),
     }
+    # telemetry: rerun the healthy goodput scenario traced — an
+    # identical total proves tracing is simulation-neutral; the registry
+    # snapshot rides along (quick_check compares the sections above only)
+    from repro.core.api import (BroadcastEntry, CollectiveConfig,
+                                StagingClient, StagingSpec)
+    fab, paths = _make_fabric(64)
+    client = StagingClient(fab, trace=True)
+    rep = client.stage(StagingSpec([BroadcastEntry(tuple(paths),
+                                                   pin=False)]),
+                       CollectiveConfig(), resolve=False)
+    assert rep.total_time == report["goodput"][0]["total_s"], \
+        "tracing changed the simulated accounting"
+    report["metrics"] = client.tracer.metrics.snapshot()
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)
     return report

@@ -91,11 +91,15 @@ def _policy(name: str):
 
 
 def _open_loop(n_hosts: int, policy_name: str, rate: float,
-               n_requests: int) -> dict:
+               n_requests: int, tracer=None) -> dict:
     """One open-loop run: Poisson(rate) arrivals, Pareto holds, the same
-    schedule for every policy (fixed seed)."""
+    schedule for every policy (fixed seed). ``tracer`` optionally
+    attaches a `repro.core.telemetry.Tracer` — the returned accounting
+    must be identical either way (telemetry records, never charges)."""
     from repro.core.qos import QoSScheduler
     fab, svc = _service(n_hosts)
+    if tracer is not None:
+        fab.attach_tracer(tracer)
     sched = QoSScheduler(svc, policy=_policy(policy_name))
     rng = np.random.default_rng(SEED)
     names = [n for n, _ in DATASETS]
@@ -215,6 +219,20 @@ def run_benchmarks() -> dict:
         "closed_loop": bench_closed_loop(),
         "quick_anchor": quick_anchor(),
     }
+    # telemetry: replay one anchor configuration traced — the summary
+    # must be IDENTICAL to the untraced anchor run (simulation
+    # neutrality), and the registry snapshot (qos.latency_s histogram,
+    # park counters, svc/fs/net series) rides along in the report
+    from repro.core.telemetry import Tracer
+    tracer = Tracer()
+    traced = _open_loop(QUICK_N_HOSTS, "qos", QUICK_INTENSITIES[0],
+                        QUICK_N_REQUESTS, tracer=tracer)
+    anchor = next(r for r in report["quick_anchor"]
+                  if r["policy"] == "qos"
+                  and r["rate_hz"] == QUICK_INTENSITIES[0])
+    assert traced == anchor, \
+        "tracing changed the qos simulated accounting"
+    report["metrics"] = tracer.metrics.snapshot()
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)
     return report

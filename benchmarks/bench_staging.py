@@ -48,6 +48,8 @@ Row = Tuple[str, float, str]
 
 JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          "BENCH_staging.json")
+TRACE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "TRACE_staging.json")
 
 # which staging API surface this bench drives (run.py summary column)
 API_PATH = "client"
@@ -85,7 +87,11 @@ def _legacy_stage_collective(fabric, paths):
         t_read_done = max(t_read_done, t_file) + coll_overhead
     total = sum(fabric.fs.size(p) for p in paths)
     stripe_bytes = max(1, (total + P_ - 1) // P_)
-    fabric.net.ring_allgather_time(stripe_bytes, P_)
+    import warnings
+    with warnings.catch_warnings():
+        # the seed path IS the deprecated alias — that is the point here
+        warnings.simplefilter("ignore", DeprecationWarning)
+        fabric.net.ring_allgather_time(stripe_bytes, P_)
     for path in paths:
         size = fabric.fs.size(path)
         blob = np.concatenate([fabric.fs.files[path][off:off + sz]
@@ -129,17 +135,34 @@ def _sim_dict(rep) -> dict:
     }
 
 
-def _stage_sim_accounting(hosts: int) -> dict:
-    """One FLAT-topology client staging run, reduced to its SIMULATED
-    accounting (deterministic — the quick-mode parity anchor). Returns
-    the sim dict; replicas are byte-checked as a side effect."""
+def _stage_client_run(hosts: int, trace: bool = False):
+    """One FLAT-topology client staging run (optionally traced); returns
+    ``(sim_dict, client)``. Replicas are byte-checked as a side effect."""
     from repro.core.api import (BroadcastEntry, CollectiveConfig,
                                 StagingClient, StagingSpec)
     fab, paths = _make_fabric(hosts)
     spec = StagingSpec([BroadcastEntry(tuple(paths), pin=False)])
-    rep = StagingClient(fab).stage(spec, CollectiveConfig(), resolve=False)
+    client = StagingClient(fab, trace=trace)
+    rep = client.stage(spec, CollectiveConfig(), resolve=False)
     _check_replicas(fab, paths)
-    return _sim_dict(rep)
+    return _sim_dict(rep), client
+
+
+def _stage_sim_accounting(hosts: int, trace: bool = False) -> dict:
+    """One FLAT-topology client staging run, reduced to its SIMULATED
+    accounting (deterministic — the quick-mode parity anchor). With
+    ``trace`` the run records a full span timeline; the Chrome trace is
+    validated and, at the largest P, exported to ``TRACE_staging.json``
+    — parity asserted by the caller then PROVES telemetry never touches
+    the simulated arithmetic."""
+    sim, client = _stage_client_run(hosts, trace=trace)
+    if trace:
+        from repro.core.telemetry import (to_chrome_trace,
+                                          validate_chrome_trace)
+        validate_chrome_trace(to_chrome_trace(client.tracer))
+        if hosts == max(HOST_COUNTS):
+            client.write_trace(TRACE_PATH)
+    return sim
 
 
 def bench_stage_collective() -> List[dict]:
@@ -296,21 +319,33 @@ def run_benchmarks() -> dict:
     labeling = bench_labeling()
     hook_paths = bench_hook_paths()
     topology = bench_topology_plans()
+    # telemetry: rerun the largest config traced — identical sim
+    # accounting proves tracing is simulation-neutral, the registry
+    # snapshot rides along in the report, and the Chrome trace artifact
+    # lands next to the baseline
+    sim_traced, traced = _stage_client_run(max(HOST_COUNTS), trace=True)
+    assert sim_traced == staging[-1]["sim"], \
+        "tracing changed the simulated accounting"
+    traced.write_trace(TRACE_PATH)
     report = {"calibration": BGQ.name, "api_path": API_PATH,
               "staging": staging, "labeling": labeling,
-              "hook_paths": hook_paths, "topology": topology}
+              "hook_paths": hook_paths, "topology": topology,
+              "metrics": traced.tracer.metrics.snapshot()}
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)
     return report
 
 
-def quick_check() -> dict:
+def quick_check(trace: bool = False) -> dict:
     """CI smoke: recompute ONLY the simulated numbers (FLAT staging
     accounting + topology plans — seconds of wall time, no legacy
     engines, no labeling) and assert exact equality with the recorded
     ``BENCH_staging.json`` baseline. Simulated accounting is
     deterministic, so any drift is a real cost-model change — rerun the
-    full benchmark to re-baseline when it is intentional."""
+    full benchmark to re-baseline when it is intentional. With ``trace``
+    the same runs record a full telemetry timeline (exported at the
+    largest P) — parity holding tracer-ON is the telemetry-neutrality
+    smoke."""
     with open(JSON_PATH) as f:
         base = json.load(f)
     checked = []
@@ -320,7 +355,7 @@ def quick_check() -> dict:
         assert recorded is not None, (
             f"{JSON_PATH} predates the sim-accounting baseline; rerun the "
             f"full benchmark (python -m benchmarks.bench_staging)")
-        sim = _stage_sim_accounting(hosts)
+        sim = _stage_sim_accounting(hosts, trace=trace)
         assert sim == recorded, (
             f"FLAT-topology simulated accounting drifted at P={hosts}:\n"
             f"  recorded: {recorded}\n  computed: {sim}\n"
@@ -338,12 +373,14 @@ def quick_check() -> dict:
     return {"baseline": os.path.basename(JSON_PATH), "checked": checked}
 
 
-def rows(report=None, quick: bool = False) -> List[Row]:
+def rows(report=None, quick: bool = False, trace: bool = False) -> List[Row]:
     """Harness CSV rows (name, us_per_call, derived) for benchmarks.run.
     ``quick`` runs :func:`quick_check` against the recorded baseline
-    instead of the full wall-clock benchmark."""
+    instead of the full wall-clock benchmark; ``trace`` records a
+    telemetry timeline during the quick runs (exported to
+    ``TRACE_staging.json``)."""
     if quick:
-        result = quick_check()
+        result = quick_check(trace=trace)
         return [(f"bench_quick_{c['name']}", 0.0, "sim_parity=True")
                 for c in result["checked"]]
     if report is None:
@@ -367,7 +404,7 @@ def rows(report=None, quick: bool = False) -> List[Row]:
 
 def main() -> None:
     if "--quick" in sys.argv[1:]:
-        result = quick_check()
+        result = quick_check(trace="--trace" in sys.argv[1:])
         for c in result["checked"]:
             print(f"{c['name']}: simulated accounting matches "
                   f"{result['baseline']}")

@@ -110,6 +110,23 @@ def run_benchmarks() -> dict:
         },
         "turnaround": bench_turnaround(),
     }
+    # telemetry: rerun the slowest-rate online pipeline traced — an
+    # identical turnaround proves tracing is simulation-neutral; the
+    # registry snapshot (stream frame latency, stalls, residency) rides
+    # along in the report
+    from repro.core.telemetry import Tracer
+    from repro.hedm.pipeline import run_online_hedm, simulate_detector_frames
+    frames, dark = simulate_detector_frames(N_FRAMES, size=FRAME_SIZE,
+                                            n_spots=8, seed=2)
+    fab = _fabric()
+    tracer = fab.attach_tracer(Tracer())
+    online = run_online_hedm(fab, frames, dark, rate_hz=RATES_HZ[0],
+                             window=WINDOW, use_kernel=False,
+                             cache_frames=CACHE_FRAMES,
+                             reduce_time_per_frame=REDUCE_S_PER_FRAME)
+    assert online.turnaround == report["turnaround"][0][
+        "stream_turnaround_s"], "tracing changed the simulated accounting"
+    report["metrics"] = tracer.metrics.snapshot()
     with open(JSON_PATH, "w") as f:
         json.dump(report, f, indent=2)
     return report

@@ -18,11 +18,19 @@ bit-exactness anchor against the staging baseline), and ``--qos --quick``
 for the scheduler against the small deterministic anchor recorded in
 ``BENCH_qos.json``.
 
+``--staging --quick --trace`` additionally records a full telemetry
+timeline during the parity runs (`repro.core.telemetry`) and exports the
+largest-P Chrome trace to ``benchmarks/TRACE_staging.json`` (load it at
+https://ui.perfetto.dev) — parity holding tracer-ON is the CI
+telemetry-neutrality smoke.
+
 Every invocation ends with a consolidated summary of ALL ``BENCH_*.json``
 files present (on stderr, so the stdout CSV contract is preserved),
-including the fabric calibration each was measured under AND which
-staging API surface drove it (``legacy shim`` vs ``client``) — so a
-regression confined to the deprecation shim is visible at a glance.
+including the fabric calibration each was measured under, which staging
+API surface drove it (``legacy shim`` vs ``client``), and — for result
+files carrying a telemetry ``metrics`` block — a P50/P99 column from the
+shared registry histograms (QoS latency, stage totals, per-collective
+durations; see docs/observability.md).
 """
 from __future__ import annotations
 
@@ -109,6 +117,27 @@ def _api_path(report: dict) -> str:
         return "-"
 
 
+# which registry histogram a result file's P50/P99 column quotes, in
+# preference order (the first one present with observations wins)
+_SUMMARY_HISTOGRAMS = ("qos.latency_s", "stage.total_s",
+                       "stream.frame_latency_s", "collective.duration_s")
+
+
+def _percentiles(report: dict) -> str:
+    """``hist=P50/P99`` from the report's telemetry ``metrics`` block
+    (the shared `repro.core.telemetry.MetricsRegistry` snapshot), or
+    '-' for result files recorded before the telemetry PR."""
+    try:
+        hists = report.get("metrics", {}).get("histograms", {})
+        for name in _SUMMARY_HISTOGRAMS:
+            h = hists.get(name)
+            if h and h.get("count") and h.get("p50") is not None:
+                return f"{name}={h['p50']:.3f}/{h['p99']:.3f}s"
+    except Exception:
+        pass
+    return "-"
+
+
 def print_summary(out=sys.stderr) -> None:
     """Consolidated table across every BENCH_*.json in this directory."""
     paths = sorted(glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json")))
@@ -120,20 +149,22 @@ def print_summary(out=sys.stderr) -> None:
             with open(path) as f:
                 report = json.load(f)
         except (OSError, json.JSONDecodeError):
-            rows.append((os.path.basename(path), "-", "-", "unreadable"))
+            rows.append((os.path.basename(path), "-", "-", "-",
+                         "unreadable"))
             continue
         rows.append((os.path.basename(path), _calibration(report),
-                     _api_path(report),
+                     _api_path(report), _percentiles(report),
                      _headline(os.path.basename(path), report)))
     w_name = max(len(r[0]) for r in rows)
     w_cal = max(max(len(r[1]) for r in rows), len("calibration"))
     w_api = max(max(len(r[2]) for r in rows), len("api_path"))
+    w_pct = max(max(len(r[3]) for r in rows), len("p50/p99"))
     print(f"\n== BENCH summary ({len(rows)} result files) ==", file=out)
     print(f"{'file':<{w_name}}  {'calibration':<{w_cal}}  "
-          f"{'api_path':<{w_api}}  headline", file=out)
-    for name, cal, api, head in rows:
-        print(f"{name:<{w_name}}  {cal:<{w_cal}}  {api:<{w_api}}  {head}",
-              file=out)
+          f"{'api_path':<{w_api}}  {'p50/p99':<{w_pct}}  headline", file=out)
+    for name, cal, api, pct, head in rows:
+        print(f"{name:<{w_name}}  {cal:<{w_cal}}  {api:<{w_api}}  "
+              f"{pct:<{w_pct}}  {head}", file=out)
 
 
 def main() -> None:
@@ -142,11 +173,17 @@ def main() -> None:
         if "--staging" in sys.argv[1:]:
             from benchmarks import bench_staging
             quick = "--quick" in sys.argv[1:]
+            trace = "--trace" in sys.argv[1:]
             print(f"[bench_staging] api_path={bench_staging.API_PATH}"
-                  f"{' quick=sim-parity-only' if quick else ''}",
+                  f"{' quick=sim-parity-only' if quick else ''}"
+                  f"{' trace=on' if trace else ''}",
                   file=sys.stderr)
-            for name, us, derived in bench_staging.rows(quick=quick):
+            for name, us, derived in bench_staging.rows(quick=quick,
+                                                        trace=trace):
                 print(f"{name},{us:.1f},{derived}")
+            if trace and quick:
+                print(f"[bench_staging] wrote {bench_staging.TRACE_PATH} "
+                      f"(load at https://ui.perfetto.dev)", file=sys.stderr)
         elif "--streaming" in sys.argv[1:]:
             from benchmarks import bench_streaming
             print(f"[bench_streaming] api_path={bench_streaming.API_PATH}",

@@ -66,6 +66,9 @@ from repro.core.faults import FaultEvent, FaultKind, FaultSchedule
 from repro.core.staging import (StagingReport, stage_collective, stage_naive,
                                 stage_pipelined, stage_replicated)
 from repro.core.streaming import StreamStager, stage_stream
+from repro.core.telemetry import (NULL_TRACER, Tracer,  # noqa: F401
+                                  TracerLike, flight_recorder,
+                                  write_chrome_trace)
 from repro.core.topology import (BGQ_TORUS, FLAT, TOPOLOGIES,  # noqa: F401
                                  TPU_POD_ICI_DCN, Topology, TopologyConfig,
                                  resolve_topology)
@@ -631,20 +634,54 @@ class StagingClient:
     `fabric` is the simulated cluster; `service` an optional
     :class:`~repro.core.datasvc.StagingService` or :class:`ServiceConfig`
     (built lazily); `registry` defaults to the process-wide
-    :data:`ENGINES`.
+    :data:`ENGINES`; `trace` turns on timeline-resolved telemetry
+    (``True`` builds a fresh `repro.core.telemetry.Tracer`, or pass your
+    own) attached fabric-wide — spans/metrics record simulated time but
+    NEVER change it (docs/observability.md). Off (the default) the
+    fabric keeps the zero-cost :data:`~repro.core.telemetry.NULL_TRACER`.
     """
 
     def __init__(self, fabric: Fabric,
                  service: Optional[object] = None,
-                 registry: EngineRegistry = ENGINES):
+                 registry: EngineRegistry = ENGINES,
+                 trace: Union[bool, Tracer] = False):
         self.fabric = fabric
         self.registry = registry
+        if trace:
+            fabric.attach_tracer(trace if isinstance(trace, Tracer)
+                                 else Tracer())
         self._service = None
         self._service_config: Optional[ServiceConfig] = None
         if isinstance(service, ServiceConfig):
             self._service_config = service
         elif service is not None:
             self._service = service
+
+    # -- telemetry ----------------------------------------------------------
+    @property
+    def tracer(self) -> TracerLike:
+        """The fabric-wide tracer (the shared
+        :data:`~repro.core.telemetry.NULL_TRACER` when tracing is off)."""
+        return self.fabric.tracer
+
+    def write_trace(self, path: str) -> str:
+        """Export every recorded span as a Chrome trace-event JSON file
+        (load it at https://ui.perfetto.dev); returns `path`.
+        Raises when the client was built without ``trace=``."""
+        if not self.fabric.tracer.enabled:
+            raise ValueError(
+                "tracing is off; construct StagingClient(fabric, "
+                "trace=True) to record a timeline")
+        return write_chrome_trace(self.fabric.tracer, path)
+
+    def flight_report(self) -> str:
+        """The plain-text flight-recorder report (critical-path breakdown
+        per stage, tier attribution, FS contention, metrics digest)."""
+        if not self.fabric.tracer.enabled:
+            raise ValueError(
+                "tracing is off; construct StagingClient(fabric, "
+                "trace=True) to record a timeline")
+        return flight_recorder(self.fabric.tracer)
 
     @property
     def planner(self) -> CollectivePlanner:

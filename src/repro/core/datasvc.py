@@ -388,6 +388,19 @@ class StagingService:
             entry.holders = (set(range(fab.n_hosts)) if fab.faults.trivial
                              else set(fab.live_ids(t_done)))
 
+    def _trans(self, entry: DatasetEntry, state: DatasetState,
+               t: float) -> None:
+        """`DatasetEntry.to_state` plus telemetry: one instant event per
+        lifecycle transition, so a trace shows WHEN each dataset moved
+        through REGISTERED/STAGING/RESIDENT/DEGRADED/EVICTING/GONE (the
+        validation and history bookkeeping are unchanged)."""
+        entry.to_state(state, t)
+        tr = self.fabric.tracer
+        if tr.enabled:
+            tr.instant(f"dataset.{state.value}", t, track="svc",
+                       dataset=entry.name)
+            tr.metrics.counter(f"svc.transition.{state.value}").inc()
+
     # -- lease lifecycle ----------------------------------------------------
     def acquire(self, session_id: str, name: str, t: float) -> Lease:
         """Lease dataset `name` for `session_id` at simulated time `t`.
@@ -406,13 +419,16 @@ class StagingService:
         """
         entry = self.catalog[name]
         entry.acquires += 1
+        t_admit = t
         if entry.state is DatasetState.RESIDENT:
             if t < entry.t_ready:            # the stage is still in flight
                 entry.coalesced += 1
                 self.stats.coalesced += 1
+                outcome = "coalesced"
             else:
                 entry.hits += 1
                 self.stats.hits += 1
+                outcome = "hit"
             t_ready = max(t, entry.t_ready)
         elif entry.state is DatasetState.DEGRADED:
             # acquire on a degraded dataset triggers repair, not a wedge;
@@ -420,16 +436,18 @@ class StagingService:
             # fault-free invariant acquires == stages+coalesced+hits
             # extends to ... + repairs under injected failures
             _, t_ready = self.re_replicate(name, t)
+            outcome = "repair"
         else:                                # REGISTERED or GONE
             restage = entry.state is DatasetState.GONE
+            outcome = "restage" if restage else "stage"
             t_admit = self._admit(entry, t)
-            entry.to_state(DatasetState.STAGING, t_admit)
+            self._trans(entry, DatasetState.STAGING, t_admit)
             rep, t_done = self._stage_fn(self.fabric, entry.paths, t_admit,
                                          **self._stage_kw)
             entry.last_report = rep
             entry.t_ready = t_done
             entry.stage_count += 1
-            entry.to_state(DatasetState.RESIDENT, t_done)
+            self._trans(entry, DatasetState.RESIDENT, t_done)
             self._after_stage(entry, rep, t_done)
             self.stats.stages += 1
             self.stats.restages += int(restage)
@@ -437,6 +455,18 @@ class StagingService:
             t_ready = t_done
         entry.leases[session_id] = entry.leases.get(session_id, 0) + 1
         self._pin_once(entry, t_ready)
+        tr = self.fabric.tracer
+        if tr.enabled:
+            # coalesced-acquire attribution: the span covers [t, t_ready),
+            # i.e. the tail of the in-flight stage this request joined
+            sp = tr.span("svc.acquire", t, t_ready, track="svc",
+                         dataset=name, session=session_id, outcome=outcome)
+            if t_admit > t:
+                tr.span("svc.queue_wait", t, t_admit, track="svc",
+                        parent=sp, dataset=name)
+            tr.metrics.counter(f"svc.acquire.{outcome}").inc()
+            tr.metrics.histogram("svc.acquire_latency_s").observe(
+                t_ready - t)
         return Lease(session_id=session_id, dataset=name,
                      t_request=t, t_ready=t_ready)
 
@@ -459,9 +489,9 @@ class StagingService:
 
     # -- admission / eviction -----------------------------------------------
     def _evict(self, entry: DatasetEntry, t: float) -> None:
-        entry.to_state(DatasetState.EVICTING, t)
+        self._trans(entry, DatasetState.EVICTING, t)
         self._drop_replicas(entry)
-        entry.to_state(DatasetState.GONE, t)   # drop is free bookkeeping
+        self._trans(entry, DatasetState.GONE, t)  # drop: free bookkeeping
         entry.holders = set()
         entry.placement = None
         self.stats.evictions += 1
@@ -527,7 +557,7 @@ class StagingService:
             if host in entry.holders:
                 entry.holders.discard(host)
                 if entry.state is DatasetState.RESIDENT:
-                    entry.to_state(DatasetState.DEGRADED, t)
+                    self._trans(entry, DatasetState.DEGRADED, t)
                     self.stats.degraded_events += 1
 
     def _on_host_recovery(self, host: int, t: float) -> None:
@@ -541,7 +571,7 @@ class StagingService:
             if (entry.state is DatasetState.RESIDENT
                     and entry.placement is None
                     and host not in entry.holders):
-                entry.to_state(DatasetState.DEGRADED, t)
+                self._trans(entry, DatasetState.DEGRADED, t)
                 self.stats.degraded_events += 1
 
     def fail_host(self, host: int, t: float) -> List[FaultEvent]:
@@ -624,7 +654,7 @@ class StagingService:
                                     mode="re_replicate")
                 t_done = t
             entry.holders = alive
-        entry.to_state(DatasetState.RESIDENT, t_done)
+        self._trans(entry, DatasetState.RESIDENT, t_done)
         entry.t_ready = max(entry.t_ready, t_done)
         entry.repairs += 1
         self.stats.repairs += 1
@@ -640,13 +670,13 @@ class StagingService:
         leases are re-pinned onto the fresh replicas."""
         count = entry.lease_count
         self._drop_replicas(entry)          # stale stripes + pins go
-        entry.to_state(DatasetState.STAGING, t)
+        self._trans(entry, DatasetState.STAGING, t)
         rep, t_done = self._stage_fn(self.fabric, entry.paths, t,
                                      **self._stage_kw)
         entry.last_report = rep
         entry.t_ready = t_done
         entry.stage_count += 1
-        entry.to_state(DatasetState.RESIDENT, t_done)
+        self._trans(entry, DatasetState.RESIDENT, t_done)
         self._after_stage(entry, rep, t_done)
         self.stats.stages += 1
         self.stats.restages += 1
@@ -674,7 +704,7 @@ class StagingService:
             for entry in self.catalog:
                 if (entry.state is DatasetState.RESIDENT
                         and entry.placement is None):
-                    entry.to_state(DatasetState.DEGRADED, t)
+                    self._trans(entry, DatasetState.DEGRADED, t)
                     self.stats.degraded_events += 1
         else:
             removed = set(changed)
@@ -685,7 +715,7 @@ class StagingService:
                         and any(o in removed
                                 for own in entry.placement.owners.values()
                                 for o in own)):
-                    entry.to_state(DatasetState.DEGRADED, t)
+                    self._trans(entry, DatasetState.DEGRADED, t)
                     self.stats.degraded_events += 1
         return changed
 

@@ -31,8 +31,9 @@ from __future__ import annotations
 
 import heapq
 import math
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 
 class CausalityError(RuntimeError):
@@ -67,10 +68,21 @@ class EventLoop:
     this same drain, after anything already due there with a smaller
     ``(priority, seq)``)."""
 
-    def __init__(self, t0: float = 0.0):
+    def __init__(self, t0: float = 0.0, history_limit: int = 100_000,
+                 history_key_limit: Optional[int] = None):
         self.now = t0
         self.fired = 0
-        self.history: List[Event] = []        # fired events, firing order
+        # fired events, firing order — a ring buffer so a long-running
+        # loop's memory stays bounded. `history_limit` caps the global
+        # retention; `history_key_limit` (optional) additionally caps
+        # retention PER `key`, so one chatty session cannot crowd every
+        # other key out of the window. `fired` keeps counting either way;
+        # `history_dropped` counts evictions.
+        self.history: Deque[Event] = deque()
+        self.history_limit = history_limit
+        self.history_key_limit = history_key_limit
+        self.history_dropped = 0
+        self._key_counts: Dict[Optional[str], int] = {}
         self._heap: List[Tuple[Tuple[float, int, int], Event]] = []
         self._seq = 0
 
@@ -106,6 +118,27 @@ class EventLoop:
         return self._heap[0][1].t if self._heap else None
 
     # -- execution ----------------------------------------------------------
+    def _record(self, ev: Event) -> None:
+        """Append `ev` to the bounded fired-history ring buffer."""
+        self.history.append(ev)
+        self._key_counts[ev.key] = self._key_counts.get(ev.key, 0) + 1
+        if (self.history_key_limit is not None
+                and self._key_counts[ev.key] > self.history_key_limit):
+            # evict the OLDEST event with this key (the deque stays in
+            # firing order; only the matching entry is removed)
+            for i, old in enumerate(self.history):
+                if old.key == ev.key:
+                    del self.history[i]
+                    break
+            self._key_counts[ev.key] -= 1
+            self.history_dropped += 1
+        while len(self.history) > self.history_limit:
+            old = self.history.popleft()
+            self._key_counts[old.key] -= 1
+            if self._key_counts[old.key] == 0:
+                del self._key_counts[old.key]
+            self.history_dropped += 1
+
     def step(self) -> Optional[Event]:
         """Fire exactly the next event (advancing ``now`` to it); returns
         it, or None when the timeline is drained."""
@@ -115,7 +148,7 @@ class EventLoop:
                 continue
             self.now = ev.t
             self.fired += 1
-            self.history.append(ev)
+            self._record(ev)
             ev.fn()
             return ev
         return None

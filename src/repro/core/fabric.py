@@ -28,6 +28,7 @@ return the operation's completion time on the same clock.
 from __future__ import annotations
 
 import fnmatch
+import warnings
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Tuple
@@ -36,6 +37,7 @@ import numpy as np
 
 from repro.core.collectives import CollectivePlan, CollectivePlanner
 from repro.core.faults import FaultEvent, FaultKind, FaultSchedule
+from repro.core.telemetry import NULL_TRACER, TracerLike
 from repro.core.topology import FLAT, Topology, TopologyLike, resolve_topology
 
 
@@ -118,15 +120,25 @@ class SharedFilesystem:
     bytes_written: int = 0            # time-accounted writes (write-back path)
     write_requests: int = 0
     metadata_ops: int = 0
+    tracer: TracerLike = NULL_TRACER  # shared via Fabric.attach_tracer
 
-    def _occupy(self, t: float, seconds: float) -> float:
+    def _occupy(self, t: float, seconds: float, op: str = "io") -> float:
         """Claim `seconds` of the shared busy stream for a request issued
         at `t`; returns the start time (``max(t, busy_until)``). All
-        occupancy/wait accounting funnels through here."""
+        occupancy/wait accounting funnels through here — and so does all
+        FS telemetry: one ``fs.<op>`` busy span per request plus an
+        ``fs.wait`` span when it queued behind earlier traffic."""
         start = max(t, self.busy_until)
         self.wait_time += start - t
         self.busy_until = start + seconds
         self.busy_time += seconds
+        tr = self.tracer
+        if tr.enabled:
+            if start > t:
+                tr.span("fs.wait", t, start, track="fs", op=op)
+                tr.metrics.counter("fs.contention_waits").inc()
+                tr.metrics.histogram("fs.wait_s").observe(start - t)
+            tr.span(f"fs.{op}", start, start + seconds, track="fs")
         return start
 
     def put(self, path: str, data: np.ndarray) -> None:
@@ -147,7 +159,8 @@ class SharedFilesystem:
         the shared-FS busy stream like any other request."""
         self.metadata_ops += 1
         names = sorted(n for n in self.files if fnmatch.fnmatch(n, pattern))
-        self._occupy(t, self.constants.fs_md_latency * (1 + len(names) / 64))
+        self._occupy(t, self.constants.fs_md_latency * (1 + len(names) / 64),
+                     op="metadata")
         return names, self.busy_until
 
     def read(self, path: str, offset: int, size: int, t: float,
@@ -165,7 +178,7 @@ class SharedFilesystem:
         """
         bw = (self.constants.fs_seq_bw if coordinated
               else self.constants.fs_rand_bw)
-        self._occupy(t, size / bw)
+        self._occupy(t, size / bw, op="read")
         t_done = self.busy_until + self.constants.fs_op_latency
         self.bytes_read += size
         self.read_requests += 1
@@ -189,7 +202,7 @@ class SharedFilesystem:
         total = sum(sz for _, sz in stripes)
         bw = (self.constants.fs_seq_bw if coordinated
               else self.constants.fs_rand_bw)
-        self._occupy(t, total / bw)
+        self._occupy(t, total / bw, op="read")
         t_done = self.busy_until + self.constants.fs_op_latency
         self.bytes_read += total
         self.read_requests += len(stripes)
@@ -214,7 +227,7 @@ class SharedFilesystem:
         buf = np.ascontiguousarray(data).view(np.uint8).ravel()
         bw = (self.constants.fs_seq_bw if coordinated
               else self.constants.fs_rand_bw)
-        self._occupy(t, buf.size / bw)
+        self._occupy(t, buf.size / bw, op="write")
         t_done = self.busy_until + self.constants.fs_op_latency
         self.files[path] = buf
         self.bytes_written += buf.size
@@ -240,7 +253,7 @@ class SharedFilesystem:
         total = sum(sz for _, sz in stripes)
         bw = (self.constants.fs_seq_bw if coordinated
               else self.constants.fs_rand_bw)
-        self._occupy(t, total / bw)
+        self._occupy(t, total / bw, op="write")
         t_done = self.busy_until + self.constants.fs_op_latency
         self.files[path] = buf
         self.bytes_written += total
@@ -276,6 +289,7 @@ class Interconnect:
     tier_bytes: Dict[str, int] = field(default_factory=dict)
     faults: Optional[FaultSchedule] = None
     now: float = 0.0                  # fault clock (advance_faults)
+    tracer: TracerLike = NULL_TRACER  # shared via Fabric.attach_tracer
 
     def __post_init__(self) -> None:
         self._planner = CollectivePlanner(self.topology, self.constants)
@@ -356,6 +370,38 @@ class Interconnect:
         self.bytes_moved += plan.total_bytes
         return plan.time
 
+    def _execute_traced(self, plan: CollectivePlan,
+                        t: Optional[float]) -> float:
+        """:meth:`execute` plus telemetry: one ``collective.<op>`` span
+        over ``[t, t + duration)`` with per-tier child spans partitioning
+        the interval proportional to each tier's wire bytes, a per-tier
+        bandwidth-utilization gauge series, and a duration histogram
+        observation. The recorded times are the ones :meth:`execute`
+        already computed — tracing never changes the arithmetic."""
+        dt = self.execute(plan)
+        tr = self.tracer
+        if tr.enabled:
+            t0 = self.now if t is None else t
+            sp = tr.span(f"collective.{plan.op}", t0, t0 + dt, track="net",
+                         algorithm=plan.algorithm, nbytes=plan.nbytes,
+                         n_hosts=plan.n_hosts, rerouted=plan.rerouted,
+                         wire_bytes=plan.total_bytes)
+            total = plan.total_bytes
+            if dt > 0 and total > 0:
+                tcur = t0
+                for tier in sorted(plan.tier_bytes):
+                    nb = plan.tier_bytes[tier]
+                    share = dt * (nb / total)
+                    tr.span(f"tier.{tier}", tcur, tcur + share,
+                            track=f"net/{tier}", parent=sp, nbytes=nb)
+                    gauge = tr.metrics.gauge(f"net.bw.{tier}")
+                    gauge.record(tcur, nb / share if share > 0 else 0.0)
+                    gauge.record(tcur + share, 0.0)
+                    tcur += share
+            tr.metrics.histogram("collective.duration_s").observe(dt)
+            tr.metrics.counter(f"collective.{plan.op}").inc()
+        return dt
+
     def tier_snapshot(self) -> Dict[str, int]:
         """Copy of the per-tier counters (pair with :meth:`tier_delta`)."""
         return dict(self.tier_bytes)
@@ -373,9 +419,9 @@ class Interconnect:
         cost model unless pinned or given). `t` is the issue time consulted
         against the fault schedule (default: the fault clock ``now``)."""
         planner, dead = self._fault_state(t, n_hosts)
-        return self.execute(
+        return self._execute_traced(
             planner.plan_broadcast(nbytes, n_hosts - dead, algorithm,
-                                   dead=dead))
+                                   dead=dead), t)
 
     def allgather(self, shard_bytes: int, n_hosts: int,
                   algorithm: Optional[str] = None,
@@ -384,9 +430,9 @@ class Interconnect:
         contributes `shard_bytes`, planned over the bound topology (dead
         hosts at issue time `t` are re-routed around)."""
         planner, dead = self._fault_state(t, n_hosts)
-        return self.execute(
+        return self._execute_traced(
             planner.plan_allgather(shard_bytes, n_hosts - dead, algorithm,
-                                   dead=dead))
+                                   dead=dead), t)
 
     def scatter(self, total_bytes: int, n_hosts: int,
                 algorithm: Optional[str] = None,
@@ -395,17 +441,17 @@ class Interconnect:
         shards, planned over the bound topology (dead hosts at issue time
         `t` are re-routed around)."""
         planner, dead = self._fault_state(t, n_hosts)
-        return self.execute(
+        return self._execute_traced(
             planner.plan_scatter(total_bytes, n_hosts - dead, algorithm,
-                                 dead=dead))
+                                 dead=dead), t)
 
     def replichain(self, stripe_bytes: int, n_hosts: int, replication: int,
                    t: Optional[float] = None) -> float:
         """Duration (s) of R-way chained stripe replication (the comm
         phase of ``stage_replicated``); degraded tiers at `t` apply."""
         planner, _ = self._fault_state(t, n_hosts)
-        return self.execute(
-            planner.plan_replichain(stripe_bytes, n_hosts, replication))
+        return self._execute_traced(
+            planner.plan_replichain(stripe_bytes, n_hosts, replication), t)
 
     def repair(self, transfers: List[Tuple[int, int, int]], n_hosts: int,
                t: Optional[float] = None) -> float:
@@ -413,7 +459,8 @@ class Interconnect:
         (``[(src, dst, nbytes), ...]``; see
         `repro.core.collectives.CollectivePlanner.plan_repair`)."""
         planner, _ = self._fault_state(t, n_hosts)
-        return self.execute(planner.plan_repair(transfers, n_hosts))
+        return self._execute_traced(planner.plan_repair(transfers, n_hosts),
+                                    t)
 
     def point_to_point_time(self, nbytes: int,
                             t: Optional[float] = None) -> float:
@@ -421,16 +468,26 @@ class Interconnect:
         detector->leader ingest hop in `repro.core.streaming`), charged
         to the topology's ingest tier (degraded at `t` if scheduled)."""
         planner, _ = self._fault_state(t, 1)
-        return self.execute(planner.plan_point_to_point(nbytes))
+        return self._execute_traced(planner.plan_point_to_point(nbytes), t)
 
     # -- deprecated aliases (pre-topology names) ----------------------------
     def ring_allgather_time(self, shard_bytes: int, n_hosts: int) -> float:
         """Deprecated alias of :meth:`allgather` (the algorithm is now
         planned, not hardwired to the ring)."""
+        warnings.warn(
+            "Interconnect.ring_allgather_time is a deprecated pre-topology "
+            "alias; call Interconnect.allgather, which routes through the "
+            "CollectivePlanner (see docs/architecture.md)",
+            DeprecationWarning, stacklevel=2)
         return self.allgather(shard_bytes, n_hosts)
 
     def broadcast_time(self, nbytes: int, n_hosts: int) -> float:
         """Deprecated alias of :meth:`broadcast`."""
+        warnings.warn(
+            "Interconnect.broadcast_time is a deprecated pre-topology "
+            "alias; call Interconnect.broadcast, which routes through the "
+            "CollectivePlanner (see docs/architecture.md)",
+            DeprecationWarning, stacklevel=2)
         return self.broadcast(nbytes, n_hosts)
 
 
@@ -572,6 +629,18 @@ class Fabric:
                       for i in range(n_hosts)]
         self._ranks_per_host = ranks_per_host
         self._faults_applied: set = set()
+        self.tracer: TracerLike = NULL_TRACER
+
+    def attach_tracer(self, tracer: TracerLike) -> TracerLike:
+        """Bind `tracer` to the fabric and every layer that records into
+        it (shared FS, interconnect) — how ``StagingClient(trace=...)``
+        and the benchmarks turn telemetry on. Pass
+        :data:`~repro.core.telemetry.NULL_TRACER` to turn it back off;
+        either way the simulated-time arithmetic is untouched."""
+        self.tracer = tracer
+        self.fs.tracer = tracer
+        self.net.tracer = tracer
+        return tracer
 
     @property
     def faults(self) -> FaultSchedule:

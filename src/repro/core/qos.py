@@ -44,6 +44,7 @@ import numpy as np
 from repro.core.datasvc import (DatasetEntry, DatasetState, Lease,
                                 StagingService, predict_stage_time)
 from repro.core.events import Event, EventLoop
+from repro.core.telemetry import exact_percentile
 
 # states already counted against the budget: acquiring one of these
 # costs no new memory (hit / coalesce / repair)
@@ -98,6 +99,10 @@ class SessionRequest:
     t_admit: float = math.nan
     t_ready: float = math.nan
     t_release: float = math.nan
+    park_reason: Optional[str] = None   # why the scheduler parked it (if it
+    #                                     did): "budget" (not admissible) or
+    #                                     "fifo_head_of_line" (blocked behind
+    #                                     a parked head under strict FIFO)
     lease: Optional[Lease] = None
     on_complete: Optional[Callable[["SessionRequest"], None]] = field(
         default=None, repr=False)
@@ -200,12 +205,19 @@ class QoSScheduler:
     def _arrive(self, req: SessionRequest) -> None:
         now = self.loop.now
         req.nbytes = self.service.catalog[req.dataset].nbytes
-        if self.admissible(req, now) and (self.policy.name == "qos"
-                                          or not self.pending):
+        fits = self.admissible(req, now)
+        if fits and (self.policy.name == "qos" or not self.pending):
             # fifo: an arrival may not overtake a parked head — it only
             # starts straight away when nobody is queued ahead of it
             self._start(req, now)
         else:
+            req.park_reason = "budget" if not fits else "fifo_head_of_line"
+            tr = self.service.fabric.tracer
+            if tr.enabled:
+                tr.instant("qos.park", now, track="qos",
+                           session=req.session_id, dataset=req.dataset,
+                           reason=req.park_reason)
+                tr.metrics.counter(f"qos.park.{req.park_reason}").inc()
             self.pending.append(req)
 
     def _start(self, req: SessionRequest, now: float) -> None:
@@ -253,6 +265,22 @@ class QoSScheduler:
         self.completed.append(req)
         self._served[req.session_id] = (
             self._served.get(req.session_id, 0) + 1)
+        tr = self.service.fabric.tracer
+        if tr.enabled:
+            # record only: every timestamp below was computed above, untraced
+            sp = tr.span("qos.request", req.t_submit, now, track="qos",
+                         session=req.session_id, dataset=req.dataset,
+                         priority=req.priority, park_reason=req.park_reason)
+            if req.t_admit > req.t_submit:
+                tr.span("qos.parked", req.t_submit, req.t_admit, track="qos",
+                        parent=sp, reason=req.park_reason)
+            if req.t_ready > req.t_admit:
+                tr.span("qos.service", req.t_admit, req.t_ready, track="qos",
+                        parent=sp)
+            if now > req.t_ready:
+                tr.span("qos.hold", req.t_ready, now, track="qos", parent=sp)
+            tr.metrics.histogram("qos.latency_s").observe(req.latency)
+            tr.metrics.counter("qos.completed").inc()
         if req.on_complete is not None:
             req.on_complete(req)
         self._wake(now)
@@ -315,8 +343,8 @@ class QoSScheduler:
         return {
             "completed": len(self.completed),
             "parked": len(self.pending),
-            "p50_latency": float(np.percentile(lat, 50)),
-            "p99_latency": float(np.percentile(lat, 99)),
+            "p50_latency": exact_percentile(lat, 50),
+            "p99_latency": exact_percentile(lat, 99),
             "mean_latency": float(lat.mean()),
             "goodput_bytes_per_s": total / makespan if makespan > 0 else 0.0,
             "makespan": makespan,

@@ -219,6 +219,39 @@ def _coll_overhead(fabric: Fabric) -> float:
         0.0, math.log2(max(fabric.n_hosts, 2)))
 
 
+def _close_stage_span(fabric: Fabric, sp, rep: StagingReport,
+                      t0: float) -> None:
+    """Finalize the engine-level telemetry span opened around one staging
+    operation: sequential phase children partition ``[t0, t0+total_time)``
+    exactly per the report's accounting identity (stage/comm/write/
+    broadcast — so the flight recorder's critical-path breakdown sums to
+    ``total_time`` by construction), report fields become span
+    attributes, and the stage duration lands in the shared histogram.
+    No-op on the disabled tracer; never changes the report."""
+    tr = fabric.tracer
+    if not tr.enabled:
+        return
+    read_phase = ("fs_write" if rep.mode.startswith("stage_out")
+                  else "fs_read")
+    t = t0
+    for phase, dt in ((read_phase, rep.stage_time),
+                      ("comm", rep.comm_time),
+                      ("deliver", rep.write_time),
+                      ("broadcast", rep.broadcast_time)):
+        if dt > 0:
+            tr.span(f"phase.{phase}", t, t + dt, track="engine", parent=sp)
+        t += dt
+    sp.t_end = t
+    sp.attrs.update(n_hosts=rep.n_hosts, total_bytes=rep.total_bytes,
+                    fs_bytes=rep.fs_bytes, fs_write_bytes=rep.fs_write_bytes,
+                    net_bytes=rep.net_bytes, tier_bytes=dict(rep.tier_bytes))
+    if rep.mode == "pipelined":
+        sp.attrs.update(n_chunks=rep.n_chunks,
+                        overlap_saved=rep.overlap_saved)
+    tr.metrics.histogram("stage.total_s").observe(rep.total_time)
+    tr.metrics.counter(f"stage.{rep.mode}").inc()
+
+
 def stage_collective(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
                      topology: TopologyLike = None
                      ) -> Tuple[StagingReport, float]:
@@ -230,7 +263,9 @@ def stage_collective(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     planner; `topology` rebinds it for this call). Returns (report,
     completion time).
     """
-    with fabric.net.scoped_topology(topology):
+    with fabric.net.scoped_topology(topology), \
+            fabric.tracer.region("stage.collective", t0,
+                                 track="engine") as tsp:
         P_ = fabric.n_hosts
         fs0 = fabric.fs.bytes_read
         net0 = fabric.net.bytes_moved
@@ -258,6 +293,7 @@ def stage_collective(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
         rep.fs_bytes = fabric.fs.bytes_read - fs0
         rep.net_bytes = fabric.net.bytes_moved - net0
         rep.tier_bytes = fabric.net.tier_delta(tier0)
+        _close_stage_span(fabric, tsp, rep, t0)
         return rep, t0 + rep.total_time
 
 
@@ -280,7 +316,9 @@ def stage_pipelined(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     identical to ``stage_collective``; ``net_bytes`` can exceed it by up to
     P * n_chunks bytes of per-segment ceil-rounding in the stripe sizes.
     """
-    with fabric.net.scoped_topology(topology):
+    with fabric.net.scoped_topology(topology), \
+            fabric.tracer.region("stage.pipelined", t0,
+                                 track="engine") as tsp:
         P_ = fabric.n_hosts
         fs0 = fabric.fs.bytes_read
         net0 = fabric.net.bytes_moved
@@ -321,6 +359,7 @@ def stage_pipelined(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
         rep.fs_bytes = fabric.fs.bytes_read - fs0
         rep.net_bytes = fabric.net.bytes_moved - net0
         rep.tier_bytes = fabric.net.tier_delta(tier0)
+        _close_stage_span(fabric, tsp, rep, t0)
         return rep, t0 + rep.total_time
 
 
@@ -333,27 +372,31 @@ def stage_naive(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     path never touches the interconnect, so no collective is planned and
     the report's tier accounting stays empty."""
     del topology                    # no collective to plan on this path
-    P_ = fabric.n_hosts
-    fs0 = fabric.fs.bytes_read
-    total = sum(fabric.fs.size(p) for p in paths)
-    rep = StagingReport(n_hosts=P_, total_bytes=total, mode="naive")
-    t_done = t0
-    for path in paths:
-        size = fabric.fs.size(path)
-        for host in fabric.hosts:
-            # concurrent uncoordinated reads: bandwidth serializes on the
-            # shared FS, per-request latency overlaps across hosts
-            data, t_r = fabric.fs.read(path, 0, size, t0, coordinated=False)
-            # fs.read returns a view of the source buffer: same read-only
-            # guard as the collective paths, so no store can mutate the FS
-            replica = data.view()
-            replica.setflags(write=False)
-            host.store.write(path, replica, 0.0)
-            t_done = max(t_done, t_r)
-    rep.stage_time = t_done - t0
-    rep.write_time = total / fabric.constants.local_bw
-    rep.fs_bytes = fabric.fs.bytes_read - fs0
-    return rep, t0 + rep.total_time
+    with fabric.tracer.region("stage.naive", t0, track="engine") as tsp:
+        P_ = fabric.n_hosts
+        fs0 = fabric.fs.bytes_read
+        total = sum(fabric.fs.size(p) for p in paths)
+        rep = StagingReport(n_hosts=P_, total_bytes=total, mode="naive")
+        t_done = t0
+        for path in paths:
+            size = fabric.fs.size(path)
+            for host in fabric.hosts:
+                # concurrent uncoordinated reads: bandwidth serializes on
+                # the shared FS, per-request latency overlaps across hosts
+                data, t_r = fabric.fs.read(path, 0, size, t0,
+                                           coordinated=False)
+                # fs.read returns a view of the source buffer: same
+                # read-only guard as the collective paths, so no store can
+                # mutate the FS
+                replica = data.view()
+                replica.setflags(write=False)
+                host.store.write(path, replica, 0.0)
+                t_done = max(t_done, t_r)
+        rep.stage_time = t_done - t0
+        rep.write_time = total / fabric.constants.local_bw
+        rep.fs_bytes = fabric.fs.bytes_read - fs0
+        _close_stage_span(fabric, tsp, rep, t0)
+        return rep, t0 + rep.total_time
 
 
 # ---------------------------------------------------------------------------
@@ -380,7 +423,9 @@ def stage_replicated(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
 
     Hosts dead at `t0` (non-trivial fault schedule only) are excluded
     from the stripe geometry entirely."""
-    with fabric.net.scoped_topology(topology):
+    with fabric.net.scoped_topology(topology), \
+            fabric.tracer.region("stage.replicated", t0, track="engine",
+                                 replication=replication) as tsp:
         live = (list(range(fabric.n_hosts)) if fabric.faults.trivial
                 else fabric.live_ids(t0))
         L = len(live)
@@ -421,6 +466,7 @@ def stage_replicated(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
         rep.fs_bytes = fabric.fs.bytes_read - fs0
         rep.net_bytes = fabric.net.bytes_moved - net0
         rep.tier_bytes = fabric.net.tier_delta(tier0)
+        _close_stage_span(fabric, tsp, rep, t0)
         return rep, t0 + rep.total_time
 
 
@@ -440,7 +486,9 @@ def re_replicate(fabric: Fabric, paths: Sequence[str],
     `placement` is updated in place (ownership moves to the replacement
     hosts). Raises :class:`LostStripesError` when some stripe has no
     surviving owner (caller must fall back to a full re-stage)."""
-    with fabric.net.scoped_topology(topology):
+    with fabric.net.scoped_topology(topology), \
+            fabric.tracer.region("stage.re_replicate", t0,
+                                 track="engine") as tsp:
         if live is None:
             live = fabric.live_ids(t0)
         alive = set(live)
@@ -493,6 +541,7 @@ def re_replicate(fabric: Fabric, paths: Sequence[str],
         rep.write_time = max(t_host.values(), default=0.0)
         rep.net_bytes = fabric.net.bytes_moved - net0
         rep.tier_bytes = fabric.net.tier_delta(tier0)
+        _close_stage_span(fabric, tsp, rep, t0)
         return rep, t0 + rep.total_time
 
 
@@ -510,7 +559,9 @@ def re_replicate_full(fabric: Fabric, paths: Sequence[str],
     whole dataset in one point-to-point schedule (receiver NICs
     serialize). Raises :class:`ReplicaLossError` when no complete live
     copy exists (full re-stage required)."""
-    with fabric.net.scoped_topology(topology):
+    with fabric.net.scoped_topology(topology), \
+            fabric.tracer.region("stage.re_replicate_full", t0,
+                                 track="engine") as tsp:
         want = set(targets)
         if sources is None:
             sources = [h.host_id for h in fabric.hosts
@@ -536,6 +587,7 @@ def re_replicate_full(fabric: Fabric, paths: Sequence[str],
         rep.write_time = t_write
         rep.net_bytes = fabric.net.bytes_moved - net0
         rep.tier_bytes = fabric.net.tier_delta(tier0)
+        _close_stage_span(fabric, tsp, rep, t0)
         return rep, t0 + rep.total_time
 
 
@@ -571,22 +623,25 @@ def stage_out(fabric: Fabric, outputs: Dict[str, np.ndarray],
     tier accounting stays empty.
     """
     del topology                    # no collective to plan on this path
-    P_ = fabric.n_hosts
-    w0 = fabric.fs.bytes_written
-    bufs = _as_uint8(outputs)
-    total = sum(b.size for b in bufs.values())
-    rep = StagingReport(n_hosts=P_, total_bytes=total, mode="stage_out")
+    with fabric.tracer.region("stage.stage_out", t0, track="engine") as tsp:
+        P_ = fabric.n_hosts
+        w0 = fabric.fs.bytes_written
+        bufs = _as_uint8(outputs)
+        total = sum(b.size for b in bufs.values())
+        rep = StagingReport(n_hosts=P_, total_bytes=total, mode="stage_out")
 
-    coll_overhead = _coll_overhead(fabric)
-    t_done = t0
-    for path, buf in bufs.items():
-        # stripes issue concurrently; the FS serializes bandwidth only
-        t_file = fabric.fs.write_gather(path, buf, _stripes(buf.size, P_),
-                                        t0, coordinated=True)
-        t_done = max(t_done, t_file) + coll_overhead
-    rep.stage_time = t_done - t0
-    rep.fs_write_bytes = fabric.fs.bytes_written - w0
-    return rep, t0 + rep.total_time
+        coll_overhead = _coll_overhead(fabric)
+        t_done = t0
+        for path, buf in bufs.items():
+            # stripes issue concurrently; the FS serializes bandwidth only
+            t_file = fabric.fs.write_gather(path, buf,
+                                            _stripes(buf.size, P_),
+                                            t0, coordinated=True)
+            t_done = max(t_done, t_file) + coll_overhead
+        rep.stage_time = t_done - t0
+        rep.fs_write_bytes = fabric.fs.bytes_written - w0
+        _close_stage_span(fabric, tsp, rep, t0)
+        return rep, t0 + rep.total_time
 
 
 def stage_out_naive(fabric: Fabric, outputs: Dict[str, np.ndarray],
@@ -599,21 +654,25 @@ def stage_out_naive(fabric: Fabric, outputs: Dict[str, np.ndarray],
     write-back benchmark measures. `topology` is accepted for
     engine-protocol uniformity (no interconnect traffic either way)."""
     del topology                    # no collective to plan on this path
-    P_ = fabric.n_hosts
-    w0 = fabric.fs.bytes_written
-    bufs = _as_uint8(outputs)
-    total = sum(b.size for b in bufs.values())
-    rep = StagingReport(n_hosts=P_, total_bytes=total, mode="stage_out_naive")
-    t_done = t0
-    for path, buf in bufs.items():
-        for _ in range(P_):
-            # concurrent uncoordinated writes: bandwidth serializes on the
-            # shared FS, per-request latency overlaps across hosts
-            t_w = fabric.fs.write(path, buf, t0, coordinated=False)
-            t_done = max(t_done, t_w)
-    rep.stage_time = t_done - t0
-    rep.fs_write_bytes = fabric.fs.bytes_written - w0
-    return rep, t0 + rep.total_time
+    with fabric.tracer.region("stage.stage_out_naive", t0,
+                              track="engine") as tsp:
+        P_ = fabric.n_hosts
+        w0 = fabric.fs.bytes_written
+        bufs = _as_uint8(outputs)
+        total = sum(b.size for b in bufs.values())
+        rep = StagingReport(n_hosts=P_, total_bytes=total,
+                            mode="stage_out_naive")
+        t_done = t0
+        for path, buf in bufs.items():
+            for _ in range(P_):
+                # concurrent uncoordinated writes: bandwidth serializes on
+                # the shared FS, per-request latency overlaps across hosts
+                t_w = fabric.fs.write(path, buf, t0, coordinated=False)
+                t_done = max(t_done, t_w)
+        rep.stage_time = t_done - t0
+        rep.fs_write_bytes = fabric.fs.bytes_written - w0
+        _close_stage_span(fabric, tsp, rep, t0)
+        return rep, t0 + rep.total_time
 
 
 # The mode -> engine mapping lives in the pluggable registry

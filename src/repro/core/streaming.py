@@ -52,7 +52,8 @@ import numpy as np
 
 from repro.core.fabric import (BGQ, Fabric, FabricConstants, pin_ref,
                                unpin_ref)
-from repro.core.staging import StagingReport, readonly_view
+from repro.core.staging import (StagingReport, _close_stage_span,
+                                readonly_view)
 from repro.core.topology import TopologyLike, resolve_topology
 
 
@@ -305,6 +306,26 @@ class StreamStager:
                           nbytes=nbytes, owner_host=owner, t_emit=t_emit,
                           t_avail=t_avail, stalled=stalled)
         self.records.append(rec)
+
+        tr = self.fabric.tracer
+        if tr.enabled:
+            # record only: every time below was computed above, untraced
+            with tr.region("stream.frame", t_arrive, track="stream",
+                           frame_id=rec.frame_id, path=path, nbytes=nbytes,
+                           owner_host=owner) as sp:
+                if stalled > 0:
+                    tr.span("stream.stall", t_arrive, t_admit,
+                            reason="window_backpressure")
+                    tr.metrics.counter("stream.stalls").inc()
+                tr.span("stream.scatter", t_admit, self._nic_busy)
+                tr.span("stream.broadcast", t_bc, self._bcast_busy)
+                tr.span("stream.local_write", self._bcast_busy, t_avail)
+                sp.t_end = t_avail
+            tr.metrics.counter("stream.frames").inc()
+            tr.metrics.histogram("stream.frame_latency_s").observe(
+                t_avail - t_emit)
+            tr.metrics.gauge("stream.resident_bytes").record(
+                t_admit, self._resident_bytes())
         return rec
 
     def register_consumer(self, consumer: str) -> None:
@@ -419,27 +440,30 @@ def stage_stream(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     total = sum(fabric.fs.size(p) for p in paths)
     bounded = window_bytes is not None and window_bytes < total
     src = DetectorSource.replay_fs(fabric, paths, rate_hz=rate_hz, t0=t0)
-    stager = StreamStager(fabric, window_bytes=window_bytes or max(total, 1),
-                          t0=t0, topology=topology)
-    pin_set = set(pin_paths)
-    for _, path, buf, t_emit in src:
-        rec = stager.ingest(path, buf, t_emit)
-        if path in pin_set:
-            stager.pin(path)
-        elif bounded:
-            stager.release(path, rec.t_avail)
-    srep = stager.finish()
+    with fabric.tracer.region("stage.stream", t0, track="engine") as tsp:
+        stager = StreamStager(fabric,
+                              window_bytes=window_bytes or max(total, 1),
+                              t0=t0, topology=topology)
+        pin_set = set(pin_paths)
+        for _, path, buf, t_emit in src:
+            rec = stager.ingest(path, buf, t_emit)
+            if path in pin_set:
+                stager.pin(path)
+            elif bounded:
+                stager.release(path, rec.t_avail)
+        srep = stager.finish()
 
-    rep = StagingReport(n_hosts=fabric.n_hosts, total_bytes=total,
-                        mode="stream")
-    rep.stage_time = 0.0                       # no FS read phase at all
-    rep.write_time = total / fabric.constants.local_bw
-    rep.comm_time = max(0.0, srep.ingest_makespan - rep.write_time)
-    rep.fs_bytes = 0
-    rep.net_bytes = srep.net_bytes
-    rep.tier_bytes = dict(srep.tier_bytes)
-    rep.n_chunks = srep.n_frames
-    return rep, t0 + srep.ingest_makespan
+        rep = StagingReport(n_hosts=fabric.n_hosts, total_bytes=total,
+                            mode="stream")
+        rep.stage_time = 0.0                   # no FS read phase at all
+        rep.write_time = total / fabric.constants.local_bw
+        rep.comm_time = max(0.0, srep.ingest_makespan - rep.write_time)
+        rep.fs_bytes = 0
+        rep.net_bytes = srep.net_bytes
+        rep.tier_bytes = dict(srep.tier_bytes)
+        rep.n_chunks = srep.n_frames
+        _close_stage_span(fabric, tsp, rep, t0)
+        return rep, t0 + srep.ingest_makespan
 
 
 @dataclass

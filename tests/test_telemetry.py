@@ -1,0 +1,397 @@
+"""Timeline-resolved telemetry: tracer, metrics, exporters, neutrality.
+
+The load-bearing claims pinned down here:
+
+  * telemetry OFF is the exact pre-telemetry code path — a traced and an
+    untraced twin of the same workload produce bit-identical simulated
+    accounting (StagingReport fields, ServiceStats, tier_bytes, FS
+    busy/wait), and a fresh ``Fabric`` carries the shared
+    :data:`~repro.core.telemetry.NULL_TRACER`;
+  * the Chrome trace-event export is structurally valid JSON (checked
+    through a full ``json`` round-trip at P=1024) with children
+    contained inside their parents' intervals;
+  * histogram percentiles follow the closed-form Prometheus
+    ``histogram_quantile`` interpolation, and
+    :func:`~repro.core.telemetry.exact_percentile` is bit-exact with
+    ``np.percentile``;
+  * the flight recorder's phase breakdown partitions each stage's
+    ``total_time`` exactly, and per-tier attribution partitions each
+    collective's duration;
+  * the span taxonomy lands where documented: engine regions with phase
+    children, ``fs.*``/``fs.wait`` on the fs track, ``collective.*``
+    with per-tier children, ``svc.acquire`` with outcome attribution,
+    ``qos.request`` lifecycles with park reasons, ``stream.frame``
+    deliveries with stall spans;
+  * the EventLoop's fired-history ring buffer stays bounded (globally
+    and per key) and counts what it drops.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from conftest import make_fabric, make_service
+
+from repro.core.telemetry import (DEFAULT_SECONDS_BUCKETS, Histogram,
+                                  MetricsRegistry, NULL_TRACER, Tracer,
+                                  exact_percentile, flight_recorder,
+                                  to_chrome_trace, validate_chrome_trace)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_exact_percentile_matches_numpy():
+    vals = [0.5, 1.25, 7.0, 2.0, 0.125]
+    for p in (0, 25, 50, 90, 99, 100):
+        assert exact_percentile(vals, p) == float(np.percentile(vals, p))
+
+
+def test_histogram_percentile_closed_form():
+    # one bucket (le 10) holding everything: the uniform-in-bucket
+    # interpolation has an exact closed form lo + (p/100)*(hi-lo) with
+    # lo=0, hi=10, clamped to [vmin, vmax]
+    h = Histogram("t", buckets=(10.0,))
+    for v in (2.0, 4.0, 6.0, 8.0):
+        h.observe(v)
+    assert h.percentile(50) == pytest.approx(5.0)      # 0 + 0.5 * 10
+    assert h.percentile(99) == pytest.approx(8.0)      # 9.9 clamped to vmax
+    assert h.percentile(0) == pytest.approx(2.0)       # clamped to vmin
+    assert math.isnan(Histogram("e", buckets=(1.0,)).percentile(50))
+
+
+def test_histogram_buckets_and_overflow():
+    h = Histogram("t", buckets=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 3 and snap["sum"] == 55.5
+    assert snap["buckets"] == {"le_1": 1, "le_10": 1}
+    assert snap["overflow"] == 1
+    assert snap["min"] == 0.5 and snap["max"] == 50.0
+    with pytest.raises(ValueError):
+        Histogram("bad", buckets=(2.0, 1.0))
+
+
+def test_registry_get_or_create_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(2.0)
+    reg.gauge("g").record(0.0, 1.0)
+    reg.gauge("g").record(1.0, 3.0)
+    reg.histogram("h").observe(0.02)
+    snap = reg.snapshot()
+    assert snap["counters"] == {"a": 3.0}
+    assert snap["gauges"]["g"] == {"n": 2, "last": 3.0, "min": 1.0,
+                                   "max": 3.0}
+    assert snap["histograms"]["h"]["count"] == 1
+    # same instance on re-lookup
+    assert reg.histogram("h") is reg.histogram("h")
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+def test_region_auto_parenting_and_track_inheritance():
+    tr = Tracer()
+    with tr.region("outer", 0.0, track="engine") as outer:
+        inner = tr.span("inner", 0.5, 1.0)        # inherits parent + track
+        explicit = tr.span("other", 0.2, 0.3, track="fs")
+        outer.t_end = 2.0
+    after = tr.span("after", 3.0, 4.0)
+    assert inner.parent == outer.span_id and inner.track == "engine"
+    assert explicit.parent == outer.span_id and explicit.track == "fs"
+    assert outer.t_end == 2.0 and outer.duration == 2.0
+    assert after.parent is None
+    assert tr.roots() == [outer, after]
+    assert tr.children(outer) == [inner, explicit]
+    # a region left without an explicit end collapses to an instant —
+    # telemetry never invents durations
+    with tr.region("unclosed", 5.0):
+        pass
+    assert tr.spans[-1].t_end == 5.0
+
+
+def test_null_tracer_is_inert_default():
+    from repro.core.fabric import Fabric
+    fab = Fabric(n_hosts=4)
+    assert fab.tracer is NULL_TRACER
+    assert fab.fs.tracer is NULL_TRACER and fab.net.tracer is NULL_TRACER
+    assert not NULL_TRACER.enabled
+    with NULL_TRACER.region("x", 0.0) as sp:
+        NULL_TRACER.span("y", 0.0, 1.0)
+        NULL_TRACER.instant("z", 0.0)
+        NULL_TRACER.metrics.counter("c").inc()
+        NULL_TRACER.metrics.histogram("h").observe(1.0)
+    assert sp.name == "null" and NULL_TRACER.roots() == []
+    assert NULL_TRACER.metrics.snapshot() == {
+        "counters": {}, "gauges": {}, "histograms": {}}
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: tracer on == tracer off
+# ---------------------------------------------------------------------------
+
+def _report_tuple(rep):
+    r = rep.reports[0]
+    return (rep.total_time, rep.metadata_time, r.stage_time, r.comm_time,
+            r.write_time, r.broadcast_time, r.fs_bytes, r.net_bytes,
+            dict(r.tier_bytes))
+
+
+def test_stage_parity_traced_vs_untraced():
+    from repro.core.api import (BroadcastEntry, CollectiveConfig,
+                                PipelinedConfig, ReplicatedConfig,
+                                StagingClient, StagingSpec)
+    for cfg in (CollectiveConfig(), PipelinedConfig(chunk_bytes=1 << 14),
+                ReplicatedConfig(replication=2)):
+        fab_a, paths = make_fabric(n_hosts=8)
+        fab_b, _ = make_fabric(n_hosts=8)
+        spec = StagingSpec([BroadcastEntry(tuple(paths), pin=False)])
+        off = StagingClient(fab_a).stage(spec, cfg, resolve=False)
+        on = StagingClient(fab_b, trace=True).stage(spec, cfg,
+                                                    resolve=False)
+        assert _report_tuple(off) == _report_tuple(on), type(cfg).__name__
+        assert fab_a.fs.wait_time == fab_b.fs.wait_time
+        assert fab_a.fs.busy_time == fab_b.fs.busy_time
+        assert fab_a.net.bytes_moved == fab_b.net.bytes_moved
+
+
+def test_service_parity_traced_vs_untraced():
+    fab_a, svc_a = make_service(budget_files=8)
+    fab_b, svc_b = make_service(budget_files=8)
+    fab_b.attach_tracer(Tracer())
+    for svc in (svc_a, svc_b):
+        svc.acquire("alice", "d0", 0.0)
+        svc.acquire("bob", "d0", 0.0)            # coalesced
+        l = svc.acquire("alice", "d1", 5.0)
+        svc.release("alice", "d1", l.t_ready + 1.0)
+        svc.acquire("carol", "d2", l.t_ready + 2.0)   # forces eviction
+    sa, sb = svc_a.stats, svc_b.stats
+    assert (sa.stages, sa.hits, sa.coalesced, sa.evictions,
+            sa.stage_time, sa.queue_wait_time) == \
+           (sb.stages, sb.hits, sb.coalesced, sb.evictions,
+            sb.stage_time, sb.queue_wait_time)
+    # and the traced twin actually recorded the service lifecycle
+    names = {s.name for s in fab_b.tracer.spans}
+    assert "svc.acquire" in names and "dataset.resident" in names
+
+
+def test_qos_parity_and_request_spans():
+    from repro.core.qos import FIFO, QoSScheduler
+
+    def run(traced):
+        fab, svc = make_service(budget_files=4)
+        tracer = fab.attach_tracer(Tracer()) if traced else None
+        sched = QoSScheduler(svc, policy=FIFO)
+        for i, (ds, t) in enumerate((("d0", 0.0), ("d1", 0.01),
+                                     ("d2", 0.02), ("d0", 0.03))):
+            sched.submit(f"s{i}", ds, t, priority=i % 2, hold=0.5)
+        sched.run()
+        return sched, tracer
+
+    off, _ = run(False)
+    on, tracer = run(True)
+    assert off.summary() == on.summary()
+    assert [r.latency for r in off.completed] == \
+           [r.latency for r in on.completed]
+    reqs = [s for s in tracer.spans if s.name == "qos.request"]
+    assert len(reqs) == len(on.completed)
+    parked = [r for r in on.completed if r.park_reason is not None]
+    for req in parked:       # under fifo a full budget parks with reasons
+        assert req.park_reason in ("budget", "fifo_head_of_line")
+    by_session = {s.attrs["session"]: s for s in reqs}
+    for req in on.completed:
+        sp = by_session[req.session_id]
+        assert sp.t_start == req.t_submit and sp.t_end == req.t_release
+        kid_names = {c.name for c in tracer.children(sp)}
+        if req.t_admit > req.t_submit:
+            assert "qos.parked" in kid_names
+    hist = tracer.metrics.histograms["qos.latency_s"]
+    assert hist.count == len(on.completed)
+
+
+def test_stream_parity_and_frame_spans():
+    from repro.core.streaming import StreamStager
+    rng = np.random.default_rng(3)
+    frames = [rng.integers(0, 255, 1 << 12, dtype=np.uint8)
+              for _ in range(6)]
+
+    def run(traced):
+        fab, _ = make_fabric(n_hosts=4, n_files=0)
+        tracer = fab.attach_tracer(Tracer()) if traced else None
+        stager = StreamStager(fab, window_bytes=6 << 12)
+        for i, f in enumerate(frames):
+            stager.ingest(f"scan/{i:04d}.bin", f, t_emit=i * 1e-4)
+        return stager.finish(), tracer
+
+    off, _ = run(False)
+    on, tracer = run(True)
+    assert (off.ingest_makespan, off.mean_latency, off.stall_time,
+            off.evictions) == (on.ingest_makespan, on.mean_latency,
+                               on.stall_time, on.evictions)
+    fr = [s for s in tracer.spans if s.name == "stream.frame"]
+    assert len(fr) == len(frames)
+    assert tracer.metrics.histograms["stream.frame_latency_s"].count == \
+        len(frames)
+    # each frame span decomposes into scatter / broadcast / local write
+    for sp in fr:
+        kid_names = [c.name for c in tracer.children(sp)]
+        assert "stream.scatter" in kid_names
+        assert "stream.broadcast" in kid_names
+        assert "stream.local_write" in kid_names
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def _traced_stage(n_hosts, n_files=4, size=1 << 16):
+    from repro.core.api import (BroadcastEntry, CollectiveConfig,
+                                StagingClient, StagingSpec)
+    fab, paths = make_fabric(n_hosts=n_hosts, n_files=n_files, size=size)
+    client = StagingClient(fab, trace=True)
+    rep = client.stage(StagingSpec([BroadcastEntry(tuple(paths),
+                                                   pin=False)]),
+                       CollectiveConfig(), resolve=False)
+    return client, rep
+
+
+def test_chrome_trace_schema_roundtrip_p1024():
+    client, _ = _traced_stage(1024)
+    trace = json.loads(json.dumps(to_chrome_trace(client.tracer)))
+    n = validate_chrome_trace(trace)
+    assert n == len(trace["traceEvents"]) and n > 0
+
+    events = trace["traceEvents"]
+    # ph:X complete events, ts/dur in microseconds, per-track pids
+    xs = {e["args"]["span_id"]: e for e in events if e["ph"] == "X"}
+    tracks = {e["args"]["name"]: e["pid"] for e in events
+              if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"engine", "fs", "net"} <= set(tracks)
+    spans = {s.span_id: s for s in client.tracer.spans}
+    for sid, ev in xs.items():
+        sp = spans[sid]
+        assert ev["ts"] == pytest.approx(sp.t_start * 1e6)
+        assert ev["dur"] == pytest.approx(sp.duration * 1e6)
+        assert ev["pid"] == tracks[sp.track]
+        # children are monotone within their parent's interval
+        parent = ev["args"].get("parent")
+        if parent is not None and parent in xs:
+            pev = xs[parent]
+            assert ev["ts"] >= pev["ts"] - 1e-6
+            assert ev["ts"] + ev["dur"] <= pev["ts"] + pev["dur"] + 1e-6
+
+
+def test_chrome_trace_lanes_separate_overlapping_roots():
+    tr = Tracer()
+    tr.span("a", 0.0, 2.0, track="qos")
+    tr.span("b", 1.0, 3.0, track="qos")        # overlaps a -> new lane
+    tr.span("c", 2.5, 4.0, track="qos")        # fits lane 1 again
+    trace = to_chrome_trace(tr)
+    tids = [e["tid"] for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert tids[0] != tids[1] and tids[2] == tids[0]
+
+
+def test_client_write_trace_and_flight_report(tmp_path):
+    client, rep = _traced_stage(8)
+    out = tmp_path / "trace.json"
+    client.write_trace(str(out))
+    with open(out) as f:
+        validate_chrome_trace(json.load(f))
+    text = client.flight_report()
+    assert "flight recorder" in text and "stage.collective" in text
+    assert "critical path" in text
+
+    from repro.core.api import StagingClient
+    from repro.core.fabric import Fabric
+    untraced = StagingClient(Fabric(n_hosts=2))
+    with pytest.raises(ValueError):
+        untraced.write_trace(str(out))
+    with pytest.raises(ValueError):
+        untraced.flight_report()
+
+
+def test_flight_recorder_phase_partition_is_exact():
+    client, rep = _traced_stage(8)
+    tr = client.tracer
+    r = rep.reports[0]
+    (stage_root,) = [s for s in tr.spans if s.name == "stage.collective"]
+    phases = [c for c in tr.children(stage_root)
+              if c.name.startswith("phase.")]
+    # the phase children PARTITION [t0, t0 + total_time): exact by
+    # construction, so the flight recorder's breakdown sums to the total
+    assert sum(c.duration for c in phases) == pytest.approx(
+        r.total_time, abs=1e-9)
+    assert stage_root.duration == pytest.approx(r.total_time, abs=1e-9)
+    # per-tier attribution partitions each collective's duration
+    colls = [s for s in tr.spans if s.name.startswith("collective.")]
+    assert colls
+    for c in colls:
+        tiers = [k for k in tr.children(c) if k.name.startswith("tier.")]
+        if c.duration > 0:
+            assert sum(k.duration for k in tiers) == pytest.approx(
+                c.duration, abs=1e-9)
+            assert sum(k.attrs["nbytes"] for k in tiers) == \
+                c.attrs["wire_bytes"]
+
+
+def test_fs_contention_wait_spans():
+    fab, paths = make_fabric(n_hosts=4, n_files=2)
+    tracer = fab.attach_tracer(Tracer())
+    # two overlapping reads at the same t: the second queues behind the
+    # first on the shared-FS bandwidth stream
+    fab.fs.read(paths[0], 0, 1 << 16, 0.0, coordinated=False)
+    fab.fs.read(paths[1], 0, 1 << 16, 0.0, coordinated=False)
+    waits = [s for s in tracer.spans if s.name == "fs.wait"]
+    assert len(waits) == 1
+    assert tracer.metrics.counters["fs.contention_waits"].value == 1
+    assert waits[0].duration == pytest.approx(fab.fs.wait_time)
+    reads = [s for s in tracer.spans if s.name == "fs.read"]
+    assert len(reads) == 2 and all(s.track == "fs" for s in reads)
+
+
+# ---------------------------------------------------------------------------
+# event-loop history ring buffer
+# ---------------------------------------------------------------------------
+
+def test_eventloop_history_global_cap():
+    from repro.core.events import EventLoop
+    loop = EventLoop(history_limit=10)
+    for i in range(25):
+        loop.schedule(float(i), lambda: None, key=f"k{i % 3}")
+    while loop.step():
+        pass
+    assert loop.fired == 25                  # counting is never capped
+    assert len(loop.history) == 10
+    assert loop.history_dropped == 15
+    # the ring keeps the NEWEST events, still in firing order
+    assert [ev.t for ev in loop.history] == [float(i) for i in range(15, 25)]
+
+
+def test_eventloop_history_per_key_cap():
+    from repro.core.events import EventLoop
+    loop = EventLoop(history_key_limit=2)
+    for i in range(6):
+        loop.schedule(float(i), lambda: None, key="chatty")
+    loop.schedule(6.0, lambda: None, key="quiet")
+    while loop.step():
+        pass
+    assert loop.history_dropped == 4
+    chatty = [ev.t for ev in loop.history if ev.key == "chatty"]
+    assert chatty == [4.0, 5.0]              # oldest chatty evicted first
+    assert [ev.t for ev in loop.history if ev.key == "quiet"] == [6.0]
+
+
+def test_eventloop_default_history_unbounded_in_practice():
+    from repro.core.events import EventLoop
+    loop = EventLoop()
+    assert loop.history_limit == 100_000
+    for i in range(50):
+        loop.schedule(float(i), lambda: None)
+    while loop.step():
+        pass
+    assert len(loop.history) == 50 and loop.history_dropped == 0
