@@ -1,0 +1,258 @@
+"""Cross-facility WAN ingest: pub/sub fan-out economics + jitter sweep.
+
+One synthetic acquisition (48 x 128x128 float32 frames) crosses the
+``wan_beamline`` topology's wide-area ingest tier three ways:
+
+  * **anchor** — the degenerate WAN stage (no jitter, no loss, credits
+    never bind) against the local ``stage_stream`` engine: asserted
+    byte- and time-exact per run (the regression anchor; re-checked by
+    ``run.py --wan --quick`` on CI);
+  * **fanout** — N subscriber campaigns tap ONE WAN stream vs N
+    independent WAN pulls of the same set: frames cross the WAN once,
+    so pub/sub moves 1/N of the independent-pull wire bytes (asserted
+    >= 2x cheaper at N=4);
+  * **jitter sweep** — seeded WAN brownouts + loss over a bounded
+    credit window and DAQ buffer: flow control must finish every run
+    with every frame accounted (delivered + dropped == emitted, the
+    never-wedge guarantee) and replay bit-exactly per seed.
+
+Everything is simulated seconds over real bytes. Emits
+``BENCH_wan.json`` next to this file and harness CSV rows via
+:func:`rows` (wired into ``benchmarks.run --wan``).
+
+Run directly:  PYTHONPATH=src python -m benchmarks.bench_wan
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from dataclasses import fields
+from typing import List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+Row = Tuple[str, float, str]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_wan.json")
+
+# which staging API surface this bench drives (run.py summary column)
+API_PATH = "engine (stage_wan / stage_stream)"
+
+N_HOSTS = 64
+N_FRAMES = 48
+FRAME_SIZE = 128
+FRAME_BYTES = FRAME_SIZE * FRAME_SIZE * 4
+RATE_HZ = 100.0
+FAN_NS = (1, 2, 4)
+JITTER_SEEDS = (0, 1, 2, 3, 4)
+CREDIT_WINDOW = 6
+BUFFER_FRAMES = 8
+WINDOW_FRAMES = 8
+
+
+def _fabric():
+    from repro.core.fabric import BGQ, Fabric
+    fab = Fabric(n_hosts=N_HOSTS, constants=BGQ)
+    rng = np.random.default_rng(7)
+    paths = []
+    for i in range(N_FRAMES):
+        p = f"scan/frame_{i:05d}.bin"
+        fab.fs.put(p, rng.integers(0, 255, FRAME_BYTES, dtype=np.uint8))
+        paths.append(p)
+    return fab, paths
+
+
+def bench_anchor() -> dict:
+    """Zero-jitter/zero-loss WAN stage vs local stage_stream: exact."""
+    from repro.core.streaming import stage_stream
+    from repro.core.wan import stage_wan
+    f1, paths = _fabric()
+    f2, _ = _fabric()
+    rs, ts = stage_stream(f1, paths, rate_hz=RATE_HZ)
+    rw, tw = stage_wan(f2, paths, rate_hz=RATE_HZ)
+    exact = ts == tw and all(
+        getattr(rs, f.name) == getattr(rw, f.name)
+        for f in fields(rs) if f.name != "mode")
+    for h1, h2 in zip(f1.hosts, f2.hosts):
+        exact = exact and set(h1.store.data) == set(h2.store.data) and all(
+            np.array_equal(h1.store.data[p], h2.store.data[p])
+            for p in h1.store.data)
+    assert exact, "WAN default path diverged from stage_stream"
+    return {
+        "name": "anchor_wan_vs_stream",
+        "rate_hz": RATE_HZ,
+        "n_frames": N_FRAMES,
+        "frame_bytes": FRAME_BYTES,
+        "makespan_s": tw,
+        "stream_makespan_s": ts,
+        "byte_exact": True,
+    }
+
+
+def bench_fanout() -> List[dict]:
+    """N subscribers on one stream vs N independent WAN pulls."""
+    from repro.core.wan import stage_wan
+    out = []
+    for n in FAN_NS:
+        fab, paths = _fabric()
+        rep, _ = stage_wan(fab, paths, rate_hz=RATE_HZ,
+                           topology="wan_beamline", subscribers=n,
+                           consume_hz=50.0)
+        shared = rep.tier_bytes["wan"]
+        independent = 0
+        t_indep = 0.0
+        for _ in range(n):
+            f_i, _ = _fabric()
+            r_i, t_i = stage_wan(f_i, paths, rate_hz=RATE_HZ,
+                                 topology="wan_beamline")
+            independent += r_i.tier_bytes["wan"]
+            t_indep = max(t_indep, t_i)
+        ratio = independent / shared
+        out.append({
+            "name": f"fanout_n{n}",
+            "subscribers": n,
+            "pubsub_wan_bytes": shared,
+            "independent_wan_bytes": independent,
+            "wan_bytes_ratio": ratio,
+            "pubsub_makespan_s": rep.wan.makespan,
+            "independent_makespan_s": t_indep,
+            "watermark_lag_s": rep.wan.stream.watermark_lag,
+        })
+        if n >= 2:
+            assert ratio >= 2.0, (
+                f"pub/sub fan-out must move >=2x fewer WAN bytes than "
+                f"{n} independent pulls, got {ratio:.2f}x")
+    return out
+
+
+def bench_jitter_sweep() -> List[dict]:
+    """Seeded brownouts + loss over bounded credits: never wedges."""
+    from repro.core.wan import stage_wan
+
+    def run(seed):
+        fab, paths = _fabric()
+        return stage_wan(fab, paths, rate_hz=RATE_HZ,
+                         topology="wan_beamline",
+                         window_bytes=WINDOW_FRAMES * FRAME_BYTES,
+                         credit_window=CREDIT_WINDOW,
+                         buffer_frames=BUFFER_FRAMES,
+                         subscribers=2, consume_hz=40.0,
+                         loss_rate=0.15, loss_seed=seed,
+                         jitter_seed=seed, jitter_windows=8,
+                         jitter_factors=(0.2, 0.6))
+
+    out = []
+    for seed in JITTER_SEEDS:
+        rep, t = run(seed)
+        rep2, t2 = run(seed)
+        wan = rep.wan
+        assert t == t2 and wan.makespan == rep2.wan.makespan, \
+            f"seed {seed} did not replay bit-exactly"
+        assert wan.frames_delivered + wan.frames_dropped == wan.n_frames, \
+            f"seed {seed} lost frames unaccounted"
+        out.append({
+            "name": f"jitter_seed{seed}",
+            "seed": seed,
+            "makespan_s": wan.makespan,
+            "frames_delivered": wan.frames_delivered,
+            "frames_dropped": wan.frames_dropped,
+            "retransmits": wan.retransmits,
+            "wan_bytes": wan.wan_bytes,
+            "credit_stall_s": wan.credit_stall_time,
+            "buffer_peak": wan.buffer_peak,
+            "replay_exact": True,
+        })
+    return out
+
+
+def run_benchmarks() -> dict:
+    from repro.core.fabric import BGQ
+    report = {
+        "config": {
+            "calibration": BGQ.name,
+            "api_path": API_PATH,
+            "topology": "wan_beamline",
+            "n_hosts": N_HOSTS, "n_frames": N_FRAMES,
+            "frame_bytes": FRAME_BYTES, "rate_hz": RATE_HZ,
+            "credit_window": CREDIT_WINDOW,
+            "buffer_frames": BUFFER_FRAMES,
+            "window_frames": WINDOW_FRAMES,
+        },
+        "anchor": bench_anchor(),
+        "fanout": bench_fanout(),
+        "jitter_sweep": bench_jitter_sweep(),
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def quick_check() -> None:
+    """CI smoke: the anchor must hold and fan-out must stay >=2x at N=4
+    (no JSON rewrite)."""
+    bench_anchor()
+    from repro.core.wan import stage_wan
+    fab, paths = _fabric()
+    rep, _ = stage_wan(fab, paths, rate_hz=RATE_HZ,
+                       topology="wan_beamline", subscribers=4,
+                       consume_hz=50.0)
+    shared = rep.tier_bytes["wan"]
+    assert shared == N_FRAMES * FRAME_BYTES, "frames must cross WAN once"
+    print("bench_wan quick: anchor byte-exact, "
+          f"fanout n=4 moves {4 * shared / shared:.0f}x fewer WAN bytes "
+          "than independent pulls")
+
+
+def rows(report=None, quick=False) -> List[Row]:
+    """Harness CSV rows (name, us_per_call, derived) for benchmarks.run.
+    us_per_call carries the simulated WAN makespan in µs. ``quick``
+    asserts the anchor + fan-out invariants only (no JSON rewrite)."""
+    if quick:
+        anchor = bench_anchor()
+        quick_check()
+        return [("bench_wan_anchor_quick", anchor["makespan_s"] * 1e6,
+                 "byte_exact_vs_stream=True")]
+    if report is None:
+        report = run_benchmarks()
+    out: List[Row] = [(
+        "bench_wan_anchor", report["anchor"]["makespan_s"] * 1e6,
+        "byte_exact_vs_stream=True")]
+    for r in report["fanout"]:
+        out.append((f"bench_wan_{r['name']}",
+                    r["pubsub_makespan_s"] * 1e6,
+                    f"wan_bytes_ratio={r['wan_bytes_ratio']:.2f}x"))
+    for r in report["jitter_sweep"]:
+        out.append((f"bench_wan_{r['name']}",
+                    r["makespan_s"] * 1e6,
+                    f"dropped={r['frames_dropped']}"
+                    f"/retx={r['retransmits']}"))
+    return out
+
+
+def main() -> None:
+    report = run_benchmarks()
+    a = report["anchor"]
+    print(f"{a['name']}: makespan {a['makespan_s']:.3f}s (byte- and "
+          f"time-exact vs stage_stream)")
+    for r in report["fanout"]:
+        print(f"{r['name']}: pub/sub moves {r['pubsub_wan_bytes']} B over "
+              f"the WAN vs {r['independent_wan_bytes']} B independent "
+              f"({r['wan_bytes_ratio']:.2f}x cheaper)")
+    for r in report["jitter_sweep"]:
+        print(f"{r['name']}: makespan {r['makespan_s']:.3f}s, "
+              f"{r['frames_delivered']} delivered / "
+              f"{r['frames_dropped']} dropped, "
+              f"{r['retransmits']} retransmits, "
+              f"credit stall {r['credit_stall_s']:.3f}s (replay exact)")
+    print(f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    if "--quick" in sys.argv:
+        quick_check()
+    else:
+        main()

@@ -6,9 +6,13 @@ roofline table (EXPERIMENTS.md §Roofline) is produced separately by
 staging/labeling hot-path microbenchmark by ``--staging``, the
 batch-vs-streaming turnaround comparison by ``--streaming``, and the
 multi-tenant staging-service scenario by ``--service``, the
-fault-tolerance repair-vs-restage comparison by ``--faults``, and the
-QoS-vs-FIFO concurrent-session scheduling sweep by ``--qos`` (each also
+fault-tolerance repair-vs-restage comparison by ``--faults``, the
+QoS-vs-FIFO concurrent-session scheduling sweep by ``--qos``, and the
+cross-facility WAN ingest fan-out/jitter sweep by ``--wan`` (each also
 emits its ``BENCH_*.json``; standalone: ``python -m benchmarks.bench_<name>``).
+``--wan --quick`` asserts the zero-jitter/zero-loss WAN path byte- and
+time-exact vs the local streaming engine plus the pub/sub fan-out
+invariant — the CI WAN-parity smoke.
 ``--staging --quick`` skips every wall-clock comparison and instead
 asserts the SIMULATED FLAT-topology accounting (plus the topology-plan
 costs) match the recorded ``BENCH_staging.json`` baseline exactly — the
@@ -82,6 +86,15 @@ def _headline(name: str, report: dict) -> str:
             return (f"{svc['stages']} stages/{svc['coalesced']} coalesced/"
                     f"{svc['evictions']} evictions; stage_out "
                     f"{wb['speedup']:.1f}x vs naive @P{wb['n_hosts']}")
+        if name == "BENCH_wan.json":
+            fan = report["fanout"][-1]               # largest subscriber count
+            sweep = report["jitter_sweep"]
+            dropped = sum(r["frames_dropped"] for r in sweep)
+            return (f"pub/sub {fan['wan_bytes_ratio']:.0f}x fewer WAN bytes "
+                    f"@N={fan['subscribers']}; anchor byte-exact: "
+                    f"{report['anchor']['byte_exact']}; jitter sweep "
+                    f"{len(sweep)} seeds replay-exact ({dropped} drops "
+                    f"accounted)")
         if name == "BENCH_qos.json":
             by = {(r["rate_hz"], r["policy"]): r for r in report["open_loop"]}
             rate = max(r for r, _ in by)
@@ -211,6 +224,14 @@ def main() -> None:
                   f"{' quick=sim-parity-only' if quick else ''}",
                   file=sys.stderr)
             for name, us, derived in bench_qos.rows(quick=quick):
+                print(f"{name},{us:.1f},{derived}")
+        elif "--wan" in sys.argv[1:]:
+            from benchmarks import bench_wan
+            quick = "--quick" in sys.argv[1:]
+            print(f"[bench_wan] api_path={bench_wan.API_PATH}"
+                  f"{' quick=anchor-parity-only' if quick else ''}",
+                  file=sys.stderr)
+            for name, us, derived in bench_wan.rows(quick=quick):
                 print(f"{name},{us:.1f},{derived}")
         else:
             from benchmarks import paper_figures

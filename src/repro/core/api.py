@@ -15,7 +15,8 @@ detector-streaming client hiding batch-vs-stream delivery):
 
   * **Typed engine configs** — :class:`CollectiveConfig`,
     :class:`PipelinedConfig`, :class:`NaiveConfig`,
-    :class:`ReplicatedConfig`, :class:`StreamConfig` and
+    :class:`ReplicatedConfig`, :class:`StreamConfig`,
+    :class:`WanStreamConfig` and
     :class:`ServiceConfig`: one frozen dataclass per engine, validated
     in ``__post_init__`` (no more silently-ignored ``stage_kw`` typos).
     Each carries an optional :class:`FaultConfig` — a what-if fault
@@ -66,6 +67,7 @@ from repro.core.faults import FaultEvent, FaultKind, FaultSchedule
 from repro.core.staging import (StagingReport, stage_collective, stage_naive,
                                 stage_pipelined, stage_replicated)
 from repro.core.streaming import StreamStager, stage_stream
+from repro.core.wan import stage_wan
 from repro.core.telemetry import (NULL_TRACER, Tracer,  # noqa: F401
                                   TracerLike, flight_recorder,
                                   write_chrome_trace)
@@ -302,6 +304,84 @@ class StreamConfig(EngineConfig):
 
 
 @dataclass(frozen=True)
+class WanStreamConfig(StreamConfig):
+    """Cross-facility WAN ingest (`repro.core.wan.stage_wan`): the
+    detector sits across a wide-area ingest tier (pair with
+    ``topology="wan_beamline"``), pushes only while it holds a send
+    credit, and ONE WAN stream fans out to ``subscribers`` consumer
+    campaigns (frames cross the WAN once; retention follows the slowest
+    subscriber's watermark).
+
+    On top of :class:`StreamConfig`: ``credit_window`` caps unconsumed
+    in-flight frames (``None`` derives the largest window the node cache
+    can absorb — it never binds on an unbounded cache); ``buffer_frames``
+    bounds the detector's DAQ buffer (``None`` = unbounded, no drops;
+    overflow overwrites the OLDEST frame, accounted in
+    ``report.wan.frames_dropped``); ``consume_hz`` is the per-subscriber
+    processing rate (scalar for all, a tuple per subscriber, ``None`` for
+    instant acks); ``loss_rate``/``loss_seed`` drive seeded stop-and-wait
+    retransmission on the WAN hop; ``jitter_seed``/``jitter_windows``/
+    ``jitter_window_s``/``jitter_factors`` overlay seeded transient
+    brownouts on the ingest tier
+    (`repro.core.faults.FaultSchedule.wan_jitter`), composed with any
+    ``faults`` overlay.  All defaults off: the default WAN stage is
+    byte- and time-exact vs :class:`StreamConfig` (the regression
+    anchor)."""
+    credit_window: Optional[int] = None
+    buffer_frames: Optional[int] = None
+    subscribers: int = 1
+    consume_hz: Union[None, float, Tuple[float, ...]] = None
+    loss_rate: float = 0.0
+    loss_seed: int = 0
+    jitter_seed: Optional[int] = None
+    jitter_windows: int = 0
+    jitter_window_s: Optional[float] = None
+    jitter_factors: Tuple[float, float] = (0.3, 0.9)
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if isinstance(self.consume_hz, (list, tuple)):
+            object.__setattr__(self, "consume_hz",
+                               tuple(float(r) for r in self.consume_hz))
+        object.__setattr__(self, "jitter_factors",
+                           tuple(float(f) for f in self.jitter_factors))
+        if self.credit_window is not None and self.credit_window < 1:
+            raise ValueError(
+                f"credit_window must be >= 1 in-flight frames (or None "
+                f"to derive it), got {self.credit_window}")
+        if self.buffer_frames is not None and self.buffer_frames < 1:
+            raise ValueError(
+                f"buffer_frames must be >= 1 (or None for an unbounded "
+                f"DAQ buffer), got {self.buffer_frames}")
+        if self.subscribers < 1:
+            raise ValueError(
+                f"subscribers must be >= 1 consumer campaigns, got "
+                f"{self.subscribers}")
+        if isinstance(self.consume_hz, tuple) \
+                and len(self.consume_hz) != self.subscribers:
+            raise ValueError(
+                f"consume_hz lists {len(self.consume_hz)} rates for "
+                f"{self.subscribers} subscribers")
+        if not 0.0 <= self.loss_rate < 1.0:
+            raise ValueError(
+                f"loss_rate must be in [0, 1) — a rate of 1 never "
+                f"delivers, got {self.loss_rate}")
+        if self.jitter_windows < 0:
+            raise ValueError(
+                f"jitter_windows must be >= 0, got {self.jitter_windows}")
+        jf = self.jitter_factors
+        if len(jf) != 2 or not 0.0 < jf[0] <= jf[1] <= 1.0:
+            raise ValueError(
+                f"jitter_factors must be (lo, hi) with 0 < lo <= hi <= 1 "
+                f"(0 is a partition, not jitter), got {jf}")
+        if self.jitter_window_s is not None and self.jitter_window_s <= 0:
+            raise ValueError(
+                f"jitter_window_s must be a positive brownout length in "
+                f"simulated seconds (or None to derive it), got "
+                f"{self.jitter_window_s}")
+
+
+@dataclass(frozen=True)
 class ServiceConfig:
     """Catalog-backed acquisition through a long-lived
     :class:`~repro.core.datasvc.StagingService`: datasets register in the
@@ -359,13 +439,14 @@ class EngineRegistry:
 
     @classmethod
     def default(cls) -> "EngineRegistry":
-        """A fresh registry holding the five built-in engines."""
+        """A fresh registry holding the six built-in engines."""
         reg = cls()
         reg.register("collective", CollectiveConfig, stage_collective)
         reg.register("pipelined", PipelinedConfig, stage_pipelined)
         reg.register("naive", NaiveConfig, stage_naive)
         reg.register("replicated", ReplicatedConfig, stage_replicated)
         reg.register("stream", StreamConfig, stage_stream, batch=False)
+        reg.register("wan", WanStreamConfig, stage_wan, batch=False)
         return reg
 
     def register(self, name: str, config_type: type,

@@ -439,12 +439,27 @@ class CollectivePlanner:
                               nbytes=total, n_hosts=n_hosts, time=t_done,
                               tier_bytes=bytes_)
 
-    def plan_point_to_point(self, nbytes: int) -> CollectivePlan:
+    def plan_point_to_point(self, nbytes: int,
+                            attempts: int = 1) -> CollectivePlan:
         """One off-machine message (detector NIC -> leader host) over the
-        topology's ingest tier."""
+        topology's ingest tier.
+
+        `attempts` models stop-and-wait retransmission on a lossy WAN
+        hop (`repro.core.wan`): each attempt serializes the full payload
+        plus one tier latency, so time and ingest-tier bytes both scale
+        by `attempts`.  The default of 1 keeps the plan identical to the
+        lossless path (algorithm ``"direct"``); retries are labeled
+        ``"retransmit"`` so traces and plan dumps show them.  A tier at
+        scale 0 is a partition, not loss — no number of attempts crosses
+        it, and :class:`LinkPartitionedError` propagates from `_bw`."""
+        if nbytes < 0:
+            raise ValueError(f"nbytes must be >= 0, got {nbytes}")
+        if attempts < 1:
+            raise ValueError(f"attempts must be >= 1, got {attempts}")
         tier = self.topology.ingest_tier
-        plan = CollectivePlan(op="point_to_point", algorithm="direct",
+        algo = "direct" if attempts == 1 else "retransmit"
+        plan = CollectivePlan(op="point_to_point", algorithm=algo,
                               nbytes=nbytes, n_hosts=1,
-                              time=self._xfer(tier, nbytes))
-        _add(plan.tier_bytes, tier, nbytes)
+                              time=attempts * self._xfer(tier, nbytes))
+        _add(plan.tier_bytes, tier, attempts * nbytes)
         return plan

@@ -101,6 +101,21 @@ class EventLoop:
         heapq.heappush(self._heap, (ev.sort_key(), ev))
         return ev
 
+    def schedule_after(self, delay: float, fn: Callable[[], None], *,
+                       priority: int = 0, key: Optional[str] = None
+                       ) -> Event:
+        """Schedule ``fn`` `delay` seconds after ``now`` — the natural
+        form for callbacks that compute a duration while handling the
+        current event (a consumer finishing `delay` after a frame lands,
+        a credit granted one ack later).  A negative delay is a
+        causality violation like any past-scheduling."""
+        if delay < 0:
+            raise CausalityError(
+                f"cannot schedule an event {-delay:.6f}s in the past "
+                f"(key={key!r}): the shared timeline only moves forward")
+        return self.schedule(self.now + delay, fn, priority=priority,
+                             key=key)
+
     def cancel(self, event: Event) -> None:
         """Cancel `event`; a canceled event is skipped silently."""
         event.canceled = True

@@ -462,13 +462,17 @@ class Interconnect:
         return self._execute_traced(planner.plan_repair(transfers, n_hosts),
                                     t)
 
-    def point_to_point_time(self, nbytes: int,
-                            t: Optional[float] = None) -> float:
+    def point_to_point_time(self, nbytes: int, t: Optional[float] = None,
+                            attempts: int = 1) -> float:
         """Duration (s) of one `nbytes` off-machine message (the
         detector->leader ingest hop in `repro.core.streaming`), charged
-        to the topology's ingest tier (degraded at `t` if scheduled)."""
+        to the topology's ingest tier (degraded at `t` if scheduled).
+        `attempts` > 1 replays the hop that many times — the WAN
+        retransmission model (`repro.core.wan`); time and ingest-tier
+        bytes scale together."""
         planner, _ = self._fault_state(t, 1)
-        return self._execute_traced(planner.plan_point_to_point(nbytes), t)
+        return self._execute_traced(
+            planner.plan_point_to_point(nbytes, attempts=attempts), t)
 
     # -- deprecated aliases (pre-topology names) ----------------------------
     def ring_allgather_time(self, shard_bytes: int, n_hosts: int) -> float:

@@ -179,3 +179,45 @@ class FaultSchedule:
                                      tier=tiers[i % len(tiers)],
                                      t_end=t0 + win, factor=f))
         return cls(events)
+
+    @classmethod
+    def wan_jitter(cls, seed: int, horizon: float, *, tier: str = "wan",
+                   n_windows: int = 8,
+                   factor_range: Tuple[float, float] = (0.3, 0.9),
+                   window: Optional[float] = None) -> "FaultSchedule":
+        """Seeded WAN weather: transient degradation windows on one tier.
+
+        Models the bandwidth jitter a cross-facility ingest link sees —
+        `n_windows` short brownouts with start times uniform on
+        ``(0, horizon - window)`` and factors uniform in `factor_range`,
+        all on the named `tier` (default ``"wan"``, the
+        ``wan_beamline`` ingest tier).  Window length defaults to
+        ``horizon / (2 * n_windows)`` so roughly half the horizon is
+        degraded; overlapping windows compound multiplicatively like any
+        other degradation (:meth:`tier_factor`).
+
+        Jitter is *weather*, not an outage: `factor_range` must stay
+        strictly above 0 — a zero factor is a partition
+        (`repro.core.collectives.LinkPartitionedError`) and must be
+        injected explicitly, never drawn by accident from a seed.
+        Same arguments, same timeline, always."""
+        if horizon <= 0:
+            raise ValueError(f"horizon must be > 0, got {horizon}")
+        if n_windows < 1:
+            raise ValueError(f"n_windows must be >= 1, got {n_windows}")
+        lo, hi = factor_range
+        if not 0.0 < lo <= hi <= 1.0:
+            raise ValueError(
+                "jitter factor_range must satisfy 0 < lo <= hi <= 1 "
+                f"(0 is a partition, not jitter), got {factor_range}")
+        win = horizon / (2.0 * n_windows) if window is None else window
+        if win <= 0:
+            raise ValueError(f"window must be > 0, got {win}")
+        rng = np.random.default_rng(seed)
+        events: List[FaultEvent] = []
+        for _ in range(n_windows):
+            t0 = float(rng.uniform(0.0, max(horizon - win, 0.0) or horizon))
+            f = float(rng.uniform(lo, hi))
+            events.append(FaultEvent(t0, FaultKind.LINK_DEGRADE, tier=tier,
+                                     t_end=t0 + win, factor=f))
+        return cls(events)

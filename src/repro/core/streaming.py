@@ -91,6 +91,15 @@ class StreamReport:
     net_bytes: int = 0             # interconnect traffic (scatter+broadcast)
     # interconnect bytes per topology tier (sums to net_bytes)
     tier_bytes: Dict[str, int] = field(default_factory=dict)
+    # multi-consumer pub/sub accounting (registered consumers only;
+    # empty / -1 / 0 for single-consumer streams):
+    #   consumer_lag    per-consumer mean ack lag behind t_avail (s)
+    #   watermark_frame highest frame id fully released by EVERY consumer
+    #   watermark_lag   mean extra retention the slowest consumer adds
+    #                   per fully-released frame (max ack - min ack, s)
+    consumer_lag: Dict[str, float] = field(default_factory=dict)
+    watermark_frame: int = -1
+    watermark_lag: float = 0.0
     mode: str = "stream"
 
 
@@ -192,6 +201,13 @@ class StreamStager:
         self._pinned: Dict[str, int] = {}       # path -> pin refcount
         self._consumers: set = set()            # registered shared consumers
         self._acks: Dict[str, Dict[str, float]] = {}  # path -> consumer -> t
+        self._avail: Dict[str, float] = {}      # path -> t_avail (lag base)
+        self._frame_of: Dict[str, int] = {}     # path -> frame id (watermark)
+        self._lag_sum: Dict[str, float] = {}    # consumer -> sum ack lag
+        self._lag_n: Dict[str, int] = {}        # consumer -> acked frames
+        self._watermark_frame = -1              # highest fully-released fid
+        self._watermark_extra = 0.0             # sum(max ack - min ack)
+        self._full_releases = 0                 # frames acked by everyone
         self._nic_busy = t0                     # detector link serialization
         self._bcast_busy = t0                   # broadcast ring serialization
         self._net0 = fabric.net.bytes_moved
@@ -264,12 +280,24 @@ class StreamStager:
             f"{self._resident_bytes()} B of pinned/unconsumed frames")
 
     # -- public API ---------------------------------------------------------
-    def ingest(self, path: str, data: np.ndarray, t_emit: float
-               ) -> FrameRecord:
+    def _pull_time(self, nbytes: int, t: float) -> float:
+        """Duration of THIS frame's detector->leader ingest hop, issued at
+        `t`. The seam subclasses override to put a different wire model on
+        the hop — `repro.core.wan.WanFanout` adds seeded loss/retransmits
+        here — without touching any other delivery arithmetic. The default
+        is exactly the lossless point-to-point plan."""
+        return self.fabric.net.point_to_point_time(nbytes, t=t)
+
+    def ingest(self, path: str, data: np.ndarray, t_emit: float,
+               t_offer: Optional[float] = None) -> FrameRecord:
         """Deliver one frame to every node-local store.
 
         `data` is the emitted frame (any dtype; flattened to uint8);
         `t_emit` the simulated second the detector finished producing it.
+        `t_offer` is when the frame is OFFERED to the fabric — ``None``
+        means at emission, the push model; a flow-controlled producer
+        (`repro.core.wan`) offers later, once it holds a send credit, and
+        the frame's latency is still measured from `t_emit`.
         Returns the frame's :class:`FrameRecord` (its future).
         """
         buf = np.ascontiguousarray(data).view(np.uint8).ravel()
@@ -278,7 +306,8 @@ class StreamStager:
         net = self.fabric.net
         c = self.fabric.constants
 
-        t_arrive = max(t_emit, self._nic_busy)
+        t_arrive = max(t_emit if t_offer is None else t_offer,
+                       self._nic_busy)
         t_admit = self._admit(nbytes, t_arrive)
         stalled = t_admit - t_arrive
         self.stall_time += stalled
@@ -287,8 +316,7 @@ class StreamStager:
         with net.scoped_topology(self._topology):
             # issue times feed the fault schedule: a degraded ingest tier
             # or a dead host at THIS frame's delivery slows/reroutes it
-            self._nic_busy = t_admit + net.point_to_point_time(nbytes,
-                                                               t=t_admit)
+            self._nic_busy = t_admit + self._pull_time(nbytes, t_admit)
             t_bc = max(self._nic_busy, self._bcast_busy)
             self._bcast_busy = t_bc + net.broadcast(nbytes,
                                                     self.fabric.n_hosts,
@@ -306,6 +334,8 @@ class StreamStager:
                           nbytes=nbytes, owner_host=owner, t_emit=t_emit,
                           t_avail=t_avail, stalled=stalled)
         self.records.append(rec)
+        self._avail[path] = t_avail
+        self._frame_of[path] = rec.frame_id
 
         tr = self.fabric.tracer
         if tr.enabled:
@@ -354,7 +384,25 @@ class StreamStager:
         acks = self._acks.setdefault(path, {})
         acks[consumer] = t
         if set(acks) == self._consumers:
-            self._released[path] = max(acks.values())
+            t_rel = max(acks.values())
+            self._released[path] = t_rel
+            # pub/sub accounting: per-consumer ack lag behind delivery and
+            # the retention the slowest consumer adds (watermark cost)
+            avail = self._avail.get(path)
+            if avail is not None:
+                for name, ta in acks.items():
+                    self._lag_sum[name] = (self._lag_sum.get(name, 0.0)
+                                           + (ta - avail))
+                    self._lag_n[name] = self._lag_n.get(name, 0) + 1
+                self._watermark_extra += t_rel - min(acks.values())
+                self._full_releases += 1
+                self._watermark_frame = max(self._watermark_frame,
+                                            self._frame_of.get(path, -1))
+
+    def fully_released(self, path: str) -> bool:
+        """True once `path` is evictable — released directly, or acked by
+        EVERY registered consumer (the pub/sub watermark has passed it)."""
+        return path in self._released
 
     def pin(self, path: str) -> None:
         """Exempt `path` from window eviction (it keeps counting against
@@ -393,6 +441,12 @@ class StreamStager:
         rep.degraded_deliveries = self.degraded_deliveries
         rep.net_bytes = self.fabric.net.bytes_moved - self._net0
         rep.tier_bytes = self.fabric.net.tier_delta(self._tier0)
+        rep.consumer_lag = {
+            name: self._lag_sum[name] / self._lag_n[name]
+            for name in sorted(self._lag_sum)}
+        rep.watermark_frame = self._watermark_frame
+        if self._full_releases:
+            rep.watermark_lag = self._watermark_extra / self._full_releases
         return rep
 
     def stage(self, source: DetectorSource, release_on_delivery: bool = False

@@ -552,6 +552,20 @@ def flight_recorder(tracer: Tracer) -> str:
             lines.append(f"  {tier:<12s} {dt:12.6f}s  "
                          f"{_fmt_bytes(nb):>10s}  {bw / 1e9:8.2f} GB/s")
 
+    wan_pulls = [s for s in spans if s.name == "wan.pull"]
+    if wan_pulls:
+        pull_s = sum(s.duration for s in wan_pulls)
+        retry_s = sum(s.duration for s in spans
+                      if s.name == "wan.retransmit")
+        retries = sum(s.attrs.get("retries", 0) for s in spans
+                      if s.name == "wan.retransmit")
+        credit_s = sum(s.duration for s in spans if s.name == "wan.credit")
+        drops = sum(1 for s in spans if s.name == "wan.drop")
+        lines.append("")
+        lines.append(f"WAN ingest: {len(wan_pulls)} pulls {pull_s:.6f}s, "
+                     f"retransmit {retry_s:.6f}s ({retries:g} retries), "
+                     f"credit-wait {credit_s:.6f}s, {drops} drops")
+
     fs_busy = sum(s.duration for s in spans
                   if s.track == "fs" and s.name != "fs.wait")
     fs_wait = sum(s.duration for s in spans if s.name == "fs.wait")

@@ -169,10 +169,27 @@ TPU_POD_ICI_DCN = Topology(
     inter=LinkTier("dcn", bw=12.5e9, latency=1e-5, bisection_cap=400e9),
 )
 
+#: Cross-facility beamline: the detector lives OUTSIDE the machine, across
+#: a wide-area tier (Welborn et al.'s detector -> Perlmutter push). The
+#: whole compute pod sits in one 4096-host "rack" on cluster links, so any
+#: job P <= 4096 collapses to a single rack — every delivery collective
+#: (scatter/broadcast fan-out) stays on the fast ``cluster`` tier — while
+#: the off-machine ingest hop (:attr:`Topology.ingest_tier`) crosses the
+#: ``wan`` tier: ~10 Gb/s, 25 ms RTT-class latency, bisection-capped at
+#: the link rate (one far-away pipe, not a fat fabric). WAN weather
+#: (seeded jitter, brownouts) rides `repro.core.faults.FaultSchedule.
+#: wan_jitter` windows scaling this tier (`repro.core.wan`).
+WAN_BEAMLINE = Topology(
+    name="wan_beamline",
+    hosts_per_rack=4096,
+    intra=LinkTier("cluster", bw=2e9, latency=2.5e-6),
+    inter=LinkTier("wan", bw=1.25e9, latency=25e-3, bisection_cap=1.25e9),
+)
+
 #: Name -> canned :class:`Topology` — what :class:`TopologyConfig`
 #: resolves against. Custom machines register here once.
 TOPOLOGIES: Dict[str, Topology] = {
-    t.name: t for t in (FLAT, BGQ_TORUS, TPU_POD_ICI_DCN)
+    t.name: t for t in (FLAT, BGQ_TORUS, TPU_POD_ICI_DCN, WAN_BEAMLINE)
 }
 
 

@@ -145,7 +145,7 @@ def test_as_spec_normalizes_patterns():
 
 def test_registry_holds_builtin_engines():
     assert ENGINES.names() == ["collective", "naive", "pipelined",
-                           "replicated", "stream"]
+                           "replicated", "stream", "wan"]
     assert ENGINES.names(batch_only=True) == ["collective", "naive",
                                               "pipelined", "replicated"]
     assert ENGINES.name_of(PipelinedConfig()) == "pipelined"

@@ -1,0 +1,447 @@
+"""Cross-facility WAN ingest (`repro.core.wan`): parity anchor,
+determinism, credit flow control, pub/sub fan-out, loss/jitter models."""
+import json
+from dataclasses import fields
+
+import numpy as np
+import pytest
+
+from conftest import make_fabric
+
+from repro.core.api import (ENGINES, BroadcastEntry, ServiceConfig,
+                            StagingClient, StagingSpec, StreamConfig,
+                            WanStreamConfig)
+from repro.core.collectives import CollectivePlanner, LinkPartitionedError
+from repro.core.events import CausalityError, EventLoop
+from repro.core.fabric import BGQ, Fabric
+from repro.core.faults import FaultEvent, FaultKind, FaultSchedule
+from repro.core.streaming import DetectorSource, stage_stream
+from repro.core.telemetry import Tracer, flight_recorder
+from repro.core.topology import (TOPOLOGIES, WAN_BEAMLINE, LinkTier,
+                                 Topology, resolve_topology)
+from repro.core.wan import WanFanout, WanSession, stage_wan
+
+FRAME = 1 << 12
+
+
+def wan_fabric(n_files=6, n_hosts=8, **kw):
+    kw.setdefault("size", FRAME)
+    return make_fabric(n_hosts=n_hosts, n_files=n_files, **kw)
+
+
+def assert_reports_equal(a, b, ignore=("mode",)):
+    for f in fields(a):
+        if f.name in ignore:
+            continue
+        assert getattr(a, f.name) == getattr(b, f.name), \
+            f"{f.name}: {getattr(a, f.name)!r} != {getattr(b, f.name)!r}"
+
+
+def assert_stores_equal(f1, f2, pins=True):
+    for h1, h2 in zip(f1.hosts, f2.hosts):
+        assert set(h1.store.data) == set(h2.store.data)
+        for p in h1.store.data:
+            assert np.array_equal(h1.store.data[p], h2.store.data[p])
+        if pins:
+            assert set(h1.store.pinned) == set(h2.store.pinned)
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+def test_wan_beamline_registered_with_wan_ingest_tier():
+    assert "wan_beamline" in TOPOLOGIES
+    topo = resolve_topology("wan_beamline")
+    assert topo is WAN_BEAMLINE
+    assert topo.ingest_tier.name == "wan"
+    # the whole pod is one rack: delivery collectives stay on the
+    # cluster tier, only the ingest hop crosses the WAN
+    assert topo.hosts_per_rack >= 4096
+    assert topo.inter.latency > topo.intra.latency
+    assert topo.inter.bw < topo.intra.bw
+
+
+def test_wan_ingest_hop_pays_wan_latency():
+    fab, paths = wan_fabric()
+    rep, _ = stage_wan(fab, paths, topology="wan_beamline")
+    planner = CollectivePlanner(WAN_BEAMLINE, fab.constants)
+    one_hop = planner.plan_point_to_point(FRAME).time
+    assert one_hop > 25e-3                         # latency-dominated
+    assert rep.wan.wan_time == pytest.approx(len(paths) * one_hop)
+    assert rep.tier_bytes["wan"] == rep.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# the regression anchor: defaults are bit-exact vs stage_stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rate_hz", [None, 20.0])
+def test_wan_defaults_byte_and_time_exact_vs_stage_stream(rate_hz):
+    f1, paths = wan_fabric()
+    f2, _ = wan_fabric()
+    rs, ts = stage_stream(f1, paths, rate_hz=rate_hz)
+    rw, tw = stage_wan(f2, paths, rate_hz=rate_hz)
+    assert ts == tw
+    assert_reports_equal(rs, rw)
+    assert rw.mode == "wan" and rw.fs_bytes == 0
+    assert_stores_equal(f1, f2, pins=False)
+    # the WAN side confirms nothing was dropped, stalled or retried
+    assert rw.wan.frames_dropped == 0
+    assert rw.wan.retransmits == 0
+    assert rw.wan.credit_stall_time == 0.0
+
+
+def test_wan_client_path_parity_including_pins():
+    f1, paths = wan_fabric()
+    f2, _ = wan_fabric()
+    spec = StagingSpec([BroadcastEntry(["d/*.bin"], pin=True)])
+    r1 = StagingClient(f1).stage(spec, StreamConfig(rate_hz=20.0))
+    r2 = StagingClient(f2).stage(spec, WanStreamConfig(rate_hz=20.0))
+    assert r1.total_time == r2.total_time
+    assert r2.engine == "wan"
+    assert_stores_equal(f1, f2)
+
+
+def test_wan_traced_run_matches_untraced_accounting():
+    f1, paths = wan_fabric()
+    f2, _ = wan_fabric()
+    kw = dict(topology="wan_beamline", subscribers=2, consume_hz=10.0,
+              loss_rate=0.3, loss_seed=3, jitter_seed=5, jitter_windows=4)
+    r1, t1 = stage_wan(f1, paths, rate_hz=50.0, **kw)
+    tracer = f2.attach_tracer(Tracer())
+    r2, t2 = stage_wan(f2, paths, rate_hz=50.0, **kw)
+    assert t1 == t2
+    assert_reports_equal(r1, r2)
+    names = {s.name for s in tracer.spans}
+    assert "wan.pull" in names and "stage.wan" in names
+    if r2.wan.retransmits:
+        assert "wan.retransmit" in names
+    assert "WAN" in flight_recorder(tracer)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def run_noisy(seed_pair=(7, 11)):
+    fab, paths = wan_fabric()
+    rep, t = stage_wan(fab, paths, rate_hz=50.0, topology="wan_beamline",
+                       window_bytes=3 * FRAME, credit_window=3,
+                       buffer_frames=4, subscribers=2, consume_hz=5.0,
+                       loss_rate=0.25, loss_seed=seed_pair[0],
+                       jitter_seed=seed_pair[1], jitter_windows=6)
+    return rep, t
+
+
+def test_seeded_wan_replays_bit_exactly():
+    (r1, t1), (r2, t2) = run_noisy(), run_noisy()
+    assert t1 == t2
+    assert_reports_equal(r1, r2)
+    for f in fields(r1.wan):
+        if f.name == "stream":
+            continue
+        assert getattr(r1.wan, f.name) == getattr(r2.wan, f.name), f.name
+    assert_reports_equal(r1.wan.stream, r2.wan.stream, ignore=())
+
+
+def test_seeded_jitter_schedule_replays_bit_exactly():
+    s1 = FaultSchedule.wan_jitter(42, 10.0, n_windows=5)
+    s2 = FaultSchedule.wan_jitter(42, 10.0, n_windows=5)
+    assert s1.events == s2.events
+    assert len(s1.events) == 5
+    for ev in s1.events:
+        assert ev.kind is FaultKind.LINK_DEGRADE and ev.tier == "wan"
+        assert 0.3 <= ev.factor <= 0.9
+    assert FaultSchedule.wan_jitter(43, 10.0, n_windows=5).events != s1.events
+
+
+def test_wan_jitter_rejects_partition_factors_and_bad_shapes():
+    with pytest.raises(ValueError, match="partition"):
+        FaultSchedule.wan_jitter(0, 10.0, factor_range=(0.0, 0.5))
+    with pytest.raises(ValueError, match="horizon"):
+        FaultSchedule.wan_jitter(0, 0.0)
+    with pytest.raises(ValueError, match="n_windows"):
+        FaultSchedule.wan_jitter(0, 10.0, n_windows=0)
+
+
+def test_jitter_slows_delivery_but_moves_no_extra_bytes():
+    fab, paths = wan_fabric(n_files=4, size=1 << 20)
+    clean, _ = stage_wan(fab, paths, topology="wan_beamline")
+    fab2, _ = wan_fabric(n_files=4, size=1 << 20)
+    noisy, _ = stage_wan(fab2, paths, topology="wan_beamline",
+                         jitter_seed=1, jitter_windows=16,
+                         jitter_window_s=1.0, jitter_factors=(0.2, 0.5))
+    assert noisy.wan.makespan > clean.wan.makespan
+    assert noisy.tier_bytes["wan"] == clean.tier_bytes["wan"]
+
+
+def test_jitter_composes_with_fabric_fault_schedule():
+    fab, paths = wan_fabric()
+    # a brownout the fabric already carries must not be REPLACED by the
+    # jitter overlay: with both active the stage is slower than with
+    # jitter alone
+    fab.faults = FaultSchedule([FaultEvent(
+        0.0, FaultKind.LINK_DEGRADE, tier="wan", t_end=999.0, factor=0.1)])
+    both, _ = stage_wan(fab, paths, topology="wan_beamline",
+                        jitter_seed=1, jitter_windows=4)
+    fab2, _ = wan_fabric()
+    jitter_only, _ = stage_wan(fab2, paths, topology="wan_beamline",
+                               jitter_seed=1, jitter_windows=4)
+    assert both.wan.makespan > jitter_only.wan.makespan
+
+
+# ---------------------------------------------------------------------------
+# pull-based credit flow control
+# ---------------------------------------------------------------------------
+
+def test_credit_window_stalls_producer_without_dropping():
+    fab, paths = wan_fabric()
+    rep, _ = stage_wan(fab, paths, rate_hz=200.0, topology="wan_beamline",
+                       window_bytes=3 * FRAME, credit_window=2,
+                       subscribers=1, consume_hz=4.0)
+    wan = rep.wan
+    assert wan.frames_delivered == len(paths)
+    assert wan.frames_dropped == 0               # unbounded DAQ buffer
+    assert wan.credit_stall_time > 0.0           # credits did bind
+    assert wan.credits_granted == len(paths)
+    assert wan.buffer_peak > 1
+
+
+def test_bounded_buffer_drops_oldest_and_accounts_every_frame():
+    fab, paths = wan_fabric(n_files=12)
+    rep, _ = stage_wan(fab, paths, rate_hz=500.0, topology="wan_beamline",
+                       window_bytes=3 * FRAME, credit_window=2,
+                       buffer_frames=2, subscribers=1, consume_hz=2.0)
+    wan = rep.wan
+    assert wan.frames_dropped > 0
+    assert wan.frames_delivered + wan.frames_dropped == wan.n_frames
+    assert rep.n_chunks == wan.frames_delivered
+    assert rep.total_bytes == wan.frames_delivered * FRAME
+    # drop-oldest: the LAST frame always survives (freshest data wins)
+    fab_hosts = fab.hosts
+    assert paths[-1] in fab_hosts[0].store.data
+
+
+def test_flow_control_never_wedges_under_jitter_sweep():
+    for seed in range(5):
+        fab, paths = wan_fabric(n_files=10)
+        rep, _ = stage_wan(fab, paths, rate_hz=300.0,
+                           topology="wan_beamline",
+                           window_bytes=4 * FRAME, credit_window=3,
+                           buffer_frames=4, subscribers=2, consume_hz=8.0,
+                           loss_rate=0.2, loss_seed=seed,
+                           jitter_seed=seed, jitter_windows=6,
+                           jitter_factors=(0.2, 0.6))
+        wan = rep.wan
+        assert wan.frames_delivered + wan.frames_dropped == wan.n_frames
+        assert wan.frames_delivered > 0
+
+
+def test_credit_window_validated_against_node_window():
+    fab, paths = wan_fabric()
+    with pytest.raises(ValueError, match="credit_window"):
+        stage_wan(fab, paths, window_bytes=2 * FRAME, credit_window=8)
+
+
+def test_wedge_guard_counts_pinned_bytes():
+    fab, paths = wan_fabric()
+    with pytest.raises(ValueError, match="pinned"):
+        stage_wan(fab, paths, window_bytes=3 * FRAME, credit_window=2,
+                  pin_paths=paths[:2])
+
+
+# ---------------------------------------------------------------------------
+# pub/sub fan-out + watermark retention
+# ---------------------------------------------------------------------------
+
+def test_fanout_crosses_wan_once_regardless_of_subscribers():
+    per_n = {}
+    for n in (1, 2, 4):
+        fab, paths = wan_fabric()
+        rep, _ = stage_wan(fab, paths, topology="wan_beamline",
+                           subscribers=n, consume_hz=50.0)
+        per_n[n] = rep.tier_bytes["wan"]
+    assert per_n[1] == per_n[2] == per_n[4] == len(paths) * FRAME
+
+
+def test_slowest_subscriber_governs_watermark_and_lag():
+    fab, paths = wan_fabric(n_files=8)
+    rep, _ = stage_wan(fab, paths, rate_hz=100.0, topology="wan_beamline",
+                       window_bytes=3 * FRAME, credit_window=2,
+                       subscribers=["fast", "slow"],
+                       consume_hz=(100.0, 2.0))
+    srep = rep.wan.stream
+    assert srep.consumer_lag["slow"] > srep.consumer_lag["fast"]
+    assert srep.watermark_lag > 0.0          # slow consumer held frames
+    assert srep.watermark_frame == len(paths) - 1   # all fully released
+    # the slow subscriber's acks gate the credits: stalls reflect it
+    assert rep.wan.credit_stall_time > 0.0
+
+
+def test_single_consumer_stream_report_defaults_stay_empty():
+    fab, paths = wan_fabric()
+    rep, _ = stage_stream(fab, paths)
+    assert rep is not None
+    fab2, paths2 = wan_fabric()
+    from repro.core.streaming import StreamStager
+    stager = StreamStager(fab2, window_bytes=len(paths2) * FRAME)
+    for _, p, buf, t in DetectorSource.replay_fs(fab2, paths2):
+        stager.ingest(p, buf, t)
+    srep = stager.finish()
+    assert srep.consumer_lag == {}
+    assert srep.watermark_frame == -1
+    assert srep.watermark_lag == 0.0
+
+
+# ---------------------------------------------------------------------------
+# loss / retransmission
+# ---------------------------------------------------------------------------
+
+def test_seeded_loss_retransmits_cost_time_and_wan_bytes():
+    fab, paths = wan_fabric(n_files=12)
+    clean, _ = stage_wan(fab, paths, topology="wan_beamline")
+    fab2, _ = wan_fabric(n_files=12)
+    lossy, _ = stage_wan(fab2, paths, topology="wan_beamline",
+                         loss_rate=0.5, loss_seed=0)
+    assert lossy.wan.retransmits > 0
+    assert lossy.wan.wan_bytes == (
+        clean.wan.wan_bytes + lossy.wan.retransmits * FRAME)
+    assert lossy.tier_bytes["wan"] == lossy.wan.wan_bytes
+    assert lossy.wan.wan_time > clean.wan.wan_time
+    # the local fan-out still delivers every frame byte-exactly
+    assert lossy.n_chunks == len(paths)
+
+
+def test_zero_loss_draws_nothing_from_the_rng():
+    fab, _ = wan_fabric()
+    stager = WanFanout(fab, window_bytes=1 << 20, loss_rate=0.0,
+                       loss_seed=123)
+    state0 = stager._loss_rng.bit_generator.state
+    stager._pull_time(FRAME, 0.0)
+    assert stager._loss_rng.bit_generator.state == state0
+
+
+def test_wan_fanout_rejects_certain_loss():
+    fab, _ = wan_fabric()
+    with pytest.raises(ValueError, match="loss_rate"):
+        WanFanout(fab, window_bytes=1 << 20, loss_rate=1.0)
+
+
+# ---------------------------------------------------------------------------
+# point-to-point plans under degradation (satellite: partition coverage)
+# ---------------------------------------------------------------------------
+
+def test_point_to_point_partitioned_at_tier_factor_zero():
+    dead = Topology(name="dead", hosts_per_rack=8,
+                    intra=LinkTier("optical", bw=1e9, latency=1e-6,
+                                   scale=0.0))
+    planner = CollectivePlanner(dead, BGQ)
+    with pytest.raises(LinkPartitionedError, match="partitioned"):
+        planner.plan_point_to_point(FRAME)
+
+
+def test_point_to_point_partitioned_via_degraded_and_fault_schedule():
+    with pytest.raises(LinkPartitionedError):
+        CollectivePlanner(WAN_BEAMLINE.degraded({"wan": 0.0}),
+                          BGQ).plan_point_to_point(FRAME)
+    fab, paths = wan_fabric(topology="wan_beamline")
+    fab.faults = FaultSchedule([FaultEvent(
+        0.0, FaultKind.LINK_DEGRADE, tier="wan", t_end=99.0, factor=0.0)])
+    with pytest.raises(LinkPartitionedError):
+        fab.net.point_to_point_time(FRAME, t=1.0)
+    with pytest.raises(LinkPartitionedError):
+        stage_wan(fab, paths, topology="wan_beamline")
+
+
+def test_point_to_point_attempts_scale_time_and_bytes():
+    planner = CollectivePlanner(WAN_BEAMLINE, BGQ)
+    one = planner.plan_point_to_point(FRAME)
+    three = planner.plan_point_to_point(FRAME, attempts=3)
+    assert one.algorithm == "direct"
+    assert three.algorithm == "retransmit"
+    assert three.time == pytest.approx(3 * one.time)
+    assert three.tier_bytes["wan"] == 3 * one.tier_bytes["wan"]
+    with pytest.raises(ValueError, match="attempts"):
+        planner.plan_point_to_point(FRAME, attempts=0)
+    with pytest.raises(ValueError, match="nbytes"):
+        planner.plan_point_to_point(-1)
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+
+def test_wan_config_registered_and_distinct_from_stream():
+    assert "wan" in ENGINES
+    assert ENGINES.name_of(WanStreamConfig()) == "wan"
+    assert ENGINES.name_of(StreamConfig()) == "stream"
+    assert not ENGINES.entry("wan").batch
+
+
+def test_wan_config_validation():
+    with pytest.raises(ValueError, match="subscribers"):
+        WanStreamConfig(subscribers=0)
+    with pytest.raises(ValueError, match="loss_rate"):
+        WanStreamConfig(loss_rate=1.0)
+    with pytest.raises(ValueError, match="credit_window"):
+        WanStreamConfig(credit_window=0)
+    with pytest.raises(ValueError, match="buffer_frames"):
+        WanStreamConfig(buffer_frames=0)
+    with pytest.raises(ValueError, match="consume_hz"):
+        WanStreamConfig(subscribers=2, consume_hz=(1.0,))
+    with pytest.raises(ValueError, match="jitter_factors"):
+        WanStreamConfig(jitter_factors=(0.0, 0.5))
+    with pytest.raises(ValueError, match="jitter_window_s"):
+        WanStreamConfig(jitter_window_s=0.0)
+    cfg = WanStreamConfig(subscribers=2, consume_hz=[4.0, 2.0],
+                          jitter_factors=[0.4, 0.8])
+    assert cfg.consume_hz == (4.0, 2.0)
+    assert cfg.jitter_factors == (0.4, 0.8)
+
+
+def test_wan_spec_json_round_trip():
+    spec = StagingSpec([BroadcastEntry(["d/*.bin"], pin=True)],
+                       config=WanStreamConfig(
+                           topology="wan_beamline", subscribers=3,
+                           consume_hz=(8.0, 4.0, 2.0), credit_window=4,
+                           loss_rate=0.1, jitter_seed=9,
+                           jitter_windows=5))
+    again = StagingSpec.from_json(spec.to_json())
+    assert again.config == spec.config
+    assert isinstance(again.config, WanStreamConfig)
+    parsed = json.loads(spec.to_json())
+    assert parsed["engine"]["name"] == "wan"
+
+
+def test_service_config_rejects_wan_engine():
+    with pytest.raises(ValueError, match="batch"):
+        ServiceConfig(budget_bytes=1 << 20, engine=WanStreamConfig())
+
+
+# ---------------------------------------------------------------------------
+# event-loop surface grown for the session
+# ---------------------------------------------------------------------------
+
+def test_schedule_after_fires_relative_to_now():
+    loop = EventLoop(t0=5.0)
+    seen = []
+    loop.schedule_after(1.0, lambda: seen.append(loop.now))
+    loop.run()
+    assert seen == [6.0]
+    with pytest.raises(CausalityError):
+        loop.schedule_after(-0.1, lambda: None)
+
+
+def test_wan_session_runs_on_a_shared_event_loop():
+    fab, paths = wan_fabric()
+    loop = EventLoop(t0=0.0)
+    src = DetectorSource.replay_fs(fab, paths, rate_hz=20.0)
+    session = WanSession(fab, src, subscribers=2, consume_hz=10.0,
+                         topology="wan_beamline", loop=loop)
+    rep = session.run()
+    assert rep.frames_delivered == len(paths)
+    assert loop.now == rep.drain_makespan
+    keys = {ev.key for ev in loop.history}
+    assert "wan.detector" in keys
+    assert "wan.sub.sub0" in keys and "wan.sub.sub1" in keys
