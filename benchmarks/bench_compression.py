@@ -1,0 +1,330 @@
+"""Compression-aware tiered staging: codec crossover + WAN wire wins.
+
+Four studies over the `repro.core.compression` codec model and the
+planner's per-tier compress-at-source election:
+
+  * **anchor** — the identity codec (``"none"``) against the plain
+    uncompressed path on every staging engine family: asserted byte- and
+    time-exact per run (the regression anchor; ``run.py --compression
+    --quick`` re-checks it against the recorded JSON on CI);
+  * **crossover sweep** — raw-vs-compressed as a function of codec
+    compress throughput and tier bandwidth at P = 1024/4096/8192: each
+    cell records which side the planner elected and asserts it matches
+    the closed-form inequality  n/Cc + n/Cd + (n/r)/bw < n/bw;
+  * **hierarchical compounding** — ``frame-fast`` on the ``bgq_torus``
+    machine elects BOTH the torus and optical tiers, so the win
+    compounds through the hierarchical broadcast at scale;
+  * **WAN ingest headline** — ``frame-lossless`` on ``wan_beamline``
+    under seeded loss: every (re)transmission ships the compressed
+    frame, asserted >= 2x wire-byte reduction on the wan tier (the
+    codec's 3.2x ratio, exactly, since election is all-or-nothing per
+    tier).
+
+Everything is simulated seconds over real bytes. Emits
+``BENCH_compression.json`` (with an embedded telemetry metrics
+snapshot) next to this file and harness CSV rows via :func:`rows`
+(wired into ``benchmarks.run --compression``).
+
+Run directly:  PYTHONPATH=src python -m benchmarks.bench_compression
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from dataclasses import fields, replace
+from typing import List, Tuple
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+Row = Tuple[str, float, str]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "BENCH_compression.json")
+
+# which staging API surface this bench drives (run.py summary column)
+API_PATH = "planner codec election (CollectivePlanner / stage_wan)"
+
+N_HOSTS = 64
+N_FRAMES = 48
+FRAME_SIZE = 128
+FRAME_BYTES = FRAME_SIZE * FRAME_SIZE * 4
+RATE_HZ = 100.0
+LOSS_RATE = 0.15
+LOSS_SEED = 7
+PAYLOAD = 8 << 20                       # crossover-sweep payload
+SWEEP_P = (1024, 4096, 8192)
+SWEEP_CODEC_BW = (0.5e9, 1e9, 2e9, 4e9, 8e9, 16e9)
+SWEEP_TIER_BW = (1.25e9, 2e9, 12.5e9, 50e9)
+
+
+def _fabric(topology=None):
+    from repro.core.fabric import BGQ, Fabric
+    fab = Fabric(n_hosts=N_HOSTS, constants=BGQ, topology=topology)
+    rng = np.random.default_rng(7)
+    paths = []
+    for i in range(N_FRAMES):
+        p = f"scan/frame_{i:05d}.bin"
+        fab.fs.put(p, rng.integers(0, 255, FRAME_BYTES, dtype=np.uint8))
+        paths.append(p)
+    return fab, paths
+
+
+def bench_anchor() -> dict:
+    """Identity codec vs plain path on every engine family: exact."""
+    from repro.core.api import (CollectiveConfig, NaiveConfig,
+                                PipelinedConfig, ReplicatedConfig,
+                                StagingClient, StreamConfig,
+                                WanStreamConfig)
+    configs = [
+        CollectiveConfig(topology="wan_beamline"),
+        PipelinedConfig(topology="wan_beamline"),
+        NaiveConfig(topology="wan_beamline"),
+        ReplicatedConfig(topology="wan_beamline", replication=2),
+        StreamConfig(topology="wan_beamline", rate_hz=RATE_HZ),
+        WanStreamConfig(topology="wan_beamline", rate_hz=RATE_HZ,
+                        loss_rate=LOSS_RATE, loss_seed=LOSS_SEED),
+    ]
+    makespans = {}
+    for cfg in configs:
+        f1, _ = _fabric("wan_beamline")
+        f2, _ = _fabric("wan_beamline")
+        r1 = StagingClient(f1).stage("scan/*.bin", cfg)
+        r2 = StagingClient(f2).stage("scan/*.bin",
+                                     replace(cfg, compression="none"))
+        exact = r1.total_time == r2.total_time and all(
+            getattr(r1.reports[0], f.name) == getattr(r2.reports[0], f.name)
+            for f in fields(r1.reports[0]))
+        for h1, h2 in zip(f1.hosts, f2.hosts):
+            exact = exact and set(h1.store.data) == set(h2.store.data) \
+                and all(np.array_equal(h1.store.data[p], h2.store.data[p])
+                        for p in h1.store.data)
+        assert exact, (f"identity codec diverged from the uncompressed "
+                       f"path on {type(cfg).__name__}")
+        makespans[r1.engine] = r1.total_time
+    return {
+        "name": "anchor_identity_codec",
+        "engines": sorted(makespans),
+        "makespan_s": makespans,
+        "byte_exact": True,
+    }
+
+
+def bench_crossover() -> List[dict]:
+    """Raw-vs-compressed crossover vs codec throughput x tier bandwidth."""
+    from repro.core.collectives import CollectivePlanner
+    from repro.core.compression import CODECS
+    from repro.core.fabric import BGQ
+    from repro.core.topology import resolve_topology
+    base = CODECS["frame-lossless"]
+    flat = resolve_topology("flat")
+    out = []
+    for P in SWEEP_P:
+        for tier_bw in SWEEP_TIER_BW:
+            topo = replace(flat, intra=replace(flat.intra, bw=tier_bw))
+            pl = CollectivePlanner(topo, BGQ)
+            raw = pl.plan_broadcast(PAYLOAD, P)
+            for cbw in SWEEP_CODEC_BW:
+                codec = replace(base, compress_bw=cbw,
+                                decompress_bw=2 * cbw)
+                w = codec.compressed_size(PAYLOAD)
+                expect = (PAYLOAD / cbw + PAYLOAD / (2 * cbw)
+                          + w / tier_bw < PAYLOAD / tier_bw)
+                plan = pl.plan_broadcast(PAYLOAD, P, codec=codec)
+                elected = bool(plan.compressed_tiers)
+                assert elected == expect, (
+                    f"planner election diverged from the closed form at "
+                    f"P={P} tier_bw={tier_bw:g} codec_bw={cbw:g}")
+                out.append({
+                    "n_hosts": P,
+                    "tier_bw_gbs": tier_bw / 1e9,
+                    "codec_bw_gbs": cbw / 1e9,
+                    "compressed": elected,
+                    "raw_time_s": raw.time,
+                    "time_s": plan.time,
+                    "wire_bytes": plan.total_bytes,
+                    "payload_bytes": plan.payload_bytes,
+                    "speedup": raw.time / plan.time if plan.time else 1.0,
+                })
+    return out
+
+
+def bench_hierarchical() -> List[dict]:
+    """frame-fast on bgq_torus: the win compounds across both tiers."""
+    from repro.core.collectives import CollectivePlanner
+    from repro.core.compression import CODECS
+    from repro.core.fabric import BGQ
+    from repro.core.topology import resolve_topology
+    pl = CollectivePlanner(resolve_topology("bgq_torus"), BGQ)
+    codec = CODECS["frame-fast"]
+    out = []
+    for P in SWEEP_P:
+        raw = pl.plan_broadcast(PAYLOAD, P)
+        cmp_ = pl.plan_broadcast(PAYLOAD, P, codec=codec)
+        assert set(cmp_.compressed_tiers) == set(cmp_.tier_bytes), \
+            "frame-fast must elect every bgq_torus tier it touches"
+        assert cmp_.time < raw.time
+        out.append({
+            "name": f"hierarchical_p{P}",
+            "n_hosts": P,
+            "algorithm": cmp_.algorithm,
+            "compressed_tiers": list(cmp_.compressed_tiers),
+            "raw_time_s": raw.time,
+            "compressed_time_s": cmp_.time,
+            "speedup": raw.time / cmp_.time,
+            "raw_wire_bytes": raw.total_bytes,
+            "compressed_wire_bytes": cmp_.total_bytes,
+            "bytes_saved": cmp_.bytes_saved,
+        })
+    return out
+
+
+def bench_wan_headline() -> dict:
+    """frame-lossless compress-at-source on the lossy WAN ingest tier."""
+    from repro.core.api import StagingClient, WanStreamConfig
+    from repro.core.telemetry import Tracer
+
+    def run(compression, trace=False):
+        fab, _ = _fabric("wan_beamline")
+        client = StagingClient(fab, trace=trace)
+        rep = client.stage("scan/*.bin", WanStreamConfig(
+            topology="wan_beamline", rate_hz=RATE_HZ,
+            loss_rate=LOSS_RATE, loss_seed=LOSS_SEED,
+            compression=compression))
+        return rep, fab
+
+    raw, _ = run(None)
+    cmp_, fab = run("frame-lossless", trace=True)
+    rw, cw = raw.reports[0], cmp_.reports[0]
+    metrics = fab.tracer.metrics.snapshot()
+    ratio = rw.wan.wan_bytes / cw.wan.wan_bytes
+    assert ratio >= 2.0, (
+        f"the default detector-frame codec must cut WAN wire bytes "
+        f">= 2x, got {ratio:.2f}x")
+    assert cmp_.delivered_bytes == raw.delivered_bytes, \
+        "compression must never change the delivered payload"
+    assert cmp_.payload_net_bytes == raw.net_bytes, \
+        "wire + saved bytes must reconcile with the raw wire"
+    snap = metrics["counters"]
+    return {
+        "name": "wan_headline_frame_lossless",
+        "metrics": metrics,
+        "codec": "frame-lossless",
+        "loss_rate": LOSS_RATE,
+        "retransmits": cw.wan.retransmits,
+        "raw_wan_bytes": rw.wan.wan_bytes,
+        "compressed_wan_bytes": cw.wan.wan_bytes,
+        "wan_bytes_ratio": ratio,
+        "raw_makespan_s": raw.total_time,
+        "compressed_makespan_s": cmp_.total_time,
+        "bytes_saved": cmp_.bytes_saved,
+        "codec_time_s": cmp_.comp.codec_time,
+        "compression_metrics": {
+            k: v for k, v in sorted(snap.items())
+            if k.startswith("comp.")},
+    }
+
+
+def run_benchmarks() -> dict:
+    from repro.core.fabric import BGQ
+    report = {
+        "config": {
+            "calibration": BGQ.name,
+            "api_path": API_PATH,
+            "n_hosts": N_HOSTS, "n_frames": N_FRAMES,
+            "frame_bytes": FRAME_BYTES, "rate_hz": RATE_HZ,
+            "sweep_payload_bytes": PAYLOAD,
+            "sweep_n_hosts": list(SWEEP_P),
+            "loss_rate": LOSS_RATE, "loss_seed": LOSS_SEED,
+        },
+        "anchor": bench_anchor(),
+        "crossover": bench_crossover(),
+        "hierarchical": bench_hierarchical(),
+        "wan_headline": bench_wan_headline(),
+    }
+    # surface the traced headline run's telemetry (comp.* counters +
+    # span histograms) at the top level, the BENCH_*.json convention
+    report["metrics"] = report["wan_headline"].pop("metrics")
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def quick_check() -> None:
+    """CI smoke: recompute the identity-codec anchor and compare it
+    against the recorded JSON, then re-assert the WAN >= 2x headline
+    (no JSON rewrite)."""
+    anchor = bench_anchor()
+    if os.path.exists(JSON_PATH):
+        with open(JSON_PATH) as f:
+            recorded = json.load(f)["anchor"]
+        assert recorded["makespan_s"] == anchor["makespan_s"], (
+            "identity-codec anchor drifted from the recorded "
+            "BENCH_compression.json — staging arithmetic changed; re-run "
+            "benchmarks/run.py --compression to refresh the baseline")
+    headline = bench_wan_headline()
+    print("bench_compression quick: identity anchor exact on "
+          f"{len(anchor['engines'])} engines, WAN wire reduction "
+          f"{headline['wan_bytes_ratio']:.2f}x")
+
+
+def rows(report=None, quick=False) -> List[Row]:
+    """Harness CSV rows (name, us_per_call, derived) for benchmarks.run.
+    us_per_call carries the simulated makespan/plan time in µs.
+    ``quick`` re-checks the anchor against the recorded JSON only."""
+    if quick:
+        quick_check()
+        return [("bench_compression_anchor_quick", 0.0,
+                 "identity_codec_exact=True")]
+    if report is None:
+        report = run_benchmarks()
+    wan = report["wan_headline"]
+    out: List[Row] = [
+        ("bench_compression_anchor",
+         report["anchor"]["makespan_s"]["wan"] * 1e6,
+         "identity_codec_exact=True"),
+        ("bench_compression_wan_headline",
+         wan["compressed_makespan_s"] * 1e6,
+         f"wan_bytes_ratio={wan['wan_bytes_ratio']:.2f}x"),
+    ]
+    for r in report["hierarchical"]:
+        out.append((f"bench_compression_{r['name']}",
+                    r["compressed_time_s"] * 1e6,
+                    f"speedup={r['speedup']:.2f}x"))
+    crossed = sum(1 for r in report["crossover"] if r["compressed"])
+    out.append(("bench_compression_crossover_sweep", 0.0,
+                f"compressed_cells={crossed}/{len(report['crossover'])}"))
+    return out
+
+
+def main() -> None:
+    report = run_benchmarks()
+    a = report["anchor"]
+    print(f"{a['name']}: identity codec byte- and time-exact on "
+          f"{', '.join(a['engines'])}")
+    for r in report["hierarchical"]:
+        print(f"{r['name']}: {r['raw_time_s'] * 1e3:.3f}ms raw -> "
+              f"{r['compressed_time_s'] * 1e3:.3f}ms compressed "
+              f"({r['speedup']:.2f}x, tiers {r['compressed_tiers']})")
+    w = report["wan_headline"]
+    print(f"{w['name']}: {w['raw_wan_bytes']} B raw -> "
+          f"{w['compressed_wan_bytes']} B over the WAN "
+          f"({w['wan_bytes_ratio']:.2f}x fewer wire bytes, "
+          f"{w['retransmits']} retransmits resent compressed)")
+    by_bw = {}
+    for r in report["crossover"]:
+        key = (r["tier_bw_gbs"], r["codec_bw_gbs"])
+        by_bw.setdefault(key, r["compressed"])
+    for (tbw, cbw), comp in sorted(by_bw.items()):
+        print(f"crossover tier {tbw:5.2f} GB/s x codec {cbw:5.1f} GB/s: "
+              f"{'compressed' if comp else 'raw'}")
+    print(f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    if "--quick" in sys.argv:
+        quick_check()
+    else:
+        main()

@@ -95,6 +95,15 @@ def _headline(name: str, report: dict) -> str:
                     f"{report['anchor']['byte_exact']}; jitter sweep "
                     f"{len(sweep)} seeds replay-exact ({dropped} drops "
                     f"accounted)")
+        if name == "BENCH_compression.json":
+            w = report["wan_headline"]
+            hi = max(r["speedup"] for r in report["hierarchical"])
+            crossed = sum(1 for r in report["crossover"] if r["compressed"])
+            return (f"WAN wire {w['wan_bytes_ratio']:.1f}x smaller "
+                    f"(frame-lossless); hierarchical up to {hi:.1f}x; "
+                    f"crossover {crossed}/{len(report['crossover'])} cells "
+                    f"compressed; identity anchor exact: "
+                    f"{report['anchor']['byte_exact']}")
         if name == "BENCH_qos.json":
             by = {(r["rate_hz"], r["policy"]): r for r in report["open_loop"]}
             rate = max(r for r, _ in by)
@@ -232,6 +241,15 @@ def main() -> None:
                   f"{' quick=anchor-parity-only' if quick else ''}",
                   file=sys.stderr)
             for name, us, derived in bench_wan.rows(quick=quick):
+                print(f"{name},{us:.1f},{derived}")
+        elif "--compression" in sys.argv[1:]:
+            from benchmarks import bench_compression
+            quick = "--quick" in sys.argv[1:]
+            print(f"[bench_compression] "
+                  f"api_path={bench_compression.API_PATH}"
+                  f"{' quick=anchor-parity-only' if quick else ''}",
+                  file=sys.stderr)
+            for name, us, derived in bench_compression.rows(quick=quick):
                 print(f"{name},{us:.1f},{derived}")
         else:
             from benchmarks import paper_figures

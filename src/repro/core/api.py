@@ -62,6 +62,9 @@ from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
                     Tuple, Union)
 
 from repro.core.collectives import CollectivePlan, CollectivePlanner  # noqa: F401 (re-export)
+from repro.core.compression import (CODECS, Codec,  # noqa: F401 (re-export)
+                                    CompressionConfig, CompressionStats,
+                                    resolve_codec)
 from repro.core.fabric import Fabric
 from repro.core.faults import FaultEvent, FaultKind, FaultSchedule
 from repro.core.staging import (StagingReport, stage_collective, stage_naive,
@@ -186,9 +189,12 @@ class EngineConfig:
     A subclass that declares a ``topology`` field gets loose spellings
     (a canned name, a JSON dict, a registered
     `repro.core.topology.Topology`) coerced to a typed
-    :class:`~repro.core.topology.TopologyConfig` here, and a ``faults``
-    field likewise to a :class:`FaultConfig` — subclasses with their own
-    ``__post_init__`` must call ``super().__post_init__()``. ``faults``
+    :class:`~repro.core.topology.TopologyConfig` here, a ``faults``
+    field likewise to a :class:`FaultConfig`, and a ``compression``
+    field (a codec name, mapping, or `repro.core.compression.Codec`) to
+    a typed :class:`~repro.core.compression.CompressionConfig` —
+    subclasses with their own ``__post_init__`` must call
+    ``super().__post_init__()``. ``faults``
     is EXCLUDED from ``to_kw()``: it configures the fabric-side scope
     the stage runs under (``Interconnect.scoped_faults``), not an engine
     function parameter.
@@ -201,6 +207,10 @@ class EngineConfig:
         flt = getattr(self, "faults", None)
         if flt is not None and not isinstance(flt, FaultConfig):
             object.__setattr__(self, "faults", FaultConfig.coerce(flt))
+        comp = getattr(self, "compression", None)
+        if comp is not None and not isinstance(comp, CompressionConfig):
+            object.__setattr__(self, "compression",
+                               CompressionConfig.coerce(comp))
 
     def to_kw(self) -> Dict[str, Any]:
         return {f.name: getattr(self, f.name) for f in fields(self)
@@ -214,9 +224,12 @@ class CollectiveConfig(EngineConfig):
     selects the machine model the collectives are planned over for this
     stage (``None``: whatever the fabric runs — FLAT by default);
     ``faults`` optionally overlays a what-if :class:`FaultConfig` for
-    this stage only."""
+    this stage only; ``compression`` selects a codec for per-tier
+    compress-at-source election (``None``: ship raw — bit-exact legacy
+    path)."""
     topology: Optional[TopologyConfig] = None
     faults: Optional[FaultConfig] = None
+    compression: Optional[CompressionConfig] = None
 
 
 @dataclass(frozen=True)
@@ -224,10 +237,12 @@ class PipelinedConfig(EngineConfig):
     """Chunked two-phase staging with read/all-gather overlap
     (`repro.core.staging.stage_pipelined`). ``chunk_bytes`` is the
     per-host segment size: smaller chunks overlap finer but round more;
-    ``topology``/``faults`` as on :class:`CollectiveConfig`."""
+    ``topology``/``faults``/``compression`` as on
+    :class:`CollectiveConfig`."""
     chunk_bytes: int = 8 << 20
     topology: Optional[TopologyConfig] = None
     faults: Optional[FaultConfig] = None
+    compression: Optional[CompressionConfig] = None
 
     def __post_init__(self) -> None:
         super().__post_init__()
@@ -240,11 +255,13 @@ class PipelinedConfig(EngineConfig):
 @dataclass(frozen=True)
 class NaiveConfig(EngineConfig):
     """Uncoordinated per-host full reads — the paper's congested baseline
-    (`repro.core.staging.stage_naive`). ``topology`` is accepted for
-    engine-protocol uniformity (the naive path never touches the
-    interconnect); ``faults`` as on :class:`CollectiveConfig`."""
+    (`repro.core.staging.stage_naive`). ``topology`` and ``compression``
+    are accepted for engine-protocol uniformity (the naive path never
+    touches the interconnect, so neither changes anything); ``faults``
+    as on :class:`CollectiveConfig`."""
     topology: Optional[TopologyConfig] = None
     faults: Optional[FaultConfig] = None
+    compression: Optional[CompressionConfig] = None
 
 
 @dataclass(frozen=True)
@@ -255,10 +272,12 @@ class ReplicatedConfig(EngineConfig):
     (mod P), so a host death loses no data while R-1 neighbors survive
     and repair (`repro.core.staging.re_replicate`) moves only the lost
     stripes. ``replication`` is R (1 = no redundancy: a pure striped
-    scatter); ``topology``/``faults`` as on :class:`CollectiveConfig`."""
+    scatter); ``topology``/``faults``/``compression`` as on
+    :class:`CollectiveConfig`."""
     replication: int = 2
     topology: Optional[TopologyConfig] = None
     faults: Optional[FaultConfig] = None
+    compression: Optional[CompressionConfig] = None
 
     def __post_init__(self) -> None:
         super().__post_init__()
@@ -278,7 +297,9 @@ class StreamConfig(EngineConfig):
     :class:`CollectiveConfig` (the per-frame detector ingest hop is
     charged to its ingest tier and each delivery broadcast planned over
     it); ``faults`` overlays a what-if fault schedule on the stream
-    (degraded ingest: deliveries skip hosts dead at delivery time)."""
+    (degraded ingest: deliveries skip hosts dead at delivery time);
+    ``compression`` as on :class:`CollectiveConfig` (the WAN ingest hop
+    is where compress-at-source pays most — see docs/compression.md)."""
     rate_hz: Optional[float] = None
     window_bytes: Optional[int] = None
     # paths pinned AT INGEST (exempt from window eviction) in addition to
@@ -287,6 +308,7 @@ class StreamConfig(EngineConfig):
     pin_paths: Tuple[str, ...] = ()
     topology: Optional[TopologyConfig] = None
     faults: Optional[FaultConfig] = None
+    compression: Optional[CompressionConfig] = None
 
     def __post_init__(self) -> None:
         super().__post_init__()
@@ -577,7 +599,8 @@ class StagingSpec:
             # the fabric-scoped `faults` field from engine kwargs)
             params = {f.name: (v.to_dict()
                                if isinstance(v, (TopologyConfig,
-                                                 FaultConfig)) else v)
+                                                 FaultConfig,
+                                                 CompressionConfig)) else v)
                       for f in fields(self.config)
                       for v in (getattr(self.config, f.name),)}
             out["engine"] = {"name": reg.name_of(self.config),
@@ -625,7 +648,12 @@ class Report:
         identity, per-report ``total_time == stage + comm + write +
         broadcast``;
       * ``delivered_bytes == n_hosts * total_bytes`` (every node receives
-        a full replica);
+        a full replica) — delivered bytes are LOGICAL payload and never
+        shrink under compression;
+      * ``net_bytes``/``tier_bytes`` are WIRE bytes (compressed where a
+        codec elected a tier); per report the tier map sums to the net
+        total, and ``payload_net_bytes == net_bytes + comp.saved_bytes``
+        recovers the logical traffic;
       * ``fs_bytes`` is 1x the dataset for collective/pipelined, P x for
         naive, and **0** for stream (the FS is never read back).
 
@@ -655,7 +683,9 @@ class Report:
 
     @property
     def delivered_bytes(self) -> int:
-        """Bytes landed on node-local stores: every host gets a replica."""
+        """Bytes landed on node-local stores: every host gets a replica.
+        Logical payload — a staging codec compresses the WIRE traffic
+        (``net_bytes``), never what lands in node memory."""
         return self.n_hosts * self.total_bytes
 
     @property
@@ -668,7 +698,33 @@ class Report:
 
     @property
     def net_bytes(self) -> int:
+        """Interconnect WIRE bytes (compressed where a codec elected)."""
         return sum(r.net_bytes for r in self.reports)
+
+    # -- compression reconciliation (wire vs payload) ----------------------
+    @property
+    def comp(self) -> CompressionStats:
+        """Aggregated codec accounting over every entry's report."""
+        total = CompressionStats()
+        for r in self.reports:
+            total.add(r.comp)
+        return total
+
+    @property
+    def wire_bytes(self) -> int:
+        """Alias of :attr:`net_bytes` making the wire semantics explicit."""
+        return self.net_bytes
+
+    @property
+    def payload_net_bytes(self) -> int:
+        """Logical bytes behind the wire traffic: what the interconnect
+        would have moved with no codec (``net_bytes + comp.saved_bytes``)."""
+        return self.net_bytes + self.comp.saved_bytes
+
+    @property
+    def bytes_saved(self) -> int:
+        """Wire bytes a staging codec avoided moving (0 without one)."""
+        return self.comp.saved_bytes
 
     # -- unified time accounting -------------------------------------------
     @property
@@ -688,11 +744,20 @@ class Report:
         return sum(r.write_time for r in self.reports)
 
     def accounting_closes(self, tol: float = 1e-9) -> bool:
-        """True when the direct-path identity holds: glob metadata plus
-        the per-entry report totals equals the end-to-end time."""
-        return abs(self.metadata_time + sum(r.total_time for r in
-                                            self.reports)
-                   - self.total_time) <= tol
+        """True when the direct-path identities hold: glob metadata plus
+        the per-entry report totals equals the end-to-end time, AND the
+        byte story reconciles — each report's per-tier wire bytes sum to
+        its net wire total, and the codec's compressed traffic is a
+        subset of it (savings never negative)."""
+        time_ok = abs(self.metadata_time + sum(r.total_time for r in
+                                               self.reports)
+                      - self.total_time) <= tol
+        bytes_ok = all(sum(r.tier_bytes.values()) == r.net_bytes
+                       for r in self.reports)
+        comp_ok = all(r.comp.saved_bytes >= 0
+                      and r.comp.wire_bytes <= r.net_bytes
+                      for r in self.reports)
+        return time_ok and bytes_ok and comp_ok
 
 
 # ---------------------------------------------------------------------------
@@ -1024,7 +1089,8 @@ class StagingClient:
                 "StreamConfig.window_bytes is required for an incremental "
                 "stream stager (there is no dataset to default it to)")
         stager = StreamStager(self.fabric, window_bytes=config.window_bytes,
-                              t0=t0, topology=config.topology)
+                              t0=t0, topology=config.topology,
+                              compression=config.compression)
         for p in config.pin_paths:
             stager.pin(p)
         return stager

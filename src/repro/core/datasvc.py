@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import staging as _staging
 from repro.core.api import ENGINES
+from repro.core.compression import CompressionLike, resolve_codec
 from repro.core.fabric import Fabric, FaultEvent, FaultKind, Host
 from repro.core.staging import (LostStripesError, ReplicaLossError,
                                 ReplicaPlacement, StagingReport,
@@ -222,7 +223,8 @@ class ServiceStats:
 
 
 def predict_stage_time(fabric: Fabric, nbytes: int, n_files: int,
-                       t: Optional[float] = None) -> float:
+                       t: Optional[float] = None,
+                       codec: CompressionLike = None) -> float:
     """Predicted simulated seconds to collectively stage a dataset of
     `nbytes` across `n_files` files — the eviction cost model (mirrors
     the ``stage_collective`` formula on an idle fabric, without touching
@@ -236,17 +238,26 @@ def predict_stage_time(fabric: Fabric, nbytes: int, n_files: int,
     live at `t` with that moment's degraded tier bandwidths — the
     candidate's CURRENT timeline state, which is what an eviction
     ranking at `t` must compare. ``t=None`` (or a trivial schedule)
-    prices the healthy fabric, bit-exact with the pre-fault formula."""
+    prices the healthy fabric, bit-exact with the pre-fault formula.
+
+    `codec` (any `repro.core.compression` spelling) prices the comm
+    phase under the service engine's compression config: the planner
+    runs the same per-tier compress-at-source election a real stage
+    would, so eviction rankings stay truthful when staging ships
+    compressed. ``None`` predicts the raw wire, bit-exact."""
     c = fabric.constants
     P = fabric.n_hosts
+    active = resolve_codec(codec)
     t_read = (nbytes / c.fs_seq_bw + n_files * _coll_overhead(fabric)
               + c.fs_op_latency)
     stripe = max(1, (nbytes + P - 1) // P)
     if t is None or fabric.faults.trivial:
-        t_comm = fabric.net.planner.plan_allgather(stripe, P).time
+        t_comm = fabric.net.planner.plan_allgather(stripe, P,
+                                                   codec=active).time
     else:
         planner, dead = fabric.net._fault_state(t, P)
-        t_comm = planner.plan_allgather(stripe, P - dead, dead=dead).time
+        t_comm = planner.plan_allgather(stripe, P - dead, dead=dead,
+                                        codec=active).time
     return t_read + t_comm + nbytes / c.local_bw
 
 
@@ -289,6 +300,10 @@ class StagingService:
                                     **(stage_kw or {}))
             self._stage_fn = reg.stage_fn(mode)
             self._stage_kw = config.to_kw()
+        # the engine's staging codec (None = raw), fed to every
+        # predict_stage_time eviction ranking so the cost model prices
+        # the wire the engine would actually use
+        self._codec = resolve_codec(self._stage_kw.get("compression"))
         self.fabric = fabric
         self.budget_bytes = int(budget_bytes)
         self.catalog = DataCatalog()
@@ -513,7 +528,8 @@ class StagingService:
                 # cost-aware: cheapest to bring back if needed again,
                 # priced under the timeline state AT admission time
                 victim = min(now, key=lambda e: (predict_stage_time(
-                    self.fabric, e.nbytes, len(e.paths), t=t_admit), e.name))
+                    self.fabric, e.nbytes, len(e.paths), t=t_admit,
+                    codec=self._codec), e.name))
                 self._evict(victim, t_admit)
                 continue
             future = [e for e in free if e.t_unleased > t_admit]

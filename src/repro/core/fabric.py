@@ -36,6 +36,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.core.collectives import CollectivePlan, CollectivePlanner
+from repro.core.compression import (Codec, CompressionLike, CompressionStats,
+                                    resolve_codec)
 from repro.core.faults import FaultEvent, FaultKind, FaultSchedule
 from repro.core.telemetry import NULL_TRACER, TracerLike
 from repro.core.topology import FLAT, Topology, TopologyLike, resolve_topology
@@ -282,7 +284,14 @@ class Interconnect:
     ``Fabric.advance_faults``) are planned over the LIVE host set with
     ring/tree re-routing latency for the dead, under per-tier degraded
     bandwidth. A trivial (empty) schedule takes the exact pre-fault code
-    path — bit-exact zero-fault accounting."""
+    path — bit-exact zero-fault accounting.
+
+    ``codec`` is the bound compression codec (`repro.core.compression`):
+    every collective planned here passes it to the planner, which elects
+    compress-at-source per tier. ``None`` (the default) is the identity —
+    the exact pre-compression code path. ``bytes_moved``/``tier_bytes``
+    always count WIRE bytes; ``comp`` accumulates the payload-vs-wire
+    split over plans that elected at least one tier."""
     constants: FabricConstants
     topology: Topology = FLAT
     bytes_moved: int = 0
@@ -290,6 +299,8 @@ class Interconnect:
     faults: Optional[FaultSchedule] = None
     now: float = 0.0                  # fault clock (advance_faults)
     tracer: TracerLike = NULL_TRACER  # shared via Fabric.attach_tracer
+    codec: Optional[Codec] = None     # bound via scoped_codec / configs
+    comp: CompressionStats = field(default_factory=CompressionStats)
 
     def __post_init__(self) -> None:
         self._planner = CollectivePlanner(self.topology, self.constants)
@@ -325,6 +336,31 @@ class Interconnect:
             yield
         finally:
             self.topology = prev
+
+    # -- compression binding ------------------------------------------------
+    @contextmanager
+    def scoped_codec(self, compression: CompressionLike) -> Iterator[None]:
+        """Temporarily bind a codec for one staging operation (how a
+        per-call ``CompressionConfig`` on an engine config takes effect).
+        Accepts any loose spelling (name, config, codec); ``None`` keeps
+        the current binding — a no-op, the bit-exact identity path."""
+        if compression is None:
+            yield
+            return
+        prev = self.codec
+        self.codec = resolve_codec(compression)
+        try:
+            yield
+        finally:
+            self.codec = prev
+
+    def comp_snapshot(self) -> CompressionStats:
+        """Copy of the codec accounting (pair with :meth:`comp_delta`)."""
+        return self.comp.copy()
+
+    def comp_delta(self, snapshot: CompressionStats) -> CompressionStats:
+        """Codec accounting accumulated since `snapshot`."""
+        return self.comp.delta(snapshot)
 
     # -- fault awareness ----------------------------------------------------
     @contextmanager
@@ -368,6 +404,12 @@ class Interconnect:
         for tier, nbytes in plan.tier_bytes.items():
             self.tier_bytes[tier] = self.tier_bytes.get(tier, 0) + nbytes
         self.bytes_moved += plan.total_bytes
+        if plan.compressed_tiers:
+            self.comp.plans += 1
+            self.comp.payload_bytes += plan.payload_bytes
+            self.comp.wire_bytes += plan.total_bytes
+            self.comp.compress_time += plan.compress_time
+            self.comp.decompress_time += plan.decompress_time
         return plan.time
 
     def _execute_traced(self, plan: CollectivePlan,
@@ -385,13 +427,34 @@ class Interconnect:
             sp = tr.span(f"collective.{plan.op}", t0, t0 + dt, track="net",
                          algorithm=plan.algorithm, nbytes=plan.nbytes,
                          n_hosts=plan.n_hosts, rerouted=plan.rerouted,
-                         wire_bytes=plan.total_bytes)
+                         wire_bytes=plan.total_bytes, codec=plan.codec)
+            # codec edges bracket the wire interval: compress at the
+            # sending edge before the first byte, decompress at the
+            # receiving edge after the last (both 0.0 without a codec —
+            # the tier partition below is then exactly the legacy one)
+            t_wire = t0 + plan.compress_time
+            wire_dt = dt - plan.compress_time - plan.decompress_time
+            if plan.compressed_tiers:
+                if plan.compress_time > 0:
+                    tr.span("comp.compress", t0, t_wire, track="net",
+                            parent=sp, codec=plan.codec,
+                            payload_bytes=plan.payload_bytes)
+                if plan.decompress_time > 0:
+                    tr.span("comp.decompress", t0 + dt - plan.decompress_time,
+                            t0 + dt, track="net", parent=sp,
+                            codec=plan.codec,
+                            payload_bytes=plan.payload_bytes)
+                tr.metrics.counter("comp.plans").inc()
+                tr.metrics.counter("comp.payload_bytes").inc(
+                    plan.payload_bytes)
+                tr.metrics.counter("comp.wire_bytes").inc(plan.total_bytes)
+                tr.metrics.counter("comp.bytes_saved").inc(plan.bytes_saved)
             total = plan.total_bytes
-            if dt > 0 and total > 0:
-                tcur = t0
+            if wire_dt > 0 and total > 0:
+                tcur = t_wire
                 for tier in sorted(plan.tier_bytes):
                     nb = plan.tier_bytes[tier]
-                    share = dt * (nb / total)
+                    share = wire_dt * (nb / total)
                     tr.span(f"tier.{tier}", tcur, tcur + share,
                             track=f"net/{tier}", parent=sp, nbytes=nb)
                     gauge = tr.metrics.gauge(f"net.bw.{tier}")
@@ -421,7 +484,7 @@ class Interconnect:
         planner, dead = self._fault_state(t, n_hosts)
         return self._execute_traced(
             planner.plan_broadcast(nbytes, n_hosts - dead, algorithm,
-                                   dead=dead), t)
+                                   dead=dead, codec=self.codec), t)
 
     def allgather(self, shard_bytes: int, n_hosts: int,
                   algorithm: Optional[str] = None,
@@ -432,7 +495,7 @@ class Interconnect:
         planner, dead = self._fault_state(t, n_hosts)
         return self._execute_traced(
             planner.plan_allgather(shard_bytes, n_hosts - dead, algorithm,
-                                   dead=dead), t)
+                                   dead=dead, codec=self.codec), t)
 
     def scatter(self, total_bytes: int, n_hosts: int,
                 algorithm: Optional[str] = None,
@@ -443,7 +506,7 @@ class Interconnect:
         planner, dead = self._fault_state(t, n_hosts)
         return self._execute_traced(
             planner.plan_scatter(total_bytes, n_hosts - dead, algorithm,
-                                 dead=dead), t)
+                                 dead=dead, codec=self.codec), t)
 
     def replichain(self, stripe_bytes: int, n_hosts: int, replication: int,
                    t: Optional[float] = None) -> float:
@@ -451,7 +514,8 @@ class Interconnect:
         phase of ``stage_replicated``); degraded tiers at `t` apply."""
         planner, _ = self._fault_state(t, n_hosts)
         return self._execute_traced(
-            planner.plan_replichain(stripe_bytes, n_hosts, replication), t)
+            planner.plan_replichain(stripe_bytes, n_hosts, replication,
+                                    codec=self.codec), t)
 
     def repair(self, transfers: List[Tuple[int, int, int]], n_hosts: int,
                t: Optional[float] = None) -> float:
@@ -462,6 +526,20 @@ class Interconnect:
         return self._execute_traced(planner.plan_repair(transfers, n_hosts),
                                     t)
 
+    def point_to_point(self, nbytes: int, t: Optional[float] = None,
+                       attempts: int = 1) -> CollectivePlan:
+        """Execute one `nbytes` off-machine ingest message and return the
+        EXECUTED plan (duration in ``.time``, wire bytes in
+        ``.tier_bytes``/``.total_bytes``) — the form
+        `repro.core.wan.WanFanout` needs, since with a bound codec the
+        retransmitted wire bytes are the COMPRESSED size, not
+        ``attempts * nbytes``."""
+        planner, _ = self._fault_state(t, 1)
+        plan = planner.plan_point_to_point(nbytes, attempts=attempts,
+                                           codec=self.codec)
+        self._execute_traced(plan, t)
+        return plan
+
     def point_to_point_time(self, nbytes: int, t: Optional[float] = None,
                             attempts: int = 1) -> float:
         """Duration (s) of one `nbytes` off-machine message (the
@@ -470,9 +548,7 @@ class Interconnect:
         `attempts` > 1 replays the hop that many times — the WAN
         retransmission model (`repro.core.wan`); time and ingest-tier
         bytes scale together."""
-        planner, _ = self._fault_state(t, 1)
-        return self._execute_traced(
-            planner.plan_point_to_point(nbytes, attempts=attempts), t)
+        return self.point_to_point(nbytes, t=t, attempts=attempts).time
 
     # -- deprecated aliases (pre-topology names) ----------------------------
     def ring_allgather_time(self, shard_bytes: int, n_hosts: int) -> float:

@@ -39,6 +39,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.compat import shard_map
+from repro.core.compression import CompressionLike, CompressionStats
 from repro.core.fabric import Fabric
 from repro.core.topology import TopologyLike
 
@@ -54,15 +55,21 @@ class StagingReport:
     broadcast_time: float = 0.0   # leader metadata-broadcast (on_root) phase
     fs_bytes: int = 0             # bytes actually read from shared FS
     fs_write_bytes: int = 0       # bytes written BACK to shared FS (stage_out)
-    net_bytes: int = 0            # bytes moved on the interconnect
-    # interconnect bytes per topology tier (e.g. {"torus": ..., "optical":
-    # ...}; FLAT reports everything under "link") — sums to net_bytes
+    net_bytes: int = 0            # WIRE bytes moved on the interconnect
+    # interconnect WIRE bytes per topology tier (e.g. {"torus": ...,
+    # "optical": ...}; FLAT reports everything under "link") — sums to
+    # net_bytes. With an active codec the wire count on elected tiers is
+    # the COMPRESSED traffic; `comp` carries the payload-vs-wire split
+    # (total_bytes/delivered bytes stay logical — payload — quantities).
     tier_bytes: Dict[str, int] = field(default_factory=dict)
     mode: str = "collective"      # collective|pipelined|naive|stream|stage_out
     n_chunks: int = 0             # pipelined: total all-gather segments
     overlap_saved: float = 0.0    # pipelined: phase time hidden by overlap
     # replicated engine / repair collectives: where the stripes live
     placement: Optional["ReplicaPlacement"] = None
+    # codec accounting over the plans this stage executed (zero when no
+    # codec was bound or no tier elected compression)
+    comp: CompressionStats = field(default_factory=CompressionStats)
 
     @property
     def total_time(self) -> float:
@@ -253,23 +260,27 @@ def _close_stage_span(fabric: Fabric, sp, rep: StagingReport,
 
 
 def stage_collective(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
-                     topology: TopologyLike = None
+                     topology: TopologyLike = None,
+                     compression: CompressionLike = None
                      ) -> Tuple[StagingReport, float]:
     """MPI_File_read_all-style staging of `paths` to every node-local store.
 
     Phase 1 (Staging): leaders read disjoint stripes — coordinated.
     Phase 2 (Write):   planned all-gather + local write -> full replica per
     node (the algorithm comes from the fabric topology's collective
-    planner; `topology` rebinds it for this call). Returns (report,
-    completion time).
+    planner; `topology` rebinds it for this call; `compression` binds a
+    codec the planner may elect per tier). Returns (report, completion
+    time).
     """
     with fabric.net.scoped_topology(topology), \
+            fabric.net.scoped_codec(compression), \
             fabric.tracer.region("stage.collective", t0,
                                  track="engine") as tsp:
         P_ = fabric.n_hosts
         fs0 = fabric.fs.bytes_read
         net0 = fabric.net.bytes_moved
         tier0 = fabric.net.tier_snapshot()
+        comp0 = fabric.net.comp_snapshot()
         total = sum(fabric.fs.size(p) for p in paths)
         rep = StagingReport(n_hosts=P_, total_bytes=total, mode="collective")
 
@@ -293,13 +304,15 @@ def stage_collective(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
         rep.fs_bytes = fabric.fs.bytes_read - fs0
         rep.net_bytes = fabric.net.bytes_moved - net0
         rep.tier_bytes = fabric.net.tier_delta(tier0)
+        rep.comp = fabric.net.comp_delta(comp0)
         _close_stage_span(fabric, tsp, rep, t0)
         return rep, t0 + rep.total_time
 
 
 def stage_pipelined(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
                     chunk_bytes: int = 8 << 20,
-                    topology: TopologyLike = None
+                    topology: TopologyLike = None,
+                    compression: CompressionLike = None
                     ) -> Tuple[StagingReport, float]:
     """Two-phase collective staging with chunked read/all-gather overlap.
 
@@ -317,12 +330,14 @@ def stage_pipelined(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     P * n_chunks bytes of per-segment ceil-rounding in the stripe sizes.
     """
     with fabric.net.scoped_topology(topology), \
+            fabric.net.scoped_codec(compression), \
             fabric.tracer.region("stage.pipelined", t0,
                                  track="engine") as tsp:
         P_ = fabric.n_hosts
         fs0 = fabric.fs.bytes_read
         net0 = fabric.net.bytes_moved
         tier0 = fabric.net.tier_snapshot()
+        comp0 = fabric.net.comp_snapshot()
         total = sum(fabric.fs.size(p) for p in paths)
         rep = StagingReport(n_hosts=P_, total_bytes=total, mode="pipelined")
 
@@ -359,19 +374,22 @@ def stage_pipelined(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
         rep.fs_bytes = fabric.fs.bytes_read - fs0
         rep.net_bytes = fabric.net.bytes_moved - net0
         rep.tier_bytes = fabric.net.tier_delta(tier0)
+        rep.comp = fabric.net.comp_delta(comp0)
         _close_stage_span(fabric, tsp, rep, t0)
         return rep, t0 + rep.total_time
 
 
 def stage_naive(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
-                topology: TopologyLike = None
+                topology: TopologyLike = None,
+                compression: CompressionLike = None
                 ) -> Tuple[StagingReport, float]:
     """Baseline: every host independently reads each full file from the
     shared FS (uncoordinated — the congested regime), then writes locally.
-    `topology` is accepted for engine-protocol uniformity only: the naive
-    path never touches the interconnect, so no collective is planned and
-    the report's tier accounting stays empty."""
-    del topology                    # no collective to plan on this path
+    `topology` and `compression` are accepted for engine-protocol
+    uniformity only: the naive path never touches the interconnect, so no
+    collective is planned, nothing can elect a codec, and the report's
+    tier accounting stays empty."""
+    del topology, compression       # no collective to plan on this path
     with fabric.tracer.region("stage.naive", t0, track="engine") as tsp:
         P_ = fabric.n_hosts
         fs0 = fabric.fs.bytes_read
@@ -404,7 +422,8 @@ def stage_naive(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
 # ---------------------------------------------------------------------------
 
 def stage_replicated(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
-                     replication: int = 2, topology: TopologyLike = None
+                     replication: int = 2, topology: TopologyLike = None,
+                     compression: CompressionLike = None
                      ) -> Tuple[StagingReport, float]:
     """R-way stripe-replicated staging: the fault-tolerant middle ground
     between ``stage_collective`` (R=P, every host a full replica) and
@@ -424,6 +443,7 @@ def stage_replicated(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     Hosts dead at `t0` (non-trivial fault schedule only) are excluded
     from the stripe geometry entirely."""
     with fabric.net.scoped_topology(topology), \
+            fabric.net.scoped_codec(compression), \
             fabric.tracer.region("stage.replicated", t0, track="engine",
                                  replication=replication) as tsp:
         live = (list(range(fabric.n_hosts)) if fabric.faults.trivial
@@ -432,6 +452,7 @@ def stage_replicated(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
         fs0 = fabric.fs.bytes_read
         net0 = fabric.net.bytes_moved
         tier0 = fabric.net.tier_snapshot()
+        comp0 = fabric.net.comp_snapshot()
         total = sum(fabric.fs.size(p) for p in paths)
         rep = StagingReport(n_hosts=L, total_bytes=total, mode="replicated",
                             placement=ReplicaPlacement.chained(live,
@@ -466,6 +487,7 @@ def stage_replicated(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
         rep.fs_bytes = fabric.fs.bytes_read - fs0
         rep.net_bytes = fabric.net.bytes_moved - net0
         rep.tier_bytes = fabric.net.tier_delta(tier0)
+        rep.comp = fabric.net.comp_delta(comp0)
         _close_stage_span(fabric, tsp, rep, t0)
         return rep, t0 + rep.total_time
 
@@ -601,7 +623,8 @@ def _as_uint8(outputs: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
 
 
 def stage_out(fabric: Fabric, outputs: Dict[str, np.ndarray],
-              t0: float = 0.0, topology: TopologyLike = None
+              t0: float = 0.0, topology: TopologyLike = None,
+              compression: CompressionLike = None
               ) -> Tuple[StagingReport, float]:
     """Collective write-back: ``MPI_File_write_all`` over the fabric.
 
@@ -618,11 +641,12 @@ def stage_out(fabric: Fabric, outputs: Dict[str, np.ndarray],
 
     Returns ``(report, completion time)``; the report's ``stage_time`` is
     the FS write phase and ``fs_write_bytes`` the bytes landed.
-    `topology` is accepted for engine-protocol uniformity only: each
-    leader already owns its stripe, so no collective is planned and the
-    tier accounting stays empty.
+    `topology` and `compression` are accepted for engine-protocol
+    uniformity only: each leader already owns its stripe, so no
+    collective is planned (nothing can elect a codec) and the tier
+    accounting stays empty.
     """
-    del topology                    # no collective to plan on this path
+    del topology, compression       # no collective to plan on this path
     with fabric.tracer.region("stage.stage_out", t0, track="engine") as tsp:
         P_ = fabric.n_hosts
         w0 = fabric.fs.bytes_written
@@ -645,15 +669,17 @@ def stage_out(fabric: Fabric, outputs: Dict[str, np.ndarray],
 
 
 def stage_out_naive(fabric: Fabric, outputs: Dict[str, np.ndarray],
-                    t0: float = 0.0, topology: TopologyLike = None
+                    t0: float = 0.0, topology: TopologyLike = None,
+                    compression: CompressionLike = None
                     ) -> Tuple[StagingReport, float]:
     """Baseline write-back: every host writes each FULL result file to the
     shared FS, uncoordinated (the congested regime — P x the bytes at
     ``fs_rand_bw``). Final file contents are identical to ``stage_out``;
     only the traffic and time differ, which is the comparison the
-    write-back benchmark measures. `topology` is accepted for
-    engine-protocol uniformity (no interconnect traffic either way)."""
-    del topology                    # no collective to plan on this path
+    write-back benchmark measures. `topology` and `compression` are
+    accepted for engine-protocol uniformity (no interconnect traffic
+    either way)."""
+    del topology, compression       # no collective to plan on this path
     with fabric.tracer.region("stage.stage_out_naive", t0,
                               track="engine") as tsp:
         P_ = fabric.n_hosts

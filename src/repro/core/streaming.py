@@ -50,6 +50,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.compression import CompressionLike, CompressionStats
 from repro.core.fabric import (BGQ, Fabric, FabricConstants, pin_ref,
                                unpin_ref)
 from repro.core.staging import (StagingReport, _close_stage_span,
@@ -88,9 +89,13 @@ class StreamReport:
     evictions: int = 0             # frames dropped from the sliding window
     peak_resident_bytes: int = 0   # high-water mark of the node window
     degraded_deliveries: int = 0   # frames delivered around dead hosts
-    net_bytes: int = 0             # interconnect traffic (scatter+broadcast)
-    # interconnect bytes per topology tier (sums to net_bytes)
+    net_bytes: int = 0             # interconnect WIRE traffic (pull+broadcast)
+    # interconnect WIRE bytes per topology tier (sums to net_bytes; the
+    # compressed count on codec-elected tiers — `comp` has the split,
+    # while total_bytes stays the logical/payload frame count)
     tier_bytes: Dict[str, int] = field(default_factory=dict)
+    # codec accounting over this stream's executed plans
+    comp: CompressionStats = field(default_factory=CompressionStats)
     # multi-consumer pub/sub accounting (registered consumers only;
     # empty / -1 / 0 for single-consumer streams):
     #   consumer_lag    per-consumer mean ack lag behind t_avail (s)
@@ -179,7 +184,8 @@ class StreamStager:
 
     def __init__(self, fabric: Fabric, window_bytes: int,
                  high_watermark: float = 0.9, low_watermark: float = 0.5,
-                 t0: float = 0.0, topology: TopologyLike = None):
+                 t0: float = 0.0, topology: TopologyLike = None,
+                 compression: CompressionLike = None):
         if not 0.0 < low_watermark <= high_watermark <= 1.0:
             raise ValueError("need 0 < low_watermark <= high_watermark <= 1")
         self.fabric = fabric
@@ -191,6 +197,10 @@ class StreamStager:
         # planned under this topology (None -> whatever the fabric runs)
         self._topology = (None if topology is None
                           else resolve_topology(topology))
+        # per-stager codec: elected per tier by the planner on the ingest
+        # hop and delivery broadcast (None -> the fabric binding, which
+        # defaults to the bit-exact uncompressed path)
+        self._compression = compression
         self.records: List[FrameRecord] = []
         self.stall_time = 0.0
         self.evictions = 0
@@ -212,6 +222,7 @@ class StreamStager:
         self._bcast_busy = t0                   # broadcast ring serialization
         self._net0 = fabric.net.bytes_moved
         self._tier0 = fabric.net.tier_snapshot()
+        self._comp0 = fabric.net.comp_snapshot()
 
     # -- window bookkeeping -------------------------------------------------
     def _resident_bytes(self) -> int:
@@ -313,7 +324,8 @@ class StreamStager:
         self.stall_time += stalled
 
         owner = len(self.records) % self.fabric.n_hosts
-        with net.scoped_topology(self._topology):
+        with net.scoped_topology(self._topology), \
+                net.scoped_codec(self._compression):
             # issue times feed the fault schedule: a degraded ingest tier
             # or a dead host at THIS frame's delivery slows/reroutes it
             self._nic_busy = t_admit + self._pull_time(nbytes, t_admit)
@@ -441,6 +453,7 @@ class StreamStager:
         rep.degraded_deliveries = self.degraded_deliveries
         rep.net_bytes = self.fabric.net.bytes_moved - self._net0
         rep.tier_bytes = self.fabric.net.tier_delta(self._tier0)
+        rep.comp = self.fabric.net.comp_delta(self._comp0)
         rep.consumer_lag = {
             name: self._lag_sum[name] / self._lag_n[name]
             for name in sorted(self._lag_sum)}
@@ -473,7 +486,8 @@ def stage_stream(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
                  rate_hz: Optional[float] = None,
                  window_bytes: Optional[int] = None,
                  pin_paths: Sequence[str] = (),
-                 topology: TopologyLike = None
+                 topology: TopologyLike = None,
+                 compression: CompressionLike = None
                  ) -> Tuple[StagingReport, float]:
     """I/O-hook-compatible streaming engine (``mode="stream"``).
 
@@ -497,7 +511,8 @@ def stage_stream(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
     with fabric.tracer.region("stage.stream", t0, track="engine") as tsp:
         stager = StreamStager(fabric,
                               window_bytes=window_bytes or max(total, 1),
-                              t0=t0, topology=topology)
+                              t0=t0, topology=topology,
+                              compression=compression)
         pin_set = set(pin_paths)
         for _, path, buf, t_emit in src:
             rec = stager.ingest(path, buf, t_emit)
@@ -515,6 +530,7 @@ def stage_stream(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
         rep.fs_bytes = 0
         rep.net_bytes = srep.net_bytes
         rep.tier_bytes = dict(srep.tier_bytes)
+        rep.comp = srep.comp
         rep.n_chunks = srep.n_frames
         _close_stage_span(fabric, tsp, rep, t0)
         return rep, t0 + srep.ingest_makespan

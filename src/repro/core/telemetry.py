@@ -552,6 +552,23 @@ def flight_recorder(tracer: Tracer) -> str:
             lines.append(f"  {tier:<12s} {dt:12.6f}s  "
                          f"{_fmt_bytes(nb):>10s}  {bw / 1e9:8.2f} GB/s")
 
+    comp_c = sum(s.duration for s in spans if s.name == "comp.compress")
+    comp_d = sum(s.duration for s in spans if s.name == "comp.decompress")
+    counters = tracer.metrics.snapshot()["counters"]
+    comp_payload = counters.get("comp.payload_bytes", 0)
+    comp_wire = counters.get("comp.wire_bytes", 0)
+    if comp_payload or comp_c or comp_d:
+        wire_s = sum(tier_time.values())
+        ratio = comp_payload / comp_wire if comp_wire else 1.0
+        lines.append("")
+        lines.append(
+            f"compression: {_fmt_bytes(comp_payload)} payload -> "
+            f"{_fmt_bytes(comp_wire)} wire ({ratio:.2f}x, "
+            f"{_fmt_bytes(counters.get('comp.bytes_saved', 0))} saved), "
+            f"codec {comp_c + comp_d:.6f}s "
+            f"(compress {comp_c:.6f}s / decompress {comp_d:.6f}s) "
+            f"vs wire {wire_s:.6f}s")
+
     wan_pulls = [s for s in spans if s.name == "wan.pull"]
     if wan_pulls:
         pull_s = sum(s.duration for s in wan_pulls)

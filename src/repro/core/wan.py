@@ -65,6 +65,7 @@ from typing import (Deque, Dict, List, Optional, Sequence, Tuple, Union)
 import numpy as np
 
 from repro.core.collectives import CollectivePlanner
+from repro.core.compression import CompressionLike
 from repro.core.events import EventLoop
 from repro.core.fabric import Fabric
 from repro.core.faults import FaultSchedule
@@ -132,17 +133,22 @@ class WanFanout(StreamStager):
         if self.loss_rate > 0.0:
             while self._loss_rng.random() < self.loss_rate:
                 attempts += 1
-        dt = self.fabric.net.point_to_point_time(nbytes, t=t,
-                                                 attempts=attempts)
+        plan = self.fabric.net.point_to_point(nbytes, t=t,
+                                              attempts=attempts)
+        dt = plan.time
         self.wan_time += dt
-        self.wan_bytes += attempts * nbytes
+        # wire bytes: retransmissions re-send the *compressed* frame, so
+        # an elected codec shrinks every attempt (== attempts * nbytes
+        # when no codec is active)
+        self.wan_bytes += plan.total_bytes
         if attempts > 1:
             self.retransmits += attempts - 1
         tr = self.fabric.tracer
         if tr.enabled:
             # record only: dt was computed above, untraced
             sp = tr.span("wan.pull", t, t + dt, track="wan",
-                         nbytes=nbytes, attempts=attempts)
+                         nbytes=nbytes, wire_bytes=plan.total_bytes,
+                         attempts=attempts)
             if attempts > 1:
                 # failed attempts occupy the leading (k-1)/k of the hop
                 tr.span("wan.retransmit", t, t + dt * (attempts - 1)
@@ -205,6 +211,7 @@ class WanSession:
                  consume_hz: Union[None, float, Sequence[float]] = None,
                  loss_rate: float = 0.0, loss_seed: int = 0,
                  topology: TopologyLike = None,
+                 compression: CompressionLike = None,
                  faults: Optional[FaultSchedule] = None,
                  pin_paths: Sequence[str] = (),
                  t0: float = 0.0, loop: Optional[EventLoop] = None):
@@ -280,7 +287,7 @@ class WanSession:
 
         self.stager = WanFanout(fabric, window, loss_rate=loss_rate,
                                 loss_seed=loss_seed, t0=t0,
-                                topology=topology)
+                                topology=topology, compression=compression)
         for sub in self._subs:
             self.stager.register_consumer(sub.name)
         self.report = WanReport(n_subscribers=len(self._subs))
@@ -377,6 +384,7 @@ def stage_wan(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
               subscribers: Union[int, Sequence[str]] = 1,
               consume_hz: Union[None, float, Sequence[float]] = None,
               loss_rate: float = 0.0, loss_seed: int = 0,
+              compression: CompressionLike = None,
               jitter_seed: Optional[int] = None, jitter_windows: int = 0,
               jitter_window_s: Optional[float] = None,
               jitter_factors: Tuple[float, float] = (0.3, 0.9),
@@ -440,7 +448,7 @@ def stage_wan(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
             credit_window=credit_window, buffer_frames=buffer_frames,
             subscribers=subscribers, consume_hz=consume_hz,
             loss_rate=loss_rate, loss_seed=loss_seed, topology=topology,
-            faults=faults, pin_paths=pin_set, t0=t0)
+            compression=compression, faults=faults, pin_paths=pin_set, t0=t0)
         wrep = session.run()
         srep = wrep.stream
 
@@ -452,6 +460,7 @@ def stage_wan(fabric: Fabric, paths: Sequence[str], t0: float = 0.0,
         rep.fs_bytes = 0
         rep.net_bytes = srep.net_bytes
         rep.tier_bytes = dict(srep.tier_bytes)
+        rep.comp = srep.comp
         rep.n_chunks = srep.n_frames
         rep.wan = wrep                        # full WAN-side accounting
         _close_stage_span(fabric, tsp, rep, t0)

@@ -1,0 +1,459 @@
+"""Compression-aware tiered staging (`repro.core.compression` +
+planner election): codec model, per-tier crossover correctness,
+identity-codec regression anchors for every engine, and the
+wire-vs-payload accounting split."""
+from dataclasses import fields, replace
+
+import numpy as np
+import pytest
+
+from conftest import make_fabric
+from hypothesis_compat import given, settings, st
+
+from repro.core.api import (CollectiveConfig, NaiveConfig, PipelinedConfig,
+                            ReplicatedConfig, StagingClient, StagingSpec,
+                            StreamConfig, WanStreamConfig)
+from repro.core.collectives import CollectivePlanner
+from repro.core.compression import (CODECS, Codec, CompressionConfig,
+                                    CompressionStats, resolve_codec)
+from repro.core.fabric import BGQ, Fabric
+from repro.core.faults import FaultEvent, FaultKind, FaultSchedule
+from repro.core.staging import (stage_collective, stage_naive,
+                                stage_out, stage_pipelined,
+                                stage_replicated)
+from repro.core.streaming import stage_stream
+from repro.core.telemetry import Tracer, flight_recorder
+from repro.core.topology import resolve_topology
+from repro.core.wan import stage_wan
+
+MB = 1 << 20
+FRAME_LOSSLESS = CODECS["frame-lossless"]
+FRAME_FAST = CODECS["frame-fast"]
+FRAME_DEEP = CODECS["frame-deep"]
+
+
+def planner(topology="wan_beamline", constants=BGQ):
+    return CollectivePlanner(resolve_topology(topology), constants)
+
+
+def closed_form_wins(codec, nbytes, bw):
+    """The decision inequality, computed independently of the planner."""
+    w = codec.compressed_size(nbytes)
+    if codec.is_identity or nbytes <= 0 or w >= nbytes:
+        return False
+    return (nbytes / codec.compress_bw + nbytes / codec.decompress_bw
+            + w / bw < nbytes / bw)
+
+
+# ---------------------------------------------------------------------------
+# codec model
+# ---------------------------------------------------------------------------
+
+def test_codec_validation():
+    with pytest.raises(ValueError, match="ratio"):
+        Codec(name="bad", ratio=0.5)
+    with pytest.raises(ValueError, match="positive"):
+        Codec(name="bad", compress_bw=0.0)
+    with pytest.raises(ValueError, match="non-empty"):
+        Codec(name="")
+
+
+def test_compressed_size_deterministic_and_bounded():
+    c = FRAME_LOSSLESS
+    assert c.compressed_size(0) == 0
+    assert c.compressed_size(-5) == 0
+    assert c.compressed_size(1) == 1          # headers never vanish
+    n = 10 * MB
+    w = c.compressed_size(n)
+    assert w == c.compressed_size(n)          # pure function
+    assert 0 < w < n
+    assert w == -(-n // 3.2) or w == int(np.ceil(n / 3.2))
+
+
+def test_identity_codec_is_free_and_size_preserving():
+    ident = CODECS["none"]
+    assert ident.is_identity
+    assert ident.compressed_size(MB) == MB
+    assert ident.compress_time(MB) == 0.0
+    assert ident.decompress_time(MB) == 0.0
+    assert resolve_codec("none") is None
+    assert resolve_codec(None) is None
+    assert resolve_codec(ident) is None
+
+
+def test_config_coercion_and_round_trip():
+    cfg = CompressionConfig.coerce("frame-lossless")
+    assert cfg.build() == FRAME_LOSSLESS
+    assert CompressionConfig.coerce(cfg) is cfg
+    assert CompressionConfig.coerce(None).build() is None
+    over = CompressionConfig(codec="frame-lossless", ratio=2.0)
+    assert over.build().ratio == 2.0
+    rebuilt = CompressionConfig(**over.to_dict())
+    assert rebuilt == over
+    with pytest.raises(ValueError, match="unknown codec"):
+        CompressionConfig(codec="zstd-99")
+    with pytest.raises(ValueError, match="not registered"):
+        CompressionConfig.coerce(Codec(name="adhoc", ratio=2.0))
+
+
+def test_compression_stats_accounting():
+    s = CompressionStats(plans=2, payload_bytes=10, wire_bytes=4,
+                         compress_time=1.0, decompress_time=0.5)
+    assert s.saved_bytes == 6 and s.wire_ratio == 2.5 and s.codec_time == 1.5
+    snap = s.copy()
+    s.add(s.copy())
+    d = s.delta(snap)
+    assert d.plans == 2 and d.payload_bytes == 10
+    assert CompressionStats().wire_ratio == 1.0
+
+
+# ---------------------------------------------------------------------------
+# the per-tier election (satellite: crossover correctness)
+# ---------------------------------------------------------------------------
+
+def test_election_matches_closed_form_on_every_canned_topology():
+    n = MB
+    for topo_name in ("flat", "bgq_torus", "tpu_pod_ici_dcn",
+                      "wan_beamline"):
+        pl = planner(topo_name)
+        topo = pl.topology
+        tiers = [topo.intra] + ([topo.inter] if topo.inter else [])
+        for codec in (FRAME_LOSSLESS, FRAME_FAST, FRAME_DEEP):
+            elected = pl.compression_election(codec, n)
+            for tier in tiers:
+                assert pl.compression_wins(tier, codec, n) \
+                    == closed_form_wins(codec, n, pl._bw(tier, 1)) \
+                    == (tier.name in elected), (topo_name, codec.name,
+                                                tier.name)
+
+
+def test_default_codec_elects_wan_but_not_cluster_tiers():
+    # frame-lossless sits between the 2 GB/s cluster links and the
+    # 1.25 GB/s WAN pipe: per-tier election, visible on one topology
+    pl = planner("wan_beamline")
+    assert pl.compression_election(FRAME_LOSSLESS, MB) == {"wan"}
+    assert pl.compression_election(FRAME_FAST, MB) == {"cluster", "wan"}
+    assert pl.compression_election(FRAME_DEEP, MB) == frozenset()
+    # 50 GB/s ICI: no registered codec can keep up
+    fast = planner("tpu_pod_ici_dcn")
+    for codec in (FRAME_LOSSLESS, FRAME_FAST, FRAME_DEEP):
+        assert fast.compression_election(codec, MB) == frozenset()
+
+
+def test_election_monotone_in_codec_throughput():
+    pl = planner("wan_beamline")
+    tier = pl.topology.inter
+    prev = False
+    for bw in (0.5e9, 1e9, 2e9, 4e9, 8e9, 16e9, 64e9):
+        codec = replace(FRAME_LOSSLESS, compress_bw=bw, decompress_bw=2 * bw)
+        wins = pl.compression_wins(tier, codec, MB)
+        assert wins >= prev      # once it wins, faster codecs keep winning
+        prev = wins
+    assert prev                  # the fast end does win
+
+
+def test_election_monotone_in_tier_bandwidth():
+    # slower tiers make compression MORE attractive, never less
+    prev = True
+    for link_bw in (0.5e9, 1.25e9, 2e9, 4e9, 16e9, 50e9):
+        topo = resolve_topology("flat").degraded({})
+        pl = CollectivePlanner(replace(topo, intra=replace(topo.intra,
+                                                           bw=link_bw)), BGQ)
+        wins = pl.compression_wins(pl.topology.intra, FRAME_LOSSLESS, MB)
+        assert wins <= prev      # once raw wins, faster tiers keep raw
+        prev = wins
+
+
+def test_degraded_tier_flips_election():
+    # healthy 2 GB/s cluster tier: frame-lossless ships raw; a brownout
+    # to 1 GB/s flips the same tier to compressed
+    pl = planner("wan_beamline")
+    assert not pl.compression_wins(pl.topology.intra, FRAME_LOSSLESS, MB)
+    degraded = CollectivePlanner(
+        pl.topology.degraded({"cluster": 0.5}), BGQ)
+    assert degraded.compression_wins(degraded.topology.intra,
+                                     FRAME_LOSSLESS, MB)
+    assert "cluster" in degraded.compression_election(FRAME_LOSSLESS, MB)
+
+
+def test_partitioned_tier_never_elected():
+    pl = planner("wan_beamline")
+    dead = CollectivePlanner(pl.topology.degraded({"wan": 0.0}), BGQ)
+    assert not dead.compression_wins(dead.topology.inter, FRAME_LOSSLESS, MB)
+    assert dead.compression_election(FRAME_LOSSLESS, MB) == frozenset()
+
+
+def test_fault_schedule_degradation_flips_election_through_fabric():
+    # the SAME fabric decision flips when a scheduled brownout halves
+    # the cluster tier at plan-issue time
+    sched = FaultSchedule([
+        FaultEvent(t=10.0, kind=FaultKind.LINK_DEGRADE, tier="cluster",
+                   factor=0.5, t_end=20.0)])
+    fab = Fabric(n_hosts=8, constants=BGQ, topology="wan_beamline",
+                 faults=sched)
+    pl_healthy, _ = fab.net._fault_state(0.0, 8)
+    pl_brown, _ = fab.net._fault_state(15.0, 8)
+    assert not pl_healthy.compression_wins(pl_healthy.topology.intra,
+                                           FRAME_LOSSLESS, MB)
+    assert pl_brown.compression_wins(pl_brown.topology.intra,
+                                     FRAME_LOSSLESS, MB)
+
+
+@settings(max_examples=60, deadline=None)
+@given(nbytes=st.integers(min_value=1, max_value=1 << 28),
+       cbw=st.floats(min_value=1e8, max_value=1e11),
+       dbw=st.floats(min_value=1e8, max_value=1e11),
+       ratio=st.floats(min_value=1.0, max_value=20.0),
+       tier_bw=st.floats(min_value=1e8, max_value=1e11))
+def test_property_election_iff_inequality(nbytes, cbw, dbw, ratio, tier_bw):
+    codec = Codec(name="frame-lossless", compress_bw=cbw,
+                  decompress_bw=dbw, ratio=ratio)
+    topo = resolve_topology("flat")
+    pl = CollectivePlanner(replace(topo, intra=replace(topo.intra,
+                                                       bw=tier_bw)), BGQ)
+    assert pl.compression_wins(pl.topology.intra, codec, nbytes) \
+        == closed_form_wins(codec, nbytes, tier_bw)
+
+
+# ---------------------------------------------------------------------------
+# plans: wire vs payload bytes, codec charges
+# ---------------------------------------------------------------------------
+
+def test_plan_reports_wire_and_payload_separately():
+    pl = planner("wan_beamline")
+    raw = pl.plan_point_to_point(MB, attempts=3)
+    cmp_ = pl.plan_point_to_point(MB, attempts=3, codec=FRAME_LOSSLESS)
+    w = FRAME_LOSSLESS.compressed_size(MB)
+    assert raw.tier_bytes == {"wan": 3 * MB}
+    assert cmp_.tier_bytes == {"wan": 3 * w}
+    assert cmp_.payload_tier_bytes == {"wan": 3 * MB}
+    assert cmp_.payload_bytes == 3 * MB
+    assert cmp_.bytes_saved == 3 * (MB - w)
+    assert cmp_.compressed_tiers == ("wan",)
+    assert cmp_.codec == "frame-lossless"
+    # raw plans: payload IS wire
+    assert raw.payload_tier_bytes is None
+    assert raw.payload_bytes == raw.total_bytes and raw.bytes_saved == 0
+
+
+def test_p2p_retransmits_resend_compressed_and_charge_codec_once():
+    # the sender keeps the compressed buffer: compress is charged once,
+    # every attempt re-sends the compressed wire size
+    pl = planner("wan_beamline")
+    one = pl.plan_point_to_point(MB, attempts=1, codec=FRAME_LOSSLESS)
+    three = pl.plan_point_to_point(MB, attempts=3, codec=FRAME_LOSSLESS)
+    assert three.compress_time == one.compress_time \
+        == FRAME_LOSSLESS.compress_time(MB)
+    assert three.decompress_time == one.decompress_time
+    wire_step = one.time - one.codec_time
+    assert three.time == pytest.approx(3 * wire_step + one.codec_time)
+    assert three.total_bytes == 3 * one.total_bytes
+
+
+def test_compressed_plan_beats_raw_iff_elected():
+    pl = planner("wan_beamline")
+    # elected on wan: compressed p2p strictly faster
+    assert pl.plan_point_to_point(MB, codec=FRAME_LOSSLESS).time \
+        < pl.plan_point_to_point(MB).time
+    # not elected anywhere: identical to raw, stamped with the codec name
+    deep = pl.plan_broadcast(MB, 64, codec=FRAME_DEEP)
+    raw = pl.plan_broadcast(MB, 64)
+    assert (deep.time, deep.tier_bytes) == (raw.time, raw.tier_bytes)
+    assert deep.codec == "frame-deep" and deep.compressed_tiers == ()
+
+
+def test_elected_but_idle_tier_charges_nothing():
+    # frame-lossless elects the wan tier, but a single-rack broadcast
+    # never crosses it: the plan must stay EXACTLY the raw plan
+    pl = planner("wan_beamline")
+    cmp_ = pl.plan_broadcast(MB, 64, codec=FRAME_LOSSLESS)
+    raw = pl.plan_broadcast(MB, 64)
+    assert (cmp_.time, cmp_.tier_bytes, cmp_.algorithm) \
+        == (raw.time, raw.tier_bytes, raw.algorithm)
+    assert cmp_.compressed_tiers == ()
+    assert cmp_.compress_time == 0.0 and cmp_.decompress_time == 0.0
+
+
+def test_hierarchical_plans_compound_on_multi_tier_election():
+    # frame-fast elects torus AND optical on bgq_torus: hierarchical
+    # broadcast wins on both tiers at P=8192
+    pl = planner("bgq_torus")
+    for P in (1024, 4096, 8192):
+        raw = pl.plan_broadcast(8 * MB, P)
+        cmp_ = pl.plan_broadcast(8 * MB, P, codec=FRAME_FAST)
+        assert cmp_.time < raw.time
+        assert set(cmp_.compressed_tiers) == set(cmp_.tier_bytes)
+        for tier, wire in cmp_.tier_bytes.items():
+            assert wire < cmp_.payload_tier_bytes[tier]
+
+
+@pytest.mark.parametrize("op,kw", [
+    ("plan_broadcast", dict(nbytes=MB, n_hosts=64)),
+    ("plan_allgather", dict(shard_bytes=MB // 64, n_hosts=64)),
+    ("plan_scatter", dict(total_bytes=MB, n_hosts=64)),
+    ("plan_replichain", dict(stripe_bytes=MB // 64, n_hosts=64,
+                             replication=3)),
+    ("plan_point_to_point", dict(nbytes=MB)),
+])
+def test_identity_codec_plans_bit_exact(op, kw):
+    for topo in ("flat", "bgq_torus", "wan_beamline"):
+        pl = planner(topo)
+        a = getattr(pl, op)(**kw)
+        b = getattr(pl, op)(**kw, codec=resolve_codec("none"))
+        assert (a.time, a.tier_bytes, a.algorithm) \
+            == (b.time, b.tier_bytes, b.algorithm)
+        assert b.compressed_tiers == () and b.payload_tier_bytes is None
+
+
+# ---------------------------------------------------------------------------
+# identity-codec regression anchor: every engine, traced and untraced
+# ---------------------------------------------------------------------------
+
+ENGINE_CONFIGS = [
+    CollectiveConfig(topology="wan_beamline"),
+    PipelinedConfig(topology="wan_beamline", chunk_bytes=1 << 14),
+    NaiveConfig(topology="wan_beamline"),
+    ReplicatedConfig(topology="wan_beamline", replication=2),
+    StreamConfig(topology="wan_beamline", rate_hz=50.0),
+    WanStreamConfig(topology="wan_beamline", rate_hz=50.0, loss_rate=0.2,
+                    loss_seed=5),
+]
+
+
+def assert_reports_equal(a, b):
+    for f in fields(a):
+        assert getattr(a, f.name) == getattr(b, f.name), \
+            f"{f.name}: {getattr(a, f.name)!r} != {getattr(b, f.name)!r}"
+
+
+@pytest.mark.parametrize("trace", [False, True], ids=["untraced", "traced"])
+@pytest.mark.parametrize("config", ENGINE_CONFIGS,
+                         ids=lambda c: type(c).__name__)
+def test_identity_codec_engine_anchor(config, trace):
+    f1, _ = make_fabric(n_hosts=8, topology="wan_beamline")
+    f2, _ = make_fabric(n_hosts=8, topology="wan_beamline")
+    r1 = StagingClient(f1, trace=trace).stage("d/*.bin", config)
+    cfg_none = replace(config, compression="none")
+    assert cfg_none.compression == CompressionConfig()
+    r2 = StagingClient(f2, trace=trace).stage("d/*.bin", cfg_none)
+    assert r1.total_time == r2.total_time
+    assert (r1.net_bytes, r1.fs_bytes) == (r2.net_bytes, r2.fs_bytes)
+    assert_reports_equal(r1.reports[0], r2.reports[0])
+    assert r2.bytes_saved == 0 and r2.comp.plans == 0
+    assert r1.accounting_closes() and r2.accounting_closes()
+    for h1, h2 in zip(f1.hosts, f2.hosts):
+        assert set(h1.store.data) == set(h2.store.data)
+        for p in h1.store.data:
+            assert np.array_equal(h1.store.data[p], h2.store.data[p])
+
+
+@pytest.mark.parametrize("trace", [False, True], ids=["untraced", "traced"])
+def test_identity_codec_stage_out_anchor(trace):
+    f1, _ = make_fabric(n_hosts=8)
+    f2, _ = make_fabric(n_hosts=8)
+    if trace:
+        f1.attach_tracer(Tracer())
+        f2.attach_tracer(Tracer())
+    out = {"results/r.bin": np.arange(1 << 12, dtype=np.uint8)}
+    ra, ta = stage_out(f1, out)
+    rb, tb = stage_out(f2, out, compression="none")
+    assert ta == tb
+    assert_reports_equal(ra, rb)
+
+
+def test_traced_compressed_run_matches_untraced_arithmetic():
+    cfg = WanStreamConfig(topology="wan_beamline", rate_hz=50.0,
+                          loss_rate=0.2, loss_seed=5,
+                          compression="frame-lossless")
+    f1, _ = make_fabric(n_hosts=8, topology="wan_beamline")
+    f2, _ = make_fabric(n_hosts=8, topology="wan_beamline")
+    r1 = StagingClient(f1, trace=False).stage("d/*.bin", cfg)
+    client2 = StagingClient(f2, trace=True)
+    r2 = client2.stage("d/*.bin", cfg)
+    assert r1.total_time == r2.total_time
+    assert_reports_equal(r1.reports[0], r2.reports[0])
+    names = {s.name for s in f2.tracer.spans}
+    assert "comp.compress" in names and "comp.decompress" in names
+    assert "compression:" in flight_recorder(f2.tracer)
+
+
+# ---------------------------------------------------------------------------
+# wire vs payload through the engines (satellite: accounting split)
+# ---------------------------------------------------------------------------
+
+def test_wan_engine_wire_bytes_shrink_but_payload_stays():
+    def run(compression):
+        fab, paths = make_fabric(n_hosts=8, n_files=6,
+                                 topology="wan_beamline")
+        rep = StagingClient(fab).stage(
+            "d/*.bin", WanStreamConfig(topology="wan_beamline",
+                                       loss_rate=0.2, loss_seed=5,
+                                       compression=compression))
+        return rep
+
+    raw, cmp_ = run(None), run("frame-lossless")
+    # logical delivery is untouched
+    assert cmp_.total_bytes == raw.total_bytes
+    assert cmp_.delivered_bytes == raw.delivered_bytes
+    # the wan tier shrinks by the codec ratio; cluster tiers stay raw
+    rw, cw = raw.reports[0], cmp_.reports[0]
+    assert cw.tier_bytes["wan"] < rw.tier_bytes["wan"]
+    assert rw.tier_bytes["wan"] == 3.2 * cw.tier_bytes["wan"] \
+        or rw.tier_bytes["wan"] <= 3.2 * cw.tier_bytes["wan"] + 8
+    assert cw.tier_bytes["cluster"] == rw.tier_bytes["cluster"]
+    # reconciliation: wire + saved == the raw wire
+    assert cmp_.payload_net_bytes == raw.net_bytes
+    assert cmp_.bytes_saved == cmp_.comp.saved_bytes > 0
+    assert cmp_.accounting_closes() and raw.accounting_closes()
+    # the WAN-side counter is wire too
+    assert cw.wan.wan_bytes == cw.comp.wire_bytes
+    assert cw.comp.wire_ratio == pytest.approx(3.2, rel=1e-3)
+
+
+def test_collective_engine_compresses_on_degraded_cluster():
+    # healthy 2 GB/s links ship raw; a scheduled brownout makes the
+    # SAME staged dataset ship compressed (and still land byte-exact)
+    def run(faults):
+        sched = FaultSchedule([
+            FaultEvent(t=0.0, kind=FaultKind.LINK_DEGRADE, tier="cluster",
+                       factor=0.5, t_end=1e9)]) if faults else None
+        fab, paths = make_fabric(n_hosts=8, topology="wan_beamline",
+                                 faults=sched)
+        rep, _ = stage_collective(fab, paths, t0=0.0,
+                                  compression="frame-lossless")
+        return rep, fab
+
+    healthy, _ = run(False)
+    brown, fab = run(True)
+    assert healthy.comp.plans == 0 and healthy.comp.saved_bytes == 0
+    assert brown.comp.plans > 0 and brown.comp.saved_bytes > 0
+    assert brown.total_bytes == healthy.total_bytes
+
+
+def test_stream_stager_compression_threads_through_client():
+    fab, _ = make_fabric(n_hosts=8, topology="wan_beamline")
+    stager = StagingClient(fab).stream_stager(
+        StreamConfig(window_bytes=1 << 30, topology="wan_beamline",
+                     compression="frame-lossless"))
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        stager.ingest(f"s/f{i}", rng.integers(0, 255, 1 << 12,
+                                              dtype=np.uint8), float(i))
+    rep = stager.finish()
+    # each frame's detector->leader ingest hop crosses the wan tier and
+    # ships compressed; the single-rack delivery broadcasts stay raw
+    assert rep.comp.plans == 4
+    assert rep.comp.wire_ratio == pytest.approx(3.2, rel=1e-3)
+    assert rep.comp.saved_bytes == rep.comp.payload_bytes \
+        - rep.comp.wire_bytes > 0
+
+
+def test_replicated_engine_identity_and_compressed_paths():
+    f1, p1 = make_fabric(n_hosts=8, topology="bgq_torus")
+    f2, _ = make_fabric(n_hosts=8, topology="bgq_torus")
+    ra, _ = stage_replicated(f1, p1, replication=3)
+    rb, _ = stage_replicated(f2, p1, replication=3,
+                             compression="frame-fast")
+    assert rb.total_bytes == ra.total_bytes
+    assert rb.net_bytes < ra.net_bytes           # torus tier elected
+    assert rb.comp.saved_bytes == ra.net_bytes - rb.net_bytes
